@@ -1,0 +1,51 @@
+"""Paper Figs 9-13 — power-over-time phase decomposition.
+
+Modeled (no power rails on this host): the serving pipeline's phases —
+idle, accelerator-program load (the bitstream-download spike of Fig 13;
+on TPU this is the program + weight upload), input staging, inference,
+idle — with per-phase power from the hardware model. Reported as an
+ASCII timeline + per-phase energy split per space model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.energy import (TPU_V5E, ZCU104_DPU, ZCU104_HLS_NAIVE,
+                               power_trace)
+from repro.models import SPACE_MODELS
+
+BARS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(w: np.ndarray, width: int = 64) -> str:
+    idx = np.linspace(0, len(w) - 1, width).astype(int)
+    s = w[idx]
+    lo, hi = float(s.min()), float(s.max())
+    if hi == lo:
+        return BARS[1] * width
+    q = ((s - lo) / (hi - lo) * (len(BARS) - 1)).astype(int)
+    return "".join(BARS[i] for i in q)
+
+
+def main() -> None:
+    print("== Figs 9-13 analog: modeled power phases (1000 inferences) ==")
+    for name, m in SPACE_MODELS.items():
+        g = m.build_graph()
+        hw = ZCU104_DPU if m.paper_toolchain == "vitis_ai" else ZCU104_HLS_NAIVE
+        n = 10 if name == "baseline_net" else 1000   # paper uses 10 for BaselineNet
+        t, w = power_trace(g, hw, "accel" if m.paper_toolchain == "vitis_ai"
+                           else "flex", n_inferences=n)
+        e = float(np.trapezoid(w, t))
+        print(f"\n{name} ({hw.name}, {n} inferences)")
+        print(f"  {sparkline(w)}")
+        print(f"  span {t[-1]:.2f}s  peak {w.max():.2f}W  min {w.min():.2f}W  "
+              f"E_total {e:.2f}J")
+        # TPU-modeled comparison
+        t2, w2 = power_trace(g, TPU_V5E, "accel", n_inferences=n)
+        e2 = float(np.trapezoid(w2, t2))
+        print(f"  tpu_v5e modeled: span {t2[-1]:.2f}s  peak {w2.max():.0f}W  "
+              f"E_total {e2:.1f}J")
+
+
+if __name__ == "__main__":
+    main()

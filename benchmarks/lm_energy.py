@@ -1,0 +1,54 @@
+"""Paper's E = P x t accounting, applied to the LM serving fleet.
+
+The paper's bottom line is energy per inference on the accelerator; the
+LM-scale analog is energy per generated token (decode) and per prefilled
+request. Step times come from the roofline's dominant term (modeled TPU
+v5e, scan-corrected dry-run artifacts) for BOTH the paper-faithful
+baseline and the optimized (`opt`) configs, so the INT8/serving levers
+show up in joules exactly the way the paper's Table III shows DPU INT8
+residency.
+
+    PYTHONPATH=src python -m benchmarks.lm_energy
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import LEDGER, analyze_cell
+
+CHIP_POWER_BUSY = 170.0       # W per TPU v5e chip (public board figures)
+CHIPS = 256
+
+
+def main() -> None:
+    with open(LEDGER) as f:
+        ledger = json.load(f)
+    from repro.configs import SHAPES_BY_NAME, all_archs, get_arch, shapes_for
+
+    print("== E = P x t for LM serving (modeled TPU v5e, 256 chips) ==")
+    print(f"{'arch':26s} {'shape':12s} {'unit':>14s} "
+          f"{'base mJ':>12s} {'opt mJ':>12s} {'x':>6s}")
+    for arch in all_archs():
+        for shape in shapes_for(get_arch(arch)):
+            if shape.kind == "train":
+                continue
+            b = analyze_cell(ledger, "baseline", arch, shape.name)
+            o = analyze_cell(ledger, "opt", arch, shape.name)
+            if not (b and o):
+                continue
+            spec = SHAPES_BY_NAME[shape.name]
+            if shape.kind == "decode":
+                unit, n = "mJ/token", spec.global_batch
+            else:
+                unit, n = "mJ/request", spec.global_batch
+            e_b = CHIP_POWER_BUSY * CHIPS * b["step_time_s"] / n * 1e3
+            e_o = CHIP_POWER_BUSY * CHIPS * o["step_time_s"] / n * 1e3
+            print(f"{arch:26s} {shape.name:12s} {unit:>14s} "
+                  f"{e_b:12.2f} {e_o:12.2f} {e_b/e_o:6.1f}")
+    print("\n(the same E=P*t the paper measures on the ZCU104 INT rail; "
+          "t = dominant roofline term per step; energy gains mirror the "
+          "paper's INT8-residency result at LM scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the ledger.
+
+    PYTHONPATH=src python -m benchmarks.report            # prints markdown
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import LEDGER, analyze_cell
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(ledger, tag="baseline"):
+    from repro.configs import all_archs, get_arch, shapes_for
+    print(f"\n### Dry-run ledger — tag `{tag}`\n")
+    print("| arch | shape | mesh | status | lower s | compile s | "
+          "arg GiB/dev | temp GiB/dev | coll GB/dev (body x1) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    n_ok = n = 0
+    for arch in all_archs():
+        for shape in shapes_for(get_arch(arch)):
+            for mesh in ("single", "multi"):
+                rec = ledger.get(f"{tag}/{arch}/{shape.name}/{mesh}")
+                if rec is None:
+                    continue
+                n += 1
+                ok = rec.get("status") == "ok"
+                n_ok += ok
+                if not ok:
+                    print(f"| {arch} | {shape.name} | {mesh} | FAIL | | | | | |")
+                    continue
+                m = rec.get("memory", {})
+                print(f"| {arch} | {shape.name} | {mesh} | ok "
+                      f"| {rec.get('lower_s','')} | {rec.get('compile_s','')} "
+                      f"| {_fmt_bytes(m.get('argument_size_in_bytes',0))} "
+                      f"| {_fmt_bytes(m.get('temp_size_in_bytes',0))} "
+                      f"| {rec.get('collectives',{}).get('total',0)/1e9:.2f} |")
+    print(f"\n{n_ok}/{n} cells ok.\n")
+
+
+def roofline_table(ledger, tag="baseline", title=""):
+    from repro.configs import all_archs, get_arch, shapes_for
+    print(f"\n### Roofline — tag `{tag}` {title}\n")
+    print("(per-chip seconds; single-pod 256-chip mesh; scan-corrected)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPS | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in all_archs():
+        for shape in shapes_for(get_arch(arch)):
+            r = analyze_cell(ledger, tag, arch, shape.name)
+            if r is None:
+                continue
+            print(f"| {arch} | {shape.name} | {r['t_compute_s']:.4g} "
+                  f"| {r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} "
+                  f"| {r['dominant']} | {r['model_flops']:.3g} "
+                  f"| {r['useful_ratio']:.2f} "
+                  f"| {r['roofline_frac']*100:.1f}% |")
+    print()
+
+
+def main() -> None:
+    with open(LEDGER) as f:
+        ledger = json.load(f)
+    dryrun_table(ledger, "baseline")
+    roofline_table(ledger, "baseline", "(paper-faithful baseline)")
+    if any(k.startswith("opt/") for k in ledger):
+        dryrun_table(ledger, "opt")
+        roofline_table(ledger, "opt",
+                       "(beyond-paper: a2a EP + explicit SP + serving "
+                       "sharding + w8 + int8-KV)")
+
+
+if __name__ == "__main__":
+    main()

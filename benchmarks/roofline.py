@@ -1,0 +1,212 @@
+"""Roofline analysis — deliverable (g).
+
+Reads benchmarks/dryrun_ledger.json (written by repro.launch.dryrun) and
+derives, per (arch x shape) cell on the single-pod mesh, the three roofline
+terms:
+
+    compute    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory     = HLO_bytes   / (chips x HBM_bw)
+    collective = coll_bytes  / (chips x link_bw)
+
+with the **scan correction**: the models scan layer groups, so the full
+program's cost_analysis counts the scan body once. We combine
+
+    corrected = full + (n_groups - 1) x group_probe
+                (+ (n_tail - 1) x tail_probe for zamba2's tail scan)
+
+where group/tail probes are separate lower+compile records
+(``--granularity group|tail``). All quantities in the ledger are
+*per-device* (post-SPMD partitioning), so terms divide by per-chip peaks.
+
+Also reported: MODEL_FLOPS = 6ND (dense) / 6·N_active·D (MoE) for train
+(2ND fwd-only for prefill, 2·N·1·B for decode), the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/padding waste), the dominant term,
+and a one-line "what would move it" note.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.roofline [--tag baseline] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, Optional
+
+# TPU v5e per-chip constants (assignment-given)
+PEAK_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9              # B/s
+ICI_BW = 50e9               # B/s per link
+CHIPS_SINGLE = 256
+
+LEDGER = os.path.join(os.path.dirname(__file__), "dryrun_ledger.json")
+
+# group layout per arch: (n_groups, n_tail) — must match model.group_layout
+_LAYOUT = None
+
+
+def _layouts() -> Dict[str, tuple]:
+    global _LAYOUT
+    if _LAYOUT is None:
+        from repro.configs import all_archs, get_arch
+        from repro.nn.model import group_layout
+        _LAYOUT = {}
+        for a in all_archs():
+            cfg = get_arch(a)
+            n_groups, _, tail = group_layout(cfg)
+            _LAYOUT[a] = (n_groups, tail)
+    return _LAYOUT
+
+
+def _model_flops(arch: str, shape_name: str) -> float:
+    """Useful model FLOPs for the cell (paper-style accounting)."""
+    from repro.configs import SHAPES_BY_NAME, get_arch
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence + attention reads over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    if cfg.attends:
+        # 2 (QK) + 2 (PV) MACs per cached position per q head per head_dim
+        from repro.nn.dims import compute_dims
+        dims = compute_dims(cfg, tp=16)
+        attn = (4.0 * shape.seq_len * dims.num_heads * dims.head_dim
+                * cfg.num_attn_layers() * shape.global_batch)
+        flops += attn
+    return flops
+
+
+def corrected_cell(ledger: Dict[str, Any], tag: str, arch: str,
+                   shape: str, mesh: str = "single") -> Optional[Dict[str, Any]]:
+    """Scan-corrected per-device flops / bytes / collective bytes."""
+    full = ledger.get(f"{tag}/{arch}/{shape}/{mesh}")
+    if not full or full.get("status") != "ok":
+        return None
+    grp = ledger.get(f"{tag}-group/{arch}/{shape}/{mesh}")
+    tail_rec = ledger.get(f"{tag}-tail/{arch}/{shape}/{mesh}")
+    n_groups, n_tail = _layouts()[arch]
+
+    def field(rec, path, default=0.0):
+        cur = rec
+        for p in path:
+            if cur is None:
+                return default
+            cur = cur.get(p)
+        return default if cur is None else float(cur)
+
+    out = {
+        "flops": field(full, ("cost", "flops")),
+        "bytes": field(full, ("cost", "bytes accessed")),
+        "coll": field(full, ("collectives", "total")),
+        "coll_by_kind": {k: v for k, v in full.get("collectives", {}).items()
+                         if k != "total"},
+        "scan_corrected": False,
+    }
+    if grp and grp.get("status") == "ok":
+        k = n_groups - 1
+        out["flops"] += k * field(grp, ("cost", "flops"))
+        out["bytes"] += k * field(grp, ("cost", "bytes accessed"))
+        out["coll"] += k * field(grp, ("collectives", "total"))
+        for kind, v in grp.get("collectives", {}).items():
+            if kind != "total":
+                out["coll_by_kind"][kind] = (
+                    out["coll_by_kind"].get(kind, 0.0) + k * float(v))
+        out["scan_corrected"] = True
+    if tail_rec and tail_rec.get("status") == "ok" and n_tail > 1:
+        k = n_tail - 1
+        out["flops"] += k * field(tail_rec, ("cost", "flops"))
+        out["bytes"] += k * field(tail_rec, ("cost", "bytes accessed"))
+        out["coll"] += k * field(tail_rec, ("collectives", "total"))
+    out["memory"] = dict(full.get("memory", {}))
+    return out
+
+
+def analyze_cell(ledger, tag, arch, shape, mesh="single") -> Optional[Dict]:
+    c = corrected_cell(ledger, tag, arch, shape, mesh)
+    if c is None:
+        return None
+    # ledger values are per-device; terms are per-chip seconds
+    t_comp = c["flops"] / PEAK_BF16
+    t_mem = c["bytes"] / HBM_BW
+    t_coll = c["coll"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    mf = _model_flops(arch, shape)
+    chips = CHIPS_SINGLE
+    hlo_global = c["flops"] * chips
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else float("nan"),
+        # roofline fraction: useful-compute time over the bounding term
+        "roofline_frac": (mf / chips / PEAK_BF16) / total if total else 0.0,
+        "step_time_s": total,
+        "scan_corrected": c["scan_corrected"],
+        "coll_by_kind": c["coll_by_kind"],
+        "arg_bytes_dev": c["memory"].get("argument_size_in_bytes", 0),
+        "temp_bytes_dev": c["memory"].get("temp_size_in_bytes", 0),
+    }
+
+
+MOVE_NOTES = {
+    "compute": "compute-bound: raise MXU utilization (larger per-chip tiles, "
+               "less remat recompute, int8/bf16 mixed precision)",
+    "memory": "HBM-bound: cut activation traffic (fusion, flash attention, "
+              "smaller remat policy) or cast residuals to bf16",
+    "collective": "ICI-bound: reshard to cut all-gathers (2D sharding, "
+                  "overlap collectives with compute, gradient compression)",
+}
+
+
+def run(tag: str = "baseline", md: bool = False, mesh: str = "single"):
+    with open(LEDGER) as f:
+        ledger = json.load(f)
+    from repro.configs import all_archs, get_arch, shapes_for
+    rows = []
+    for arch in all_archs():
+        for shape in shapes_for(get_arch(arch)):
+            r = analyze_cell(ledger, tag, arch, shape.name, mesh)
+            if r:
+                rows.append(r)
+    if md:
+        print(f"| arch | shape | compute s | memory s | collective s | "
+              f"dominant | MODEL_FLOPS | useful | roofline |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+                  f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+                  f"{r['dominant']} | {r['model_flops']:.3g} | "
+                  f"{r['useful_ratio']:.2f} | {r['roofline_frac']*100:.1f}% |")
+    else:
+        hdr = (f"{'arch':26s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+               f"{'coll_s':>9s} {'dom':>10s} {'useful':>7s} {'roofl':>7s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+                  f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+                  f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+                  f"{r['roofline_frac']*100:6.1f}%")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    run(args.tag, args.md, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

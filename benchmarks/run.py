@@ -1,0 +1,66 @@
+"""Benchmark driver — one section per paper table / figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ["table1", "table2", "table3", "table45", "fig_power", "roofline",
+            "lm_energy"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-list of {SECTIONS}")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else SECTIONS
+
+    t0 = time.time()
+    if "table1" in wanted:
+        from benchmarks import table1_model_stats
+        table1_model_stats.main()
+        print()
+    if "table2" in wanted:
+        from benchmarks import table2_footprint
+        table2_footprint.main()
+        print()
+    if "table3" in wanted:
+        from benchmarks import table3_performance
+        table3_performance.main()
+        print()
+    if "table45" in wanted:
+        from benchmarks import table45_context
+        table45_context.main()
+        print()
+    if "fig_power" in wanted:
+        from benchmarks import fig_power_phases
+        fig_power_phases.main()
+        print()
+    if "roofline" in wanted:
+        from benchmarks import roofline
+        print("== Roofline (3 terms per arch x shape, single-pod 256 chips, "
+              "scan-corrected) ==")
+        try:
+            roofline.run()
+        except FileNotFoundError:
+            print("no dryrun_ledger.json — run "
+                  "`PYTHONPATH=src python -m repro.launch.dryrun` first",
+                  file=sys.stderr)
+        print()
+    if "lm_energy" in wanted:
+        from benchmarks import lm_energy
+        try:
+            lm_energy.main()
+        except FileNotFoundError:
+            print("no dryrun ledger — skipping lm_energy", file=sys.stderr)
+        print()
+    print(f"benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table II — accelerator resource footprint.
+
+The ZCU104 columns (LUT/FF/DSP/BRAM) do not exist on TPU; the transferable
+quantity is **on-chip weight residency**: the paper stores all HLS weights
+in BRAM when they fit (<=4.75 MB) and spills BaselineNet to DRAM, while the
+DPU holds ~3.92 MB of parameters in BRAM+URAM. Our analog is VMEM
+residency of the INT8 (accel) / fp32 (flex) weights against the TPU v5e
+VMEM budget, plus the inspector's op-coverage verdict — the two quantities
+that decide which path a model takes and whether it pays HBM traffic
+per inference.
+"""
+from __future__ import annotations
+
+from repro.core.energy import TPU_V5E, ZCU104_DPU
+from repro.core.inspector import inspect
+from repro.models import SPACE_MODELS
+
+
+def rows():
+    out = []
+    for name, m in SPACE_MODELS.items():
+        g = m.build_graph()
+        rep = inspect(g)
+        int8_bytes = g.n_params           # 1 B/param + scales (negligible)
+        fp32_bytes = g.n_params * 4
+        out.append({
+            "model": name,
+            "paper_toolchain": m.paper_toolchain,
+            "int8_bytes": int8_bytes,
+            "fp32_bytes": fp32_bytes,
+            "vmem_resident_int8": int8_bytes <= TPU_V5E.onchip_bytes,
+            "vmem_resident_fp32": fp32_bytes <= TPU_V5E.onchip_bytes,
+            "bram_resident_fp32": fp32_bytes <= ZCU104_DPU.onchip_bytes,
+            "accel_coverage": rep.mac_coverage,
+            "fully_supported": rep.fully_supported,
+            "unsupported": sorted(set(rep.unsupported)),
+        })
+    return out
+
+
+def main() -> None:
+    print("== Table II analog: weight footprint & residency ==")
+    print(f"{'model':18s} {'int8':>9s} {'fp32':>10s} "
+          f"{'VMEM(int8)':>10s} {'BRAM(fp32)':>10s} {'accel%':>7s}  notes")
+    for r in rows():
+        note = "full accel" if r["fully_supported"] else \
+            f"flex ops: {','.join(r['unsupported'])}"
+        print(f"{r['model']:18s} {r['int8_bytes']:9d} {r['fp32_bytes']:10d} "
+              f"{'yes' if r['vmem_resident_int8'] else 'SPILL':>10s} "
+              f"{'yes' if r['bram_resident_fp32'] else 'SPILL':>10s} "
+              f"{r['accel_coverage']*100:6.1f}%  {note}")
+    print("\npaper cross-check: BaselineNet fp32 (3.7 MB) close to the "
+          "4.75 MB BRAM budget -> the paper spills it to DRAM (0.01x row); "
+          "our energy model charges it HBM traffic the same way.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing: atomic commit, async writes, auto-resume.
+
+Layout (one directory per step)::
+
+    ckpt_dir/
+      step_000120/
+        arrays.npz          # flattened pytree leaves (addressable shards)
+        treedef.json        # structure + leaf names
+        COMMITTED           # sentinel written LAST -> atomic commit
+
+A checkpoint is valid iff COMMITTED exists; partially-written directories
+(host died mid-save) are ignored by :func:`latest_step` and garbage-collected
+by :func:`cleanup`. The async writer runs in a daemon thread so the train
+loop never blocks on disk; ``wait()`` joins before the next save or exit.
+
+On multi-host deployments each process saves its addressable shards into
+``arrays.<process>.npz`` — restore re-assembles per-host. (Single-process
+here, but the naming/commit protocol is the production one.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+COMMITTED = "COMMITTED"
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:09d}")
+
+
+def _flatten_with_names(tree) -> Tuple[list, list]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, process: int = 0) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    d = _step_dir(ckpt_dir, step)
+    os.makedirs(d, exist_ok=True)
+    names, leaves = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = {}
+    for name, leaf in zip(names, leaves):
+        x = np.asarray(jax.device_get(leaf))
+        dtypes[name] = str(x.dtype)
+        if x.dtype.name == "bfloat16":  # npz has no bf16 — store raw bits
+            x = x.view(np.uint16)
+        arrays[name] = x
+    np.savez(os.path.join(d, f"arrays.{process}.npz"), **arrays)
+    treedef = {"names": names, "step": step, "dtypes": dtypes}
+    with open(os.path.join(d, "treedef.json"), "w") as f:
+        json.dump(treedef, f)
+    # commit LAST — readers only trust committed checkpoints
+    with open(os.path.join(d, COMMITTED), "w") as f:
+        f.write("ok")
+    return d
+
+
+def restore(ckpt_dir: str, step: int, like: Any, *, process: int = 0) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    d = _step_dir(ckpt_dir, step)
+    if not os.path.exists(os.path.join(d, COMMITTED)):
+        raise FileNotFoundError(f"checkpoint at step {step} not committed: {d}")
+    data = np.load(os.path.join(d, f"arrays.{process}.npz"))
+    with open(os.path.join(d, "treedef.json")) as f:
+        meta = json.load(f)
+    saved_dtypes = meta.get("dtypes", {})
+    names, leaves = _flatten_with_names(like)
+    treedef = jax.tree.structure(like)
+    out = []
+    for name, leaf in zip(names, leaves):
+        arr = data[name]
+        if saved_dtypes.get(name) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        dtype = getattr(leaf, "dtype", arr.dtype)
+        out.append(jax.numpy.asarray(arr, dtype=dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, COMMITTED)):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def cleanup(ckpt_dir: str, keep: int = 3) -> None:
+    """Drop uncommitted wreckage and all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    committed, junk = [], []
+    for name in sorted(os.listdir(ckpt_dir)):
+        if not name.startswith("step_"):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        (committed if os.path.exists(os.path.join(path, COMMITTED)) else junk
+         ).append(path)
+    for path in junk + committed[:-keep if keep else None]:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Non-blocking saver: snapshot to host memory synchronously, write to
+    disk in a daemon thread. One in-flight save at a time (back-pressure)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: list = []
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        # device->host copy happens NOW so training can mutate the arrays
+        names, leaves = _flatten_with_names(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        snapshot = jax.tree.unflatten(jax.tree.structure(tree), host)
+
+        def work():
+            save(self.ckpt_dir, step, snapshot)
+            cleanup(self.ckpt_dir, self.keep)
+            self.saved_steps.append(step)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

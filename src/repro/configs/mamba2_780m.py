@@ -1,0 +1,17 @@
+"""mamba2-780m — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    arch_id="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4),
+    subquadratic=True,
+    tie_embeddings=True,
+    notes="pure Mamba2 stack; runs the long_500k cell (O(1)-state decode)",
+))

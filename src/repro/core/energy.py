@@ -1,0 +1,211 @@
+"""Energy / power / throughput model — the paper's E = P x t, on TPU terms.
+
+The paper measures the ZCU104's 12 V rail (board) and INT rail (MPSoC) and
+reports per-inference energy. This container has no power rails, so we do
+both of what's honest:
+
+* **measured-host** numbers: wall-clock latency of the cpu/flex/accel
+  backends on THIS host. Speedups and *relative* energy ratios reproduce
+  the paper's Table III structure (CPU 1x baseline).
+* **modeled-TPU** numbers: an analytic roofline-style model with public
+  TPU v5e constants. Per op: t = max(FLOPs/peak, bytes/HBM_bw);
+  E = P_busy * t + leakage share. Weight residency mirrors the paper's
+  BRAM policy — params that fit the VMEM budget are charged HBM traffic
+  once (first load), spilled params are charged per inference
+  (the BaselineNet effect in the paper's Table III).
+
+Both are reported side by side in benchmarks/table3_performance.py and are
+never conflated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.opgraph import Graph
+
+# ---------------------------------------------------------------------------
+# Hardware models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    peak_flops_f32: float
+    peak_flops_bf16: float
+    peak_ops_int8: float
+    hbm_bw: float                  # bytes/s
+    onchip_bytes: float            # VMEM budget for weight residency
+    power_busy: float              # W during compute
+    power_idle: float              # W static
+    ici_bw: float = 0.0            # per-link bytes/s
+    util: float = 1.0              # achievable fraction of peak compute
+    overhead_s: float = 0.0        # fixed per-inference overhead (staging)
+
+
+# Public TPU v5e figures: 197 TFLOP/s bf16 / 394 TOP/s int8, 819 GB/s HBM,
+# ~50 GB/s/link ICI (assignment constants). fp32 on the MXU runs at ~1/4
+# bf16 rate. VMEM ~64 MiB; chip power ~170 W busy / ~60 W idle (board-level
+# figures from public v5e efficiency reports; used consistently, only
+# ratios matter for the Table III reproduction).
+TPU_V5E = HardwareModel(
+    name="tpu_v5e",
+    peak_flops_f32=197e12 / 4,
+    peak_flops_bf16=197e12,
+    peak_ops_int8=394e12,
+    hbm_bw=819e9,
+    onchip_bytes=64 * 2**20,
+    power_busy=170.0,
+    power_idle=60.0,
+    ici_bw=50e9,
+)
+
+# The paper's ZCU104 (for cross-checking our model against their CPU/DPU
+# measurements): A53 CPU ~ 6 GFLOP/s fp32; DPU B4096 @300 MHz = 1.2 TOP/s
+# int8; DDR4 ~19.2 GB/s; BRAM+URAM ~ 4.75 MB; PS ~2-2.75 W, DPU adds ~4 W.
+ZCU104_CPU = HardwareModel(
+    name="zcu104_arm_a53",
+    peak_flops_f32=6e9, peak_flops_bf16=6e9, peak_ops_int8=12e9,
+    hbm_bw=19.2e9, onchip_bytes=1 * 2**20,
+    power_busy=2.75, power_idle=2.0)
+ZCU104_DPU = HardwareModel(
+    name="zcu104_dpu_b4096",
+    peak_flops_f32=0.1e12, peak_flops_bf16=0.1e12, peak_ops_int8=1.2e12,
+    hbm_bw=19.2e9, onchip_bytes=4.75 * 2**20,
+    power_busy=6.75, power_idle=5.0,
+    # Paper Table III implies the DPU sustains 4-13% of its 1.2 TOP/s peak
+    # on these small CNNs (50.6 / 150.1 GOP/s measured); 0.125 calibrated
+    # to CNetPlusScalar, the DPU-friendliest workload.
+    util=0.125, overhead_s=2e-4)
+
+# The paper's *naive* HLS designs (no perf pragmas): each layer maps to a
+# sequential 100 MHz dataflow stage; Table III's HLS rows imply ~15-25
+# effective MOP/s plus ~27 us of AXI staging per inference. This model
+# reproduces all four HLS rows within ~35% (see table3 cross-check).
+ZCU104_HLS_NAIVE = HardwareModel(
+    name="zcu104_hls_naive",
+    peak_flops_f32=20e6, peak_flops_bf16=20e6, peak_ops_int8=20e6,
+    hbm_bw=19.2e9, onchip_bytes=4.75 * 2**20,
+    power_busy=1.75, power_idle=1.5,
+    util=1.0, overhead_s=27e-6)
+
+
+# ---------------------------------------------------------------------------
+# Per-graph energy model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    hw: str
+    backend: str
+    latency_s: float
+    energy_j: float
+    fps: float
+    mops: float                     # throughput in MOP/s (paper's metric)
+    weights_resident: bool
+    bound: str                      # 'compute' | 'memory'
+
+    def row(self) -> str:
+        return (f"{self.hw:14s} {self.backend:6s} "
+                f"lat={self.latency_s*1e3:8.3f} ms  fps={self.fps:10.1f}  "
+                f"thr={self.mops:12.1f} MOP/s  E={self.energy_j*1e3:9.4f} mJ  "
+                f"bound={self.bound}")
+
+
+def _dtype_bytes(backend: str) -> int:
+    return 1 if backend == "accel" else 4
+
+
+def _peak(hw: HardwareModel, backend: str) -> float:
+    if backend == "accel":
+        return hw.peak_ops_int8
+    return hw.peak_flops_f32
+
+
+def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
+                batch: int = 1) -> EnergyReport:
+    """Analytic latency/energy for one inference (batch amortizes weights)."""
+    db = _dtype_bytes(backend)
+    param_bytes = graph.n_params * db
+    resident = param_bytes <= hw.onchip_bytes
+
+    compute_t = 0.0
+    memory_t = 0.0
+    peak = _peak(hw, backend)
+    for node in graph.nodes.values():
+        if node.op == "input":
+            continue
+        compute_t += node.ops * batch / peak
+        act_bytes = 1
+        if node.out_shape:
+            n = 1
+            for d in node.out_shape:
+                n *= d
+            act_bytes = n * 4  # activations stay fp32 on the wire
+        w_bytes = 0 if resident else node.param_count * db
+        memory_t += (act_bytes * batch + w_bytes * batch) / hw.hbm_bw
+    # non-resident weights stream once per inference; resident ones are
+    # loaded once and amortized away (steady-state serving)
+    compute_t /= hw.util
+    latency = max(compute_t, memory_t) + hw.overhead_s * batch
+    bound = "compute" if compute_t >= memory_t else "memory"
+    energy = hw.power_busy * latency
+    return EnergyReport(
+        hw=hw.name, backend=backend,
+        latency_s=latency / batch,
+        energy_j=energy / batch,
+        fps=batch / latency,
+        mops=graph.n_ops * batch / latency / 1e6,
+        weights_resident=resident,
+        bound=bound,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Measured-host accounting (relative Table III reproduction)
+# ---------------------------------------------------------------------------
+
+HOST_POWER_BUSY = 65.0     # nominal W for this host CPU — only ratios used
+
+
+def measured_report(name: str, backend: str, latency_s: float,
+                    n_ops: int) -> EnergyReport:
+    return EnergyReport(
+        hw="host", backend=backend,
+        latency_s=latency_s,
+        energy_j=HOST_POWER_BUSY * latency_s,
+        fps=1.0 / latency_s if latency_s > 0 else float("inf"),
+        mops=n_ops / latency_s / 1e6 if latency_s > 0 else float("inf"),
+        weights_resident=True,
+        bound="measured",
+    )
+
+
+def power_trace(graph: Graph, hw: HardwareModel, backend: str,
+                n_inferences: int = 1000, dt: float = 1e-3):
+    """Modeled power-over-time for the serving phases (paper Figs 9-13):
+    idle -> configure (bitstream analog: program load spike) -> staging ->
+    inference -> idle. Returns (times, watts)."""
+    import numpy as np
+    rep = model_graph(graph, hw, backend)
+    t_cfg = 0.5                        # program/bitstream load
+    t_stage = 0.2
+    t_inf = rep.latency_s * n_inferences
+    seq = [
+        (0.5, hw.power_idle),
+        (t_cfg, hw.power_busy * 1.15),          # config spike (paper Fig 13)
+        (t_stage, hw.power_idle + 0.3 * (hw.power_busy - hw.power_idle)),
+        (t_inf, hw.power_busy),
+        (0.5, hw.power_idle),
+    ]
+    times, watts = [], []
+    t = 0.0
+    for dur, p in seq:
+        n = max(int(dur / dt), 1)
+        for i in range(n):
+            times.append(t)
+            watts.append(p)
+            t += dt
+    return np.asarray(times), np.asarray(watts)

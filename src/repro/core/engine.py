@@ -1,0 +1,248 @@
+"""Dual-backend inference engine — the paper's toolchain trade-off as code.
+
+Three execution backends for an op graph (DESIGN.md §2):
+
+* ``cpu``   — the ARM-CPU baseline analog: pure-jnp ops, ``jax.disable_jit``
+              at call time, fp32. Slow on purpose; it is the measured "1x".
+* ``flex``  — the Vitis-HLS analog: the same fp32 math, jit-compiled by
+              XLA. Supports *every* operator (sigmoid, 3-D conv/pool,
+              comparators, sampling) at IEEE-754 fp32 — the paper's
+              "numerical fidelity <= 1e-10" property is tested against cpu.
+* ``accel`` — the Vitis-AI/DPU analog: INT8 PTQ weights, Pallas MXU kernels
+              for conv2d (im2col) and dense, fused ReLU epilogues; only a
+              restricted operator set (core/inspector.py). Models with
+              unsupported ops are *partitioned*: supported segments run
+              accel, the rest falls back to flex — exactly the paper's
+              VAE-tail (sampling/exp on CPU) arrangement.
+
+Weight residency mirrors the paper's BRAM policy: quantized weights are
+device-resident arrays (VMEM residency on real TPU is the kernels' block
+lifetime); the energy model charges HBM traffic for anything that spills.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import inspector as inspector_mod
+from repro.core.opgraph import Graph, Node
+from repro.core.quantize import QuantizedLayer
+from repro.kernels import ops as kops
+
+# ---------------------------------------------------------------------------
+# fp32 op implementations (cpu + flex backends)
+# ---------------------------------------------------------------------------
+
+
+def _conv2d_xla(x, p, a):
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), p["w"].astype(jnp.float32),
+        window_strides=(a.get("stride", 1),) * 2,
+        padding=a.get("padding", "SAME"),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return out + p["b"]
+
+
+def _conv3d_xla(x, p, a):
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), p["w"].astype(jnp.float32),
+        window_strides=(a.get("stride", 1),) * 3,
+        padding=a.get("padding", "SAME"),
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))[0]
+    return out + p["b"]
+
+
+def _pool(x, a, ndim, op):
+    k, s = a["kernel"], a.get("stride", a["kernel"])
+    window = (k,) * ndim + (1,)
+    strides = (s,) * ndim + (1,)
+    if op == "max":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, strides,
+                                     "VALID")
+    out = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, strides, "VALID")
+    return out / (k ** ndim)
+
+
+OP_IMPLS: Dict[str, Callable] = {
+    "conv2d": lambda x, p, a, rng: _conv2d_xla(x[0], p, a),
+    "conv3d": lambda x, p, a, rng: _conv3d_xla(x[0], p, a),
+    "maxpool2d": lambda x, p, a, rng: _pool(x[0], a, 2, "max"),
+    "avgpool2d": lambda x, p, a, rng: _pool(x[0], a, 2, "avg"),
+    "maxpool3d": lambda x, p, a, rng: _pool(x[0], a, 3, "max"),
+    "avgpool3d": lambda x, p, a, rng: _pool(x[0], a, 3, "avg"),
+    "dense": lambda x, p, a, rng: x[0].reshape(-1) @ p["w"] +
+    (p["b"] if "b" in p else 0.0),
+    "flatten": lambda x, p, a, rng: x[0].reshape(-1),
+    "relu": lambda x, p, a, rng: jnp.maximum(x[0], 0.0),
+    "leaky_relu": lambda x, p, a, rng: jnp.where(
+        x[0] > 0, x[0], a.get("alpha", 0.01) * x[0]),
+    "sigmoid": lambda x, p, a, rng: jax.nn.sigmoid(x[0]),
+    "tanh": lambda x, p, a, rng: jnp.tanh(x[0]),
+    "softplus": lambda x, p, a, rng: jax.nn.softplus(x[0]),
+    "exp": lambda x, p, a, rng: jnp.exp(x[0]),
+    "concat": lambda x, p, a, rng: jnp.concatenate(x, axis=a.get("axis", -1)),
+    "add": lambda x, p, a, rng: x[0] + x[1],
+    "sub": lambda x, p, a, rng: x[0] - x[1],
+    "mul": lambda x, p, a, rng: x[0] * x[1],
+    "greater": lambda x, p, a, rng: (x[0] > a["threshold"]).astype(jnp.float32),
+    "sample_normal": lambda x, p, a, rng: x[0] + jnp.exp(0.5 * x[1])
+    * jax.random.normal(rng, x[0].shape),
+    "argmax": lambda x, p, a, rng: jnp.argmax(x[0]).astype(jnp.int32),
+}
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EnginePlan:
+    graph: Graph
+    assignment: Dict[str, str]          # node -> 'accel' | 'flex'
+    coverage: float                     # fraction of MACs on the accel path
+
+
+class Engine:
+    """Executes an op graph on a chosen backend (or a partitioned mix)."""
+
+    def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]]):
+        self.graph = graph
+        self.params = params
+        self._quant: Optional[Dict[str, QuantizedLayer]] = None
+        self._calib: Dict[str, float] = {}
+
+    # -- planning (paper: run the inspector, then choose the toolchain) -----
+
+    def plan(self) -> EnginePlan:
+        assignment = inspector_mod.assign_backends(self.graph)
+        macs = self.graph.n_macs or 1
+        accel_macs = sum(n.macs for n in self.graph.nodes.values()
+                         if assignment[n.name] == "accel")
+        return EnginePlan(self.graph, assignment, accel_macs / macs)
+
+    # -- PTQ ----------------------------------------------------------------
+
+    def calibrate(self, sample_inputs: List[Dict[str, np.ndarray]]) -> None:
+        """Post-training quantization: record per-node activation absmax over
+        a calibration set, then quantize weights per-output-channel."""
+        from repro.core.quantize import calibrate_graph, quantize_weights
+        self._calib = calibrate_graph(self, sample_inputs)
+        self._quant = quantize_weights(self.graph, self.params)
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, inputs: Dict[str, jax.Array], backend: str = "flex",
+            rng: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+        """Single-sample execution (the paper measures per-inference)."""
+        if backend == "cpu":
+            with jax.disable_jit():
+                return self._execute(inputs, "flex",
+                                     rng if rng is not None
+                                     else jax.random.PRNGKey(0))
+        if backend in ("flex", "accel"):
+            return self._execute_jit(inputs, backend,
+                                     rng if rng is not None
+                                     else jax.random.PRNGKey(0))
+        raise ValueError(backend)
+
+    @functools.lru_cache(maxsize=8)
+    def _jitted(self, backend: str):
+        def f(inputs, rng):
+            return self._execute(inputs, backend, rng)
+        return jax.jit(f)
+
+    def _execute_jit(self, inputs, backend, rng):
+        return self._jitted(backend)(inputs, rng)
+
+    def _execute(self, inputs: Dict[str, jax.Array], backend: str,
+                 rng: Optional[jax.Array]) -> Dict[str, jax.Array]:
+        if backend == "accel" and self._quant is None:
+            raise RuntimeError("accel backend needs calibrate() first (PTQ)")
+        assignment = (inspector_mod.assign_backends(self.graph)
+                      if backend == "accel" else None)
+        vals: Dict[str, jax.Array] = {}
+        for name, shape in self.graph.graph_inputs.items():
+            x = jnp.asarray(inputs[name], jnp.float32)
+            assert x.shape == shape, (name, x.shape, shape)
+            vals[name] = x
+        for name in self.graph.order:
+            node = self.graph.nodes[name]
+            if node.op == "input":
+                continue
+            xs = [vals[i] for i in node.inputs]
+            p = self.params.get(name, {})
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            else:
+                sub = jax.random.PRNGKey(0)
+            if backend == "accel" and assignment[name] == "accel" \
+                    and name in (self._quant or {}):
+                vals[name] = self._run_quantized(node, xs)
+            else:
+                vals[name] = OP_IMPLS[node.op](xs, p, node.attrs, sub)
+        return {o: vals[o] for o in self.graph.outputs}
+
+    def _run_quantized(self, node: Node, xs) -> jax.Array:
+        """INT8 path: quantize activation per-tensor, run the Pallas MXU
+        kernel, dequant in the fused epilogue."""
+        q = self._quant[node.name]
+        x = xs[0]
+        if node.op == "dense":
+            xf = x.reshape(1, -1)
+        else:  # conv2d via im2col
+            xf, out_spatial = _im2col(x, node.attrs, q.w_q.shape)
+        xs_scale = jnp.max(jnp.abs(xf), axis=1) / 127.0 + 1e-12
+        x_q = jnp.clip(jnp.round(xf / xs_scale[:, None]), -127, 127
+                       ).astype(jnp.int8)
+        m, k = x_q.shape
+        n = q.w_q.shape[1]
+        bm = _pick_block(m)
+        bk = _pick_block(k)
+        bn = _pick_block(n)
+        out = kops.int8_matmul(x_q, q.w_q, xs_scale, q.w_scale, q.bias,
+                               relu=bool(node.attrs.get("fused_relu")),
+                               bm=bm, bn=bn, bk=bk)
+        if node.op == "dense":
+            return out.reshape(-1)
+        return out.reshape(*out_spatial, n)
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (MXU-aligned when possible)."""
+    if n % target == 0:
+        return target
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _im2col(x: jax.Array, attrs: dict, wq_shape) -> tuple:
+    """[H,W,Cin] -> patch matrix [Ho*Wo, KH*KW*Cin] (+ out spatial dims)."""
+    kh, kw = attrs["kernel"]
+    stride = attrs.get("stride", 1)
+    pad = attrs.get("padding", "SAME")
+    h, w, cin = x.shape
+    if pad == "SAME":
+        ho, wo = -(-h // stride), -(-w // stride)
+        ph = max((ho - 1) * stride + kh - h, 0)
+        pw = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
+                        (0, 0)))
+    else:
+        ho, wo = (h - kh) // stride + 1, (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(x, (i, j, 0),
+                               (i + (ho - 1) * stride + 1,
+                                j + (wo - 1) * stride + 1, cin),
+                               (stride, stride, 1))
+            cols.append(sl.reshape(ho * wo, cin))
+    return jnp.concatenate(cols, axis=1), (ho, wo)

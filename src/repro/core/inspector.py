@@ -1,0 +1,96 @@
+"""Operator-coverage inspector — the Vitis-AI 'inspector' analog.
+
+The paper's workflow: *"run the inspector to verify that all layers are
+supported"* before committing a model to the DPU; unsupported models
+(ESPERTA's sigmoid/greater, MMS's 3-D conv/pool) go to HLS instead. Here
+the same decision is per-*node*: nodes whose op is in ACCEL_SUPPORTED run
+the INT8 Pallas path, everything else runs the flexible fp32 path — with
+segment analysis so partial offload (the paper's VAE sampling/exp tail on
+CPU) falls out naturally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.opgraph import Graph
+
+# The DPU-analog op table. Deliberately restrictive, mirroring DPUCZDX8G:
+# CNN ops + ReLU only — no sigmoid/tanh/softplus, no comparators, no 3-D
+# layers, no sampling, no exp. (INT8 MXU kernels exist for conv2d/dense.)
+ACCEL_SUPPORTED = {
+    "conv2d", "dense", "relu", "maxpool2d", "avgpool2d", "flatten",
+    "concat", "add",
+}
+
+# Ops the accel path *executes quantized* (the rest of ACCEL_SUPPORTED are
+# structural / fused into epilogues).
+ACCEL_QUANTIZED = {"conv2d", "dense"}
+
+
+@dataclasses.dataclass
+class InspectionReport:
+    graph_name: str
+    supported: List[str]
+    unsupported: List[str]
+    fully_supported: bool
+    mac_coverage: float             # fraction of MACs accel can take
+    segments: List[dict]            # contiguous backend runs, in order
+
+    def summary(self) -> str:
+        status = "ACCEL (fully supported)" if self.fully_supported else \
+            f"PARTIAL ({self.mac_coverage:.1%} of MACs on accel)"
+        lines = [f"{self.graph_name}: {status}"]
+        if self.unsupported:
+            lines.append(f"  unsupported ops: "
+                         f"{sorted(set(self.unsupported))}")
+        for seg in self.segments:
+            lines.append(f"  [{seg['backend']:5s}] {seg['first']} .. "
+                         f"{seg['last']} ({seg['n']} nodes)")
+        return "\n".join(lines)
+
+
+def assign_backends(graph: Graph) -> Dict[str, str]:
+    out = {}
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op == "input":
+            out[name] = "accel"
+            continue
+        out[name] = "accel" if node.op in ACCEL_SUPPORTED else "flex"
+    return out
+
+
+def inspect(graph: Graph) -> InspectionReport:
+    assignment = assign_backends(graph)
+    supported, unsupported = [], []
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op == "input":
+            continue
+        (supported if assignment[name] == "accel" else unsupported
+         ).append(node.op)
+    macs = graph.n_macs or 1
+    accel_macs = sum(n.macs for n in graph.nodes.values()
+                     if assignment[n.name] == "accel")
+
+    segments = []
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op == "input":
+            continue
+        b = assignment[name]
+        if segments and segments[-1]["backend"] == b:
+            segments[-1]["last"] = name
+            segments[-1]["n"] += 1
+        else:
+            segments.append({"backend": b, "first": name, "last": name,
+                             "n": 1})
+    return InspectionReport(
+        graph_name=graph.name,
+        supported=supported,
+        unsupported=unsupported,
+        fully_supported=not unsupported,
+        mac_coverage=accel_macs / macs,
+        segments=segments,
+    )

@@ -1,0 +1,99 @@
+"""PTQ for the LM serving path — the paper's INT8 lever, beyond-paper.
+
+The paper quantizes CNN weights to INT8 for DPU residency; the LM-decode
+analog quantizes (a) the model weights (w8a16: int8 storage, bf16 math —
+halves the dominant weight-read traffic of the memory-bound decode step)
+and (b) the KV cache (int8 + per-token-head scales — halves the other
+half). §Perf iterations B1/B2 measure both on yi-34b decode_32k.
+
+Weights use per-tensor symmetric scales (scalar — serving-grade PTQ;
+per-channel is core/quantize.py's job for the space CNNs). The pytree
+mirrors the bf16 param tree, so the same logical-axis sharding rules apply
+leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# quantize leaves with at least this many elements (skip norms, biases)
+MIN_QUANT_SIZE = 65_536
+
+
+def _is_leaf_struct(x) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def should_quantize(leaf) -> bool:
+    return (len(leaf.shape) >= 2 and
+            math.prod(leaf.shape) >= MIN_QUANT_SIZE and
+            leaf.dtype in (jnp.bfloat16, jnp.float32))
+
+
+class QTensor(Dict):
+    """{'q': int8 array, 's': f32 scalar scale} — a dict so pytree-native."""
+
+
+def quantize_params(params) -> Any:
+    """bf16 param tree -> tree with big leaves replaced by {'q','s'}."""
+    def one(leaf):
+        if not should_quantize(leaf):
+            return leaf
+        xf = leaf.astype(jnp.float32)
+        s = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+        return {"q": q, "s": s}
+    return jax.tree.map(one, params)
+
+
+def abstract_quantized(params_abs) -> Any:
+    def one(leaf):
+        if not should_quantize(leaf):
+            return leaf
+        return {"q": jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct((), jnp.float32)}
+    return jax.tree.map(one, params_abs, is_leaf=_is_leaf_struct)
+
+
+def quantized_axes(params_abs, p_axes) -> Any:
+    """Logical axes for the quantized tree (q inherits, s is replicated)."""
+    from repro.parallel.sharding import is_logical_leaf
+
+    def one(axes, leaf):
+        if not should_quantize(leaf):
+            return axes
+        return {"q": axes, "s": ()}
+    return jax.tree.map(one, p_axes, params_abs, is_leaf=is_logical_leaf)
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16) -> Any:
+    """Reconstruct the model-dtype tree (XLA fuses the convert into the
+    consuming dot on TPU; HBM reads stay 1 B/element)."""
+    def is_qt(x):
+        return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+    def one(x):
+        if is_qt(x):
+            return (x["q"].astype(jnp.float32) * x["s"]).astype(dtype)
+        return x
+    return jax.tree.map(one, qparams, is_leaf=is_qt)
+
+
+# ---------------------------------------------------------------------------
+# INT8 KV cache (B2): cache int8 codes + per-(batch, pos, head) scales
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, H, hd] -> (int8 codes, f32 scales [B, S, H])."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)

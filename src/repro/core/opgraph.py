@@ -1,0 +1,182 @@
+"""Layer-graph IR for the space use-case networks.
+
+The paper's workflow is graph-centric: Netron to visualize, the Vitis AI
+*inspector* to check operator support, ONNX2C to translate for HLS. This
+module is the equivalent substrate: a small typed op graph with shape
+inference and MAC/parameter accounting (Table I), which the inspector
+partitions and the engine executes on either backend.
+
+Ops cover everything the four use cases need: 2-D and 3-D conv/pool,
+dense, activations (relu / leaky_relu / sigmoid / softplus / tanh),
+flatten / concat / add / mul / exp, comparator (`greater`) and gaussian
+sampling — the last two being exactly the ops the paper calls out as
+DPU-unsupported.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    op: str
+    inputs: List[str]
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # filled by the graph builder
+    out_shape: Optional[Shape] = None
+    param_count: int = 0
+    macs: int = 0                    # multiply-accumulates
+    ops: int = 0                     # total arithmetic ops (paper's metric)
+
+
+class Graph:
+    """A feed-forward op graph (SSA; multiple inputs, multiple outputs)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes: Dict[str, Node] = {}
+        self.order: List[str] = []
+        self.graph_inputs: Dict[str, Shape] = {}
+        self.outputs: List[str] = []
+
+    # -- construction -------------------------------------------------------
+
+    def input(self, name: str, shape: Shape) -> str:
+        self.graph_inputs[name] = tuple(shape)
+        node = Node(name, "input", [], out_shape=tuple(shape))
+        self.nodes[name] = node
+        self.order.append(name)
+        return name
+
+    def add(self, op: str, inputs: Sequence[str], name: Optional[str] = None,
+            **attrs) -> str:
+        name = name or f"{op}_{len(self.order)}"
+        if name in self.nodes:
+            raise ValueError(f"duplicate node {name}")
+        node = Node(name, op, list(inputs), attrs)
+        _infer(node, [self.nodes[i] for i in inputs])
+        self.nodes[name] = node
+        self.order.append(name)
+        return name
+
+    def mark_output(self, *names: str) -> None:
+        self.outputs.extend(names)
+
+    # -- accounting (Table I) -----------------------------------------------
+
+    @property
+    def n_params(self) -> int:
+        return sum(n.param_count for n in self.nodes.values())
+
+    @property
+    def n_ops(self) -> int:
+        return sum(n.ops for n in self.nodes.values())
+
+    @property
+    def n_macs(self) -> int:
+        return sum(n.macs for n in self.nodes.values())
+
+    def param_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.n_params * dtype_bytes
+
+    def summary(self) -> str:
+        lines = [f"Graph {self.name}: {self.n_params:,} params, "
+                 f"{self.n_ops:,} ops"]
+        for name in self.order:
+            n = self.nodes[name]
+            lines.append(f"  {name:24s} {n.op:12s} -> {n.out_shape} "
+                         f"params={n.param_count:,} ops={n.ops:,}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Shape inference + op/param accounting
+# ---------------------------------------------------------------------------
+
+
+def _conv_out(size: int, k: int, stride: int, pad: str) -> int:
+    if pad == "SAME":
+        return -(-size // stride)
+    return (size - k) // stride + 1
+
+
+def _infer(node: Node, ins: List[Node]) -> None:
+    op, a = node.op, node.attrs
+    shapes = [i.out_shape for i in ins]
+
+    if op == "conv2d":
+        (h, w, cin) = shapes[0]
+        kh, kw = a["kernel"]
+        cout, stride, pad = a["features"], a.get("stride", 1), a.get("padding", "SAME")
+        ho, wo = _conv_out(h, kh, stride, pad), _conv_out(w, kw, stride, pad)
+        node.out_shape = (ho, wo, cout)
+        node.param_count = kh * kw * cin * cout + cout
+        node.macs = ho * wo * cout * kh * kw * cin
+        node.ops = 2 * node.macs + ho * wo * cout
+    elif op == "conv3d":
+        (d, h, w, cin) = shapes[0]
+        kd, kh, kw = a["kernel"]
+        cout, stride, pad = a["features"], a.get("stride", 1), a.get("padding", "SAME")
+        do, ho, wo = (_conv_out(d, kd, stride, pad), _conv_out(h, kh, stride, pad),
+                      _conv_out(w, kw, stride, pad))
+        node.out_shape = (do, ho, wo, cout)
+        node.param_count = kd * kh * kw * cin * cout + cout
+        node.macs = do * ho * wo * cout * kd * kh * kw * cin
+        node.ops = 2 * node.macs + do * ho * wo * cout
+    elif op in ("maxpool2d", "avgpool2d"):
+        (h, w, c) = shapes[0]
+        k, stride = a["kernel"], a.get("stride", a["kernel"])
+        node.out_shape = (h // stride, w // stride, c)
+        node.ops = int(np.prod(node.out_shape)) * k * k
+    elif op in ("maxpool3d", "avgpool3d"):
+        (d, h, w, c) = shapes[0]
+        k, stride = a["kernel"], a.get("stride", a["kernel"])
+        node.out_shape = (d // stride, h // stride, w // stride, c)
+        node.ops = int(np.prod(node.out_shape)) * k ** 3
+    elif op == "dense":
+        fin = int(np.prod(shapes[0]))
+        fout = a["features"]
+        node.out_shape = (fout,)
+        node.param_count = fin * fout + (fout if a.get("bias", True) else 0)
+        node.macs = fin * fout
+        node.ops = 2 * node.macs + fout
+    elif op == "flatten":
+        node.out_shape = (int(np.prod(shapes[0])),)
+    elif op in ("relu", "leaky_relu", "sigmoid", "tanh", "softplus", "exp"):
+        node.out_shape = shapes[0]
+        node.ops = int(np.prod(shapes[0])) * (4 if op in ("sigmoid", "tanh",
+                                                          "softplus") else 1)
+    elif op == "concat":
+        ax = a.get("axis", -1)
+        base = list(shapes[0])
+        base[ax] = sum(s[ax] for s in shapes)
+        node.out_shape = tuple(base)
+    elif op in ("add", "mul", "sub"):
+        node.out_shape = shapes[0]
+        node.ops = int(np.prod(shapes[0]))
+    elif op == "greater":
+        node.out_shape = shapes[0]
+        node.ops = int(np.prod(shapes[0]))
+        # threshold constant counts as a parameter (ESPERTA decision level)
+        node.param_count = 0
+    elif op == "scale_shift":
+        # y = x * w + b with per-element params (ESPERTA's tiny regressors)
+        node.out_shape = shapes[0]
+        n = int(np.prod(shapes[0]))
+        node.param_count = 0
+        node.ops = 2 * n
+    elif op == "sample_normal":
+        # z = mu + exp(0.5*logvar) * eps — the VAE tail the paper runs on CPU
+        node.out_shape = shapes[0]
+        node.ops = 3 * int(np.prod(shapes[0]))
+    elif op == "argmax":
+        node.out_shape = ()
+        node.ops = int(np.prod(shapes[0]))
+    else:
+        raise ValueError(f"unknown op {op!r}")

@@ -1,0 +1,124 @@
+"""INT8 post-training quantization (+ QAT fake-quant) — the Vitis-AI
+quantizer analog.
+
+PTQ: per-output-channel symmetric weight scales (absmax/127), per-tensor
+activation scales collected by running the calibration set through the
+fp32 graph and recording absmax at every node output (the standard
+Vitis-AI PTQ recipe). QAT: straight-through-estimator fake-quant usable
+inside a jax.grad training loop — the paper notes PTQ caused "noticeable
+degradation that QAT could mitigate"; both are provided and the
+degradation is measured in benchmarks/table3_performance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.opgraph import Graph
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class QuantizedLayer:
+    w_q: jax.Array                  # int8 [K, N] (dense) / [KH*KW*Cin, Cout]
+    w_scale: jax.Array              # f32 [N] per-output-channel
+    bias: Optional[jax.Array]       # f32 [N]
+
+
+def quantize_weights(graph: Graph,
+                     params: Dict[str, Dict[str, jax.Array]]
+                     ) -> Dict[str, QuantizedLayer]:
+    """Per-output-channel INT8 for every conv2d/dense node."""
+    out: Dict[str, QuantizedLayer] = {}
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op not in ("conv2d", "dense"):
+            continue
+        p = params[name]
+        w = p["w"]
+        if node.op == "conv2d":
+            kh, kw, cin, cout = w.shape
+            w2 = w.reshape(kh * kw * cin, cout)
+        else:
+            w2 = w
+        w_q, w_scale = kops.quantize(w2, axis=0)
+        out[name] = QuantizedLayer(w_q=w_q, w_scale=w_scale,
+                                   bias=p.get("b"))
+    return out
+
+
+def calibrate_graph(engine, sample_inputs: List[Dict[str, np.ndarray]]
+                    ) -> Dict[str, float]:
+    """Per-node activation absmax over a calibration set (fp32 flex run)."""
+    absmax: Dict[str, float] = {}
+    for sample in sample_inputs:
+        # reuse the engine's flex path but capture every intermediate
+        vals = _trace(engine, sample)
+        for name, v in vals.items():
+            m = float(jnp.max(jnp.abs(v)))
+            absmax[name] = max(absmax.get(name, 0.0), m)
+    return absmax
+
+
+def _trace(engine, inputs) -> Dict[str, jax.Array]:
+    from repro.core.engine import OP_IMPLS
+    g = engine.graph
+    vals: Dict[str, jax.Array] = {}
+    rng = jax.random.PRNGKey(0)
+    for name, shape in g.graph_inputs.items():
+        vals[name] = jnp.asarray(inputs[name], jnp.float32)
+    for name in g.order:
+        node = g.nodes[name]
+        if node.op == "input":
+            continue
+        rng, sub = jax.random.split(rng)
+        vals[name] = OP_IMPLS[node.op]([vals[i] for i in node.inputs],
+                                       engine.params.get(name, {}),
+                                       node.attrs, sub)
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# QAT (straight-through estimator)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+def _fq_fwd(x, scale):
+    return fake_quant(x, scale), (x, scale)
+
+
+def _fq_bwd(res, g):
+    x, scale = res
+    # STE: pass gradients through inside the clip range, zero outside
+    inside = (jnp.abs(x) <= 127.0 * scale).astype(g.dtype)
+    return g * inside, jnp.zeros_like(scale)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def qat_quantize_params(params: Dict[str, Dict[str, jax.Array]],
+                        graph: Graph) -> Dict[str, Dict[str, jax.Array]]:
+    """Fake-quantize all conv/dense weights (QAT forward); biases stay fp32."""
+    out = {}
+    for name, p in params.items():
+        node = graph.nodes.get(name)
+        if node is not None and node.op in ("conv2d", "dense") and "w" in p:
+            w = p["w"]
+            w2 = w.reshape(-1, w.shape[-1])
+            scale = jnp.max(jnp.abs(w2), axis=0) / 127.0 + 1e-12
+            wq = fake_quant(w2, scale[None, :]).reshape(w.shape)
+            out[name] = dict(p, w=wq)
+        else:
+            out[name] = p
+    return out

@@ -1,0 +1,109 @@
+"""Data pipeline: deterministic synthetic streams + host-sharded loading.
+
+Real missions feed sensor frames; for training/benchmarks we generate
+deterministic synthetic batches (seeded per step, so a restarted job
+resumes on *identical* data — important for checkpoint/restart tests).
+
+``host_shard`` mimics the multi-host layout: each host materializes only
+its slice of the global batch, then ``jax.make_array_from_process_local_data``
+(or direct device_put on one host) assembles the global array. On this
+single-process container the shard is the whole batch, but the code path
+is the production one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.nn.dims import Dims
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # synthetic LM stream: a noisy copy task so loss actually decreases —
+    # next token = (current + stride) mod vocab with flip noise
+    stride: int = 7
+    noise: float = 0.05
+
+
+def _tokens_for_step(step: int, batch: int, seq: int, vocab: int,
+                     dc: DataConfig) -> np.ndarray:
+    rng = np.random.default_rng(dc.seed * 1_000_003 + step)
+    start = rng.integers(0, vocab, size=(batch, 1))
+    ramp = (start + dc.stride * np.arange(seq + 1)[None, :]) % vocab
+    flips = rng.random((batch, seq + 1)) < dc.noise
+    noise = rng.integers(0, vocab, size=(batch, seq + 1))
+    return np.where(flips, noise, ramp).astype(np.int32)
+
+
+def synthetic_batch(step: int, cfg: ArchConfig, dims: Dims, shape: ShapeSpec,
+                    dc: DataConfig = DataConfig(),
+                    batch_override: Optional[int] = None,
+                    seq_override: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Host-side numpy batch for one step (tokens shifted into labels)."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    seqs = _tokens_for_step(step, b, s, cfg.vocab_size, dc)
+    batch: Dict[str, np.ndarray] = {"labels": seqs[:, 1:]}
+    if cfg.frontend == "text":
+        batch["tokens"] = seqs[:, :-1]
+    else:
+        # stub modality frontend: deterministic pseudo-embeddings derived
+        # from the token stream (same shape contract as a real encoder)
+        rng = np.random.default_rng(dc.seed * 7_000_003 + step)
+        proj = rng.standard_normal((cfg.vocab_size, 1)).astype(np.float32)
+        base = proj[seqs[:, :-1], 0]
+        phases = np.arange(dims.d_model, dtype=np.float32)[None, None, :]
+        emb = np.sin(base[..., None] * 0.1 + phases * 0.01).astype(np.float32)
+        batch["embeds"] = emb
+    return batch
+
+
+def data_iterator(cfg: ArchConfig, dims: Dims, shape: ShapeSpec,
+                  dc: DataConfig = DataConfig(), start_step: int = 0,
+                  batch_override: Optional[int] = None,
+                  seq_override: Optional[int] = None) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(step, cfg, dims, shape, dc,
+                              batch_override, seq_override)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# Host sharding
+# ---------------------------------------------------------------------------
+
+
+def host_shard(batch: Dict[str, np.ndarray], mesh, shardings) -> Dict[str, jax.Array]:
+    """Assemble global device arrays from (this process's slice of) a batch.
+
+    Single-process: jax.device_put with the target sharding. Multi-process:
+    each host owns global_batch / process_count rows and we use
+    make_array_from_process_local_data so no host materializes the full
+    global batch.
+    """
+    if jax.process_count() == 1:
+        return {k: jax.device_put(v, shardings[k]) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        out[k] = jax.make_array_from_process_local_data(shardings[k], v)
+    return out
+
+
+def local_slice(step: int, cfg: ArchConfig, dims: Dims, shape: ShapeSpec,
+                dc: DataConfig = DataConfig()) -> Dict[str, np.ndarray]:
+    """The rows this host is responsible for (identical across hosts only
+    in the single-process case)."""
+    b_global = shape.global_batch
+    n_proc = jax.process_count()
+    b_local = max(b_global // n_proc, 1)
+    full = synthetic_batch(step, cfg, dims, shape, dc)
+    lo = (jax.process_index() * b_local) % b_global
+    return {k: v[lo: lo + b_local] for k, v in full.items()}

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: NHWC conv2d as shift-and-matmul (the DPU conv engine).
+
+TPU adaptation of the DPU's convolution array: instead of a systolic
+line-buffer (FPGA idiom), each grid step loads the KH input rows feeding
+one output row into VMEM and accumulates KH*KW shifted [W_out, Cin] x
+[Cin, Cout] matmuls on the MXU — im2col without ever materializing the
+patch matrix in HBM. Bias + ReLU fuse into the epilogue.
+
+Space-use-case shapes (<=128x256 imgs, <=64 channels) keep the whole row
+set comfortably inside VMEM; the grid parallelizes over (batch, out-row).
+Supports stride 1/2 and 'SAME'/'VALID' padding (host-side pre-pad).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, w_out: int,
+            stride: int, relu: bool, has_bias: bool):
+    # x_ref block: [1, H_pad, W_pad, Cin] (whole image resident in VMEM —
+    # space-use-case feature maps are small); we slice the KH rows feeding
+    # this output row dynamically.
+    cout = o_ref.shape[-1]
+    row_start = pl.program_id(1) * stride
+    rows = x_ref[0, pl.dslice(row_start, kh)]            # [KH, W_pad, Cin]
+    acc = jnp.zeros((w_out, cout), jnp.float32)
+    for r in range(kh):
+        row = rows[r].astype(jnp.float32)                # [W_pad, Cin]
+        for c in range(kw):
+            # static strided slice: w_out taps starting at column c
+            taps = jax.lax.slice(row, (c, 0),
+                                 (c + (w_out - 1) * stride + 1, row.shape[1]),
+                                 (stride, 1))            # [w_out, Cin]
+            acc += jax.lax.dot_general(
+                taps, w_ref[r, c].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "relu",
+                                             "interpret"))
+def conv2d(
+    x: jax.Array,                   # [B, H, W, Cin]
+    w: jax.Array,                   # [KH, KW, Cin, Cout]
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    if padding == "SAME":
+        h_out = -(-h // stride)
+        w_out = -(-wd // stride)
+        pad_h = max((h_out - 1) * stride + kh - h, 0)
+        pad_w = max((w_out - 1) * stride + kw - wd, 0)
+        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    elif padding == "VALID":
+        h_out = (h - kh) // stride + 1
+        w_out = (wd - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    h_pad, w_pad = x.shape[1], x.shape[2]
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((cout,), jnp.float32)
+
+    # make sure every block fits: extend the padded image so the last
+    # block's row window is in range
+    need_h = (h_out - 1) * stride + kh
+    if need_h > h_pad:
+        x = jnp.pad(x, ((0, 0), (0, need_h - h_pad), (0, 0), (0, 0)))
+    need_w = (w_out - 1) * stride + kw
+    if need_w > w_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, need_w - w_pad), (0, 0)))
+        w_pad = need_w
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, w_out=w_out, stride=stride,
+                          relu=relu, has_bias=has_bias),
+        grid=(b, h_out),
+        in_specs=[
+            pl.BlockSpec((1, x.shape[1], w_pad, cin),
+                         lambda bi, hi: (bi, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda bi, hi: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda bi, hi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, cout),
+                               lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, cout), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, bias)
+    return out

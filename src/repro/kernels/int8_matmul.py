@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: INT8 x INT8 -> INT32 matmul with fused dequant epilogue.
+
+This is the DPU analog (DESIGN.md §6): the AMD DPU's entire value
+proposition is INT8 MACs with weights resident on-chip; on TPU the MXU
+runs int8 x int8 -> int32 natively at 2x bf16 throughput, and "on-chip
+residency" means the weight tile lives in VMEM across the K loop.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost ('arbitrary' semantics) so the
+int32 VMEM accumulator carries across K steps; per-row activation scales
+and per-output-channel weight scales + bias + ReLU fuse into the epilogue,
+so quantized inference is ONE kernel per layer — the paper's observation
+that accelerator speedup comes from avoiding per-layer round-trips
+(cf. Fig 11: input staging dominating compute for small HLS models).
+
+Block defaults are MXU-aligned (128x128); VMEM working set at defaults is
+bm*bk + bk*bn (int8) + bm*bn (int32) = 16KB + 16KB + 64KB << 16MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
+            n_k: int, relu: bool, has_bias: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32)
+        out = out * xs_ref[...][:, None] * ws_ref[...][None, :]
+        if has_bias:
+            out = out + b_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "relu", "out_dtype", "interpret"))
+def int8_matmul(
+    x_q: jax.Array,                 # [M, K] int8
+    w_q: jax.Array,                 # [K, N] int8
+    x_scale: jax.Array,             # [M] f32 per-row
+    w_scale: jax.Array,             # [N] f32 per-output-channel
+    bias: Optional[jax.Array] = None,   # [N] f32
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    relu: bool = False,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (k, k2)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, relu=relu, has_bias=has_bias),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+            pl.BlockSpec((bm,), lambda i, j, h: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, h: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, h: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale, bias)

@@ -1,0 +1,59 @@
+"""Public jit'd kernel API.
+
+``interpret`` defaults to True on CPU (this container) and False when a
+real TPU backend is present, so the same call sites run emulated here and
+compiled Mosaic on hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d as _conv2d
+from repro.kernels import flash_attention as _flash
+from repro.kernels import int8_matmul as _int8mm
+from repro.kernels import quantize as _quant
+from repro.kernels import ssd as _ssd
+
+
+@functools.lru_cache(None)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def int8_matmul(x_q, w_q, x_scale, w_scale, bias=None, *, relu=False,
+                out_dtype=jnp.float32, **tiles):
+    return _int8mm.int8_matmul(x_q, w_q, x_scale, w_scale, bias, relu=relu,
+                               out_dtype=out_dtype, interpret=_interp(),
+                               **tiles)
+
+
+def conv2d(x, w, bias=None, *, stride=1, padding="SAME", relu=False):
+    return _conv2d.conv2d(x, w, bias, stride=stride, padding=padding,
+                          relu=relu, interpret=_interp())
+
+
+def flash_attention(q, k, v, *, causal=True, bq=256, bk=256):
+    return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=_interp())
+
+
+def ssd(x, B_, C_, dt, A, init_state=None, *, chunk: int = 256):
+    return _ssd.ssd(x, B_, C_, dt, A, init_state, chunk=chunk,
+                    interpret=_interp())
+
+
+def quantize(x, axis: Optional[int] = 0):
+    return _quant.quantize(x, axis=axis, interpret=_interp())
+
+
+def dequantize(q, scale, axis: Optional[int] = 0, dtype=jnp.float32):
+    from repro.kernels.ref import dequantize_ref
+    return dequantize_ref(q, scale, axis=axis, dtype=dtype)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically-plain implementation the kernels are
+tested against with ``assert_allclose`` over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, bias: Optional[jax.Array] = None,
+                    relu: bool = False, out_dtype=jnp.float32) -> jax.Array:
+    """x_q [M,K] int8, w_q [K,N] int8, x_scale [M] f32 (per-row),
+    w_scale [N] f32 (per-output-channel)."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(out_dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+               stride: int = 1, padding: str = "SAME",
+               relu: bool = False) -> jax.Array:
+    """NHWC conv. x [B,H,W,Cin], w [KH,KW,Cin,Cout]."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd]; GQA by head grouping."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def quantize_ref(x: jax.Array, axis: Optional[int] = 0):
+    """Symmetric int8 PTQ. axis=None -> per-tensor; else per-channel over
+    the remaining axis. Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    else:
+        scale = jnp.max(jnp.abs(xf), axis=axis, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis) if axis is not None else scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, axis: Optional[int] = 0,
+                   dtype=jnp.float32) -> jax.Array:
+    if axis is None:
+        return (q.astype(jnp.float32) * scale).astype(dtype)
+    return (q.astype(jnp.float32) * jnp.expand_dims(scale, axis)).astype(dtype)
+
+
+def ssd_ref(x, B_, C_, dt, A, init_state=None):
+    """Naive SSD recurrence (O(S) scan — the correctness contract for the
+    chunked Pallas kernel). Shapes as kernels/ssd.py."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(state, t):
+        decay = jnp.exp(dt[:, t] * A)                            # [B, H]
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], B_[:, t].astype(jnp.float32),
+            x[:, t].astype(jnp.float32))
+        y_t = jnp.einsum("bn,bhpn->bhp", C_[:, t].astype(jnp.float32), state)
+        return state, y_t
+
+    final, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/executed before any other jax-touching import sets device
+state — the first two lines force 512 host-platform devices so
+``jax.make_mesh`` can build the production meshes.
+
+Per cell we record:
+  * memory_analysis (per-device bytes — proves it fits)
+  * cost_analysis   (HLO FLOPs / bytes — feeds the roofline)
+  * collective bytes parsed from the post-SPMD optimized HLO
+into a JSON ledger (benchmarks/roofline.py and EXPERIMENTS.md read it).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi     # 2-pod only
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402  (imports must follow the XLA_FLAGS lines)
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_arch, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_train_state, input_specs,
+                                shardings_for_cell)
+from repro.launch.steps import (StepOptions, TrainState, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.nn import model as model_lib
+from repro.nn.dims import compute_dims
+from repro.optim.adamw import AdamW
+from repro.parallel.sharding import use_mesh
+
+LEDGER = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "benchmarks", "dryrun_ledger.json")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# ring all-reduce moves ~2x the buffer; others ~1x
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum wire bytes per collective kind from post-SPMD optimized HLO."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, shape_s, kind = m.groups()
+        if dtype not in DTYPE_BYTES:
+            continue
+        elems = 1
+        if shape_s:
+            for d in shape_s.split(","):
+                elems *= int(d)
+        b = elems * DTYPE_BYTES[dtype] * WIRE_FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def apply_overrides(cfg, overrides: Dict[str, Any]):
+    """Config surgery for perf iterations (e.g. {'moe_impl': 'a2a'})."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    if "moe_impl" in overrides and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         ep_impl=overrides["moe_impl"]))
+    if overrides.get("kv8") and cfg.attends:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    return cfg
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, opts: StepOptions,
+               overrides: Dict[str, Any] = None):
+    """Returns (fn, args_abstract, in_shardings, out_shardings)."""
+    from repro.parallel.sharding import serving_rules
+    cfg = apply_overrides(get_arch(arch_id), overrides or {})
+    dims = compute_dims(cfg, tp=mesh.shape["model"])
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    optimizer = AdamW(lr=1e-4)
+    rules = serving_rules(mesh) if (overrides or {}).get("serving") else None
+    sh = shardings_for_cell(cfg, dims, shape, mesh, optimizer, rules)
+    scalar_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, dims, optimizer, opts)
+        params, opt = abstract_train_state(cfg, dims, optimizer)
+        state = TrainState(params, opt)
+        state_sh = TrainState(sh["params"], sh["opt"])
+        args = (state, input_specs(cfg, dims, shape))
+        in_sh = (state_sh, sh["inputs"])
+        out_sh = (state_sh, None)
+        donate = (0,)          # state buffers are reused in-place
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, dims, opts, s_max=shape.seq_len)
+        params = model_lib.abstract_model_params(cfg, dims)
+        args = (params, input_specs(cfg, dims, shape))
+        cache_sh = shardings_for_cell(cfg, dims,
+                                      _as_decode(shape), mesh, optimizer)["cache"]
+        in_sh = (sh["params"], sh["inputs"])
+        out_sh = (None, cache_sh)
+        donate = ()
+    else:  # decode
+        base = make_decode_step(cfg, dims)
+        params = model_lib.abstract_model_params(cfg, dims)
+        cache = model_lib.abstract_cache(cfg, dims, shape.global_batch,
+                                         shape.seq_len)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        p_sh = sh["params"]
+        fn = base
+        if (overrides or {}).get("quant") == "w8":
+            # §Perf B1: int8 weight storage for the memory-bound decode
+            from repro.core import lm_quant
+            from repro.launch.specs import state_axes
+            from repro.parallel.sharding import tree_shardings
+            params = lm_quant.abstract_quantized(params)
+            p_axes, _ = state_axes(cfg, dims)
+            q_axes = lm_quant.quantized_axes(
+                model_lib.abstract_model_params(cfg, dims), p_axes)
+            p_sh = tree_shardings(params, q_axes, mesh, rules)
+
+            def fn(qp, c, tok, pos):
+                return base(lm_quant.dequantize_params(qp), c, tok, pos)
+        args = (params, cache, input_specs(cfg, dims, shape)["token"],
+                pos)
+        in_sh = (p_sh, sh["cache"], sh["inputs"]["token"], scalar_sh)
+        out_sh = (None, sh["cache"])
+        donate = (1,)          # KV/SSM cache is updated in place
+    return fn, args, in_sh, out_sh, donate
+
+
+def _as_decode(shape):
+    import dataclasses
+    return dataclasses.replace(shape, kind="decode")
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             opts: StepOptions = StepOptions(),
+             granularity: str = "full",
+             overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "granularity": granularity,
+    }
+    if overrides:
+        rec["overrides"] = dict(overrides)
+    t0 = time.time()
+    from repro.parallel.sharding import serving_rules
+    rules = serving_rules(mesh) if (overrides or {}).get("serving") else None
+    with use_mesh(mesh, rules):
+        if granularity == "full":
+            fn, args, in_sh, out_sh, donate = build_cell(
+                arch_id, shape_name, mesh, opts, overrides)
+        else:  # 'group' | 'tail' — scan-body probes for the roofline
+            from repro.launch.group_probe import build_group_cell, build_tail_cell
+            cfg = apply_overrides(get_arch(arch_id), overrides or {})
+            dims = compute_dims(cfg, tp=mesh.shape["model"])
+            shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+            build = build_group_cell if granularity == "group" else build_tail_cell
+            if granularity == "group":
+                fn, args, in_sh, donate = build(
+                    cfg, dims, shape, mesh,
+                    attn_impl=opts.attn_impl, remat=opts.remat,
+                    remat_policy=opts.remat_policy,
+                    quant=(overrides or {}).get("quant"))
+            else:
+                fn, args, in_sh, donate = build(cfg, dims, shape, mesh)
+            out_sh = None
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec.setdefault("memory", {})[k] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:
+            c = cost[0] if isinstance(cost, (list, tuple)) else cost
+            rec["cost"] = {k: float(v) for k, v in c.items()
+                           if isinstance(v, (int, float)) and
+                           ("flops" in k or "bytes" in k or k == "utilization")}
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def load_ledger() -> Dict[str, Any]:
+    path = os.path.abspath(LEDGER)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_ledger(ledger: Dict[str, Any]) -> None:
+    path = os.path.abspath(LEDGER)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(ledger, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--tag", default="baseline", help="ledger namespace")
+    ap.add_argument("--granularity", default="full",
+                    choices=["full", "group", "tail"],
+                    help="'group'/'tail' lower ONE scan-body step — the "
+                         "roofline's scan-correction probes")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "scatter", "a2a"],
+                    help="override MoE dispatch (perf iteration A1)")
+    ap.add_argument("--quant", default=None, choices=[None, "w8"],
+                    help="int8 weight storage for decode cells (§Perf B1)")
+    ap.add_argument("--serving", action="store_true",
+                    help="serving sharding: replicate weights over data "
+                         "(kills per-step FSDP gathers; §Perf B1')")
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8 KV cache (§Perf B2/C2)")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots"],
+                    help="activation-checkpoint policy (§Perf cell D)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="gradient-accumulation chunks (§Perf cell E)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    if args.quant:
+        overrides["quant"] = args.quant
+    if args.serving:
+        overrides["serving"] = True
+    if args.kv8:
+        overrides["kv8"] = True
+
+    ledger = load_ledger()
+    failures = []
+    archs = [args.arch] if args.arch else list(all_archs())
+    gran = args.granularity
+    tag = args.tag if gran == "full" else f"{args.tag}-{gran}"
+    for arch_id in archs:
+        cfg = get_arch(arch_id)
+        if gran == "tail" and cfg.family != "hybrid":
+            continue
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_kind in ("single", "multi"):
+                if args.mesh and mesh_kind != args.mesh:
+                    continue
+                key = f"{tag}/{arch_id}/{shape.name}/{mesh_kind}"
+                if key in ledger and not args.force \
+                        and ledger[key].get("status") == "ok":
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[cell] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape.name, mesh_kind,
+                                   opts=StepOptions(
+                                       remat_policy=args.remat_policy,
+                                       microbatch=args.microbatch),
+                                   granularity=gran, overrides=overrides)
+                    rec["status"] = "ok"
+                    print(f"  ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"coll={rec['collectives'].get('total', 0)/1e9:.2f}GB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — ledger records failures
+                    rec = {"arch": arch_id, "shape": shape.name,
+                           "mesh": mesh_kind, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append(key)
+                    print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+                ledger[key] = rec
+                save_ledger(ledger)
+    print(f"\n{len(failures)} failures" if failures else "\nall cells ok")
+    for f in failures:
+        print("  ", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

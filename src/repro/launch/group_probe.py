@@ -1,0 +1,215 @@
+"""Per-group dry-run probes — the scan-correction term for the roofline.
+
+The models scan over stacked layer *groups* (``jax.lax.scan``), which keeps
+HLO size O(1) in depth but makes XLA's ``cost_analysis()`` count the scan
+body ONCE instead of ``n_groups`` times. The roofline would then undercount
+FLOPs / bytes / collective traffic by ~the layer count.
+
+Fix: lower ONE group application under the exact same mesh/shardings and
+record its cost. benchmarks/roofline.py then reconstructs
+
+    corrected = full_program + (n_groups - 1) * group
+                (+ (n_tail - 1) * tail_block for the hybrid tail scan)
+
+This is *measured* (lower+compile of the real block code), not an analytic
+estimate — the same philosophy as the full-cell dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.nn import blocks
+from repro.nn import model as model_lib
+from repro.nn.dims import Dims
+from repro.nn.params import abstract_params, build_axes
+from repro.parallel.sharding import (current_rules, sharding_for,
+                                     tree_shardings)
+
+
+def _x_spec(b: int, s: int, d: int):
+    return jax.ShapeDtypeStruct((b, s, d), jnp.bfloat16)
+
+
+def _group_params(cfg: ArchConfig, dims: Dims):
+    spec = model_lib._group_spec(cfg, dims)
+    return abstract_params(spec), build_axes(spec)
+
+
+def _shared_params(cfg: ArchConfig, dims: Dims):
+    spec = blocks.dense_block_spec(cfg, dims)
+    return abstract_params(spec), build_axes(spec)
+
+
+def _fwd_once(cfg: ArchConfig, dims: Dims, attn_impl: str, want_cache: bool,
+              s_max: int):
+    """One group forward — hybrid groups need the shared block as an arg."""
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_attn_period
+
+        def f(gp, shared, x, positions):
+            caches: Dict[str, Any] = {}
+            ssm_caches = []
+            for j in range(p):
+                sub = jax.tree.map(lambda a: a[j], gp["ssm_subs"])
+                if want_cache:
+                    x, c = blocks.ssm_block(sub, x, cfg, dims, return_cache=True)
+                    ssm_caches.append(c)
+                else:
+                    x = blocks.ssm_block(sub, x, cfg, dims)
+            if want_cache:
+                x, kv = blocks.dense_block(shared, x, cfg, dims, positions,
+                                           attn_impl, return_cache=True,
+                                           s_max=s_max)
+                caches["ssm_subs"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                                  *ssm_caches)
+                caches["attn"] = kv
+                return x, caches
+            x = blocks.dense_block(shared, x, cfg, dims, positions, attn_impl)
+            return x, None
+        return f, True
+
+    def f(gp, x, positions):
+        return model_lib._group_forward(gp, x, cfg, dims, positions, attn_impl,
+                                        want_cache, s_max)
+    return f, False
+
+
+def build_group_cell(cfg: ArchConfig, dims: Dims, shape: ShapeSpec, mesh,
+                     attn_impl: str = "chunked", remat: bool = True,
+                     remat_policy: str = "nothing",
+                     quant: str = None) -> Tuple[Any, tuple, tuple, tuple]:
+    """(fn, abstract_args, in_shardings, donate) for ONE group step of the
+    given cell kind — the exact block code the full model scans."""
+    b, s = shape.global_batch, shape.seq_len
+    gp_abs, gp_axes = _group_params(cfg, dims)
+    dequant_gp = None
+    if quant == "w8" and shape.kind == "decode":
+        from repro.core import lm_quant
+        gp_axes = lm_quant.quantized_axes(gp_abs, gp_axes)
+        gp_abs = lm_quant.abstract_quantized(gp_abs)
+        dequant_gp = lm_quant.dequantize_params
+    gp_sh = tree_shardings(gp_abs, gp_axes, mesh, current_rules())
+    x_sh = sharding_for((b, max(s, 1), dims.d_model),
+                        ("batch", "seq", None), mesh, current_rules())
+    pos_sh = sharding_for((b, max(s, 1)), ("batch", "seq"), mesh, current_rules())
+
+    if shape.kind in ("train", "prefill"):
+        x_abs = _x_spec(b, s, dims.d_model)
+        pos_abs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        want_cache = shape.kind == "prefill"
+        fwd, needs_shared = _fwd_once(cfg, dims, attn_impl, want_cache, s)
+
+        if shape.kind == "prefill":
+            if needs_shared:
+                sh_abs, sh_axes = _shared_params(cfg, dims)
+                sh_sh = tree_shardings(sh_abs, sh_axes, mesh, current_rules())
+                return (fwd, (gp_abs, sh_abs, x_abs, pos_abs),
+                        (gp_sh, sh_sh, x_sh, pos_sh), ())
+            return fwd, (gp_abs, x_abs, pos_abs), (gp_sh, x_sh, pos_sh), ()
+
+        # train: fwd + bwd through one group, remat-matched to the step fn
+        if needs_shared:
+            def y_of(gp, shared, x, positions):
+                return fwd(gp, shared, x, positions)[0]
+            step = y_of
+            if remat:
+                step = jax.checkpoint(
+                    y_of, policy=model_lib.remat_policy_fn(remat_policy))
+
+            def train_probe(gp, shared, x, positions, ct):
+                y, vjp = jax.vjp(lambda g, sh, xx: step(g, sh, xx, positions),
+                                 gp, shared, x)
+                return (y, *vjp(ct))
+            sh_abs, sh_axes = _shared_params(cfg, dims)
+            sh_sh = tree_shardings(sh_abs, sh_axes, mesh, current_rules())
+            ct_abs = _x_spec(b, s, dims.d_model)
+            return (train_probe, (gp_abs, sh_abs, x_abs, pos_abs, ct_abs),
+                    (gp_sh, sh_sh, x_sh, pos_sh, x_sh), ())
+
+        def y_of(gp, x, positions):
+            return fwd(gp, x, positions)[0]
+        step = y_of
+        if remat:
+            step = jax.checkpoint(
+                y_of, policy=model_lib.remat_policy_fn(remat_policy))
+
+        def train_probe(gp, x, positions, ct):
+            y, vjp = jax.vjp(lambda g, xx: step(g, xx, positions), gp, x)
+            return (y, *vjp(ct))
+        ct_abs = _x_spec(b, s, dims.d_model)
+        return (train_probe, (gp_abs, x_abs, pos_abs, ct_abs),
+                (gp_sh, x_sh, pos_sh, x_sh), ())
+
+    # decode: one group decode step against this cell's cache depth
+    gc_spec = model_lib.group_cache_spec(cfg, dims, b, s)
+    gc_abs = abstract_params(gc_spec)
+    gc_sh = tree_shardings(gc_abs, build_axes(gc_spec), mesh, current_rules())
+    x_abs = _x_spec(b, 1, dims.d_model)
+    x1_sh = sharding_for((b, 1, dims.d_model), ("batch", None, None), mesh,
+                         current_rules())
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = sharding_for((), (), mesh, current_rules())
+
+    if cfg.family == "hybrid":
+        sh_abs, sh_axes = _shared_params(cfg, dims)
+        sh_sh = tree_shardings(sh_abs, sh_axes, mesh, current_rules())
+
+        def decode_probe(gp, shared, gc, x, pos):
+            if dequant_gp is not None:
+                gp = dequant_gp(gp)
+            return model_lib._group_decode(gp, gc, x, pos, cfg, dims, shared)
+        return (decode_probe, (gp_abs, sh_abs, gc_abs, x_abs, pos_abs),
+                (gp_sh, sh_sh, gc_sh, x1_sh, pos_sh), (2,))
+
+    def decode_probe(gp, gc, x, pos):
+        if dequant_gp is not None:
+            gp = dequant_gp(gp)
+        return model_lib._group_decode(gp, gc, x, pos, cfg, dims, None)
+    return (decode_probe, (gp_abs, gc_abs, x_abs, pos_abs),
+            (gp_sh, gc_sh, x1_sh, pos_sh), (1,))
+
+
+def build_tail_cell(cfg: ArchConfig, dims: Dims, shape: ShapeSpec, mesh
+                    ) -> Tuple[Any, tuple, tuple, tuple]:
+    """One hybrid-tail ssm block (the tail scan is also counted once)."""
+    assert cfg.family == "hybrid"
+    b, s = shape.global_batch, shape.seq_len
+    spec = blocks.ssm_block_spec(cfg, dims)
+    lp_abs = abstract_params(spec)
+    lp_sh = tree_shardings(lp_abs, build_axes(spec), mesh, current_rules())
+
+    if shape.kind in ("train", "prefill"):
+        x_abs = _x_spec(b, s, dims.d_model)
+        x_sh = sharding_for((b, s, dims.d_model), ("batch", "seq", None), mesh,
+                            current_rules())
+        if shape.kind == "prefill":
+            def f(lp, x):
+                return blocks.ssm_block(lp, x, cfg, dims, return_cache=True)
+            return f, (lp_abs, x_abs), (lp_sh, x_sh), ()
+
+        def y_of(lp, x):
+            return blocks.ssm_block(lp, x, cfg, dims)
+        step = jax.checkpoint(y_of,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+        def train_probe(lp, x, ct):
+            y, vjp = jax.vjp(step, lp, x)
+            return (y, *vjp(ct))
+        return (train_probe, (lp_abs, x_abs, x_abs),
+                (lp_sh, x_sh, x_sh), ())
+
+    from repro.nn.ssm import ssm_cache_spec
+    cs = ssm_cache_spec(b, cfg, dims)
+    c_abs = abstract_params(cs)
+    c_sh = tree_shardings(c_abs, build_axes(cs), mesh, current_rules())
+    x_abs = _x_spec(b, 1, dims.d_model)
+    x1_sh = sharding_for((b, 1, dims.d_model), ("batch", None, None), mesh,
+                         current_rules())
+
+    def decode_probe(lp, x, c):
+        return blocks.ssm_block_decode(lp, x, c, cfg, dims)
+    return decode_probe, (lp_abs, x_abs, c_abs), (lp_sh, x1_sh, c_sh), (2,)

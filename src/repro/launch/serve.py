@@ -1,0 +1,163 @@
+"""Serving launcher — the paper's on-board inference scenario.
+
+Two modes:
+
+* ``space``: serve one of the six space use-case models through the
+  dual-backend engine + batched pipeline, with the use case's selective-
+  downlink predicate (the paper's motivating workload).
+* ``lm``: prefill + decode loop for an assigned LM architecture (reduced
+  config on CPU; production configs go through the dry-run/pod path).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --model baseline_net \
+        --backend flex --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --arch tinyllama-1.1b --smoke --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.engine import Engine
+from repro.core.pipeline import ServingPipeline
+from repro.core import inspector
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import SPACE_MODELS
+from repro.nn import model as model_lib
+from repro.nn.dims import compute_dims
+
+# selective-downlink predicates per use case (the paper's decision layer)
+KEEP_PREDICATES = {
+    # MMS: keep only magnetosheath/magnetopause crossings (classes 2, 3)
+    "baseline_net": lambda out: int(out["region"]) >= 2,
+    "reduced_net": lambda out: int(out["region"]) >= 2,
+    "logistic_net": lambda out: int(out["region"]) >= 2,
+    # ESPERTA: keep if any of the six models warns
+    "multi_esperta": lambda out: any(
+        float(np.max(v)) > 0 for k, v in out.items() if k.startswith("warn")),
+    # CNet: keep high predicted X-ray flux
+    "cnet_plus_scalar": lambda out: float(np.max(list(out.values())[0])) > 0.0,
+    # VAE: everything downlinks (it IS the compressed product)
+    "vae_encoder": lambda out: True,
+}
+
+
+def serve_space(args) -> int:
+    m = SPACE_MODELS[args.model]
+    graph = m.build_graph()
+    params = m.init_params(jax.random.PRNGKey(1))
+    engine = Engine(graph, params)
+
+    report = inspector.inspect(graph)
+    print(report.summary())
+
+    key = jax.random.PRNGKey(0)
+    reqs = []
+    for i in range(args.requests):
+        key, sub = jax.random.split(key)
+        reqs.append({k: np.asarray(v) for k, v in m.synthetic_input(sub).items()})
+
+    if args.backend == "accel":
+        print("[ptq] calibrating on 4 samples")
+        engine.calibrate(reqs[:4])
+
+    pipe = ServingPipeline(engine, backend=args.backend,
+                           batch_size=args.batch,
+                           keep_predicate=KEEP_PREDICATES.get(args.model))
+    stats = pipe.run(reqs)
+    ph = stats.phases
+    print(f"[serve] {stats.n_requests} requests  fps={stats.fps:.1f}  "
+          f"kept={stats.n_kept} (downlink reduction "
+          f"{stats.downlink_reduction:.0%})")
+    print(f"[phases] stage_in={ph.stage_in*1e3:.1f} ms  "
+          f"compute={ph.compute*1e3:.1f} ms  stage_out={ph.stage_out*1e3:.1f} ms  "
+          f"overlapped={ph.overlapped*1e3:.1f} ms  wall={ph.wall*1e3:.1f} ms")
+    return 0
+
+
+def serve_lm(args) -> int:
+    import dataclasses
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if args.kv8 and cfg.attends:
+        cfg = dataclasses.replace(cfg, kv_quant=True)   # §Perf B2 int8 cache
+    dims = compute_dims(cfg, tp=1)
+    params = model_lib.init_params(cfg, dims, jax.random.PRNGKey(0))
+    if args.w8:
+        # §Perf B1: int8 weight storage, dequantized bf16 at use sites
+        from repro.core import lm_quant
+        params = lm_quant.dequantize_params(lm_quant.quantize_params(params))
+
+    b, s = args.batch, args.prompt_len
+    s_max = s + args.tokens
+    prefill = jax.jit(make_prefill_step(cfg, dims, s_max=s_max))
+    decode = jax.jit(make_decode_step(cfg, dims), donate_argnums=(1,))
+
+    key = jax.random.PRNGKey(7)
+    if cfg.frontend == "text":
+        prompt = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        batch = {"tokens": prompt}
+    else:
+        batch = {"embeds": jax.random.normal(key, (b, s, dims.d_model),
+                                             jnp.bfloat16)}
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_pre = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits, axis=-1)[:, None]
+    out_tokens = [toks]
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        inp = toks if cfg.frontend == "text" else jax.random.normal(
+            jax.random.fold_in(key, i), (b, 1, dims.d_model), jnp.bfloat16)
+        logits, cache = decode(params, cache, inp, jnp.int32(s + i))
+        toks = jnp.argmax(logits, axis=-1)[:, None]
+        out_tokens.append(toks)
+    jax.block_until_ready(toks)
+    t_dec = time.perf_counter() - t0
+
+    print(f"[lm] prefill {b}x{s}: {t_pre*1e3:.1f} ms  "
+          f"({b*s/t_pre:.0f} tok/s)")
+    print(f"[lm] decode {args.tokens} steps: {t_dec*1e3:.1f} ms  "
+          f"({b*args.tokens/t_dec:.1f} tok/s)")
+    sample = jnp.concatenate(out_tokens, axis=1)[0, :16]
+    print(f"[lm] sample continuation: {list(np.asarray(sample))}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="space", choices=["space", "lm"])
+    ap.add_argument("--model", default="baseline_net",
+                    choices=sorted(SPACE_MODELS))
+    ap.add_argument("--backend", default="flex",
+                    choices=["cpu", "flex", "accel"])
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    # lm mode
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8 KV cache (lm mode; §Perf B2)")
+    ap.add_argument("--w8", action="store_true",
+                    help="int8 PTQ weights (lm mode; §Perf B1)")
+    args = ap.parse_args(argv)
+    if args.mode == "space":
+        return serve_space(args)
+    return serve_lm(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every model input / state.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+device allocation. The same functions back the launcher's sharding setup,
+so dry-run and real launch cannot drift.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.nn import model as model_lib
+from repro.nn.dims import Dims
+from repro.optim.adamw import AdamW
+from repro.parallel.sharding import tree_shardings
+
+# logical axes for batch fields
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "embeds": ("batch", "seq", None),
+}
+
+
+def input_specs(cfg: ArchConfig, dims: Dims, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    train/prefill: the full batch. decode: one new token (or stub frame
+    embedding) per sequence.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out: Dict[str, Any] = {
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend == "text":
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, dims.d_model),
+                                                 jnp.bfloat16)
+        return out
+    # decode: single-token step against a seq_len-deep cache
+    if cfg.frontend == "text":
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    return {"token": jax.ShapeDtypeStruct((b, 1, dims.d_model), jnp.bfloat16)}
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Tuple]:
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        specs["labels"] = BATCH_AXES["labels"]
+        specs["tokens" if cfg.frontend == "text" else "embeds"] = (
+            BATCH_AXES["tokens"] if cfg.frontend == "text" else BATCH_AXES["embeds"])
+    else:
+        specs["token"] = ("batch", None) if cfg.frontend == "text" \
+            else ("batch", None, None)
+    return specs
+
+
+def abstract_train_state(cfg: ArchConfig, dims: Dims, optimizer: AdamW):
+    params = model_lib.abstract_model_params(cfg, dims)
+    return params, optimizer.abstract_init(params)
+
+
+def state_axes(cfg: ArchConfig, dims: Dims):
+    """Logical axes for params and optimizer state (state inherits params')."""
+    p_axes = model_lib.param_axes(cfg, dims)
+    opt_axes = {
+        "step": (),
+        "m": p_axes,
+        "v": p_axes,
+        "master": p_axes,
+    }
+    return p_axes, opt_axes
+
+
+def shardings_for_cell(cfg: ArchConfig, dims: Dims, shape: ShapeSpec,
+                       mesh, optimizer: AdamW, rules=None):
+    """(in_shardings-ready pytrees) for the cell's step function."""
+    from repro.optim.adamw import AdamWState
+
+    p_axes, opt_axes = state_axes(cfg, dims)
+    params_abs = model_lib.abstract_model_params(cfg, dims)
+    p_shard = tree_shardings(params_abs, p_axes, mesh, rules)
+
+    out: Dict[str, Any] = {"params": p_shard}
+    if shape.kind == "train":
+        opt_abs = optimizer.abstract_init(params_abs)
+        m = tree_shardings(opt_abs.m, p_axes, mesh, rules)
+        v = tree_shardings(opt_abs.v, p_axes, mesh, rules)
+        w = tree_shardings(opt_abs.master, p_axes, mesh, rules)
+        step_sh = tree_shardings(jax.ShapeDtypeStruct((), jnp.int32), (), mesh,
+                                 rules)
+        out["opt"] = AdamWState(step=step_sh, m=m, v=v, master=w)
+    if shape.kind == "decode":
+        cache_abs = model_lib.abstract_cache(cfg, dims, shape.global_batch,
+                                             shape.seq_len)
+        cache_ax = model_lib.cache_axes(cfg, dims, shape.global_batch,
+                                        shape.seq_len)
+        out["cache"] = tree_shardings(cache_abs, cache_ax, mesh, rules)
+    inputs_abs = input_specs(cfg, dims, shape)
+    in_ax = batch_axes(cfg, shape)
+    out["inputs"] = {k: tree_shardings(v, in_ax[k], mesh, rules)
+                     for k, v in inputs_abs.items()}
+    return out

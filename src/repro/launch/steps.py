@@ -1,0 +1,125 @@
+"""Canonical step functions: train_step / prefill_step / decode_step.
+
+These are the exact callables the dry-run lowers and the launcher jits —
+tests, benchmarks, and the 40-cell dry-run all exercise the same code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import model as model_lib
+from repro.nn.dims import Dims
+from repro.nn.layers import cross_entropy
+from repro.optim.adamw import AdamW, AdamWState
+from repro.parallel.sharding import constrain
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    attn_impl: str = "chunked"
+    remat: bool = True
+    remat_policy: str = "nothing"      # 'nothing' | 'dots' (§Perf cell D)
+    microbatch: Optional[int] = None   # accumulation chunks along batch
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ArchConfig, dims: Dims, opts: StepOptions):
+    def loss_fn(params, batch: Dict[str, jax.Array]) -> jax.Array:
+        inputs = batch["embeds"] if cfg.frontend == "embed" else batch["tokens"]
+        logits = model_lib.forward(
+            params, inputs, cfg, dims,
+            mode="train", attn_impl=opts.attn_impl, remat=opts.remat,
+            remat_policy=opts.remat_policy,
+        )
+        labels = batch["labels"]
+        # padded vocab tail never receives probability mass from labels
+        return cross_entropy(logits, labels, batch.get("valid"))
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, dims: Dims, optimizer: AdamW,
+                    opts: StepOptions = StepOptions()):
+    loss_fn = make_loss_fn(cfg, dims, opts)
+
+    def grads_of(params, batch):
+        if not opts.microbatch or opts.microbatch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        n = opts.microbatch
+        micro = jax.tree.map(
+            lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+        def acc(carry, mb):
+            loss_a, g_a = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_a + loss / n,
+                    jax.tree.map(lambda a, b: a + b / n, g_a, g)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss, grads), _ = jax.lax.scan(acc, zero, micro)
+        return loss, grads
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt.step.astype(jnp.float32)}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig, dims: Dims,
+                      opts: StepOptions = StepOptions(),
+                      s_max: Optional[int] = None):
+    def prefill_step(params, batch):
+        inputs = batch["embeds"] if cfg.frontend == "embed" else batch["tokens"]
+        logits, cache = model_lib.forward(
+            params, inputs, cfg, dims,
+            mode="prefill", s_max=s_max, attn_impl=opts.attn_impl, remat=False,
+        )
+        # next-token logits only — callers sample from the last position
+        return logits[:, -1, :], cache
+    return prefill_step
+
+
+def make_prefill_forward(cfg: ArchConfig, dims: Dims,
+                         opts: StepOptions = StepOptions()):
+    """Inference forward WITHOUT cache materialization — the prefill_32k
+    dry-run cell (batch scoring / filtering workloads)."""
+    def prefill_forward(params, batch):
+        inputs = batch["embeds"] if cfg.frontend == "embed" else batch["tokens"]
+        logits = model_lib.forward(
+            params, inputs, cfg, dims,
+            mode="train", attn_impl=opts.attn_impl, remat=False,
+        )
+        return logits[:, -1, :]
+    return prefill_forward
+
+
+def make_decode_step(cfg: ArchConfig, dims: Dims):
+    def decode_step(params, cache, token_or_embed, pos):
+        logits, cache = model_lib.decode(params, token_or_embed, cache, pos,
+                                         cfg, dims)
+        return logits[:, -1, :], cache
+    return decode_step

@@ -1,0 +1,154 @@
+"""Training launcher.
+
+Production shape: build the (pod, data, model) mesh, shard state with the
+logical rules, run the jitted train step under the StepGuard (async
+checkpoints, crash-resume, straggler detection). On this 1-CPU container
+it runs reduced configs end-to-end; on a pod slice the SAME code runs the
+full configs (the dry-run proves they compile at 512 chips).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import SHAPES_BY_NAME, get_arch, reduced
+from repro.data.pipeline import DataConfig, data_iterator, host_shard
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_axes, shardings_for_cell
+from repro.launch.steps import StepOptions, TrainState, make_train_step
+from repro.nn import model as model_lib
+from repro.nn.dims import compute_dims
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import StepGuard, detect_stragglers
+from repro.parallel.sharding import use_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    shape = SHAPES_BY_NAME[args.shape]
+
+    mesh = None
+    tp = 1
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        tp = mesh.shape["model"]
+    dims = compute_dims(cfg, tp=tp)
+
+    optimizer = AdamW(lr=cosine_schedule(args.lr, warmup=20,
+                                         total=max(args.steps, 100)))
+    opts = StepOptions(microbatch=args.microbatch)
+    train_step = make_train_step(cfg, dims, optimizer, opts)
+
+    key = jax.random.PRNGKey(0)
+    b = args.batch or shape.global_batch
+    s = args.seq or shape.seq_len
+
+    def build_state():
+        params = model_lib.init_params(cfg, dims, key)
+        return TrainState(params, optimizer.init(params))
+
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+    data = data_iterator(cfg, dims, shape, DataConfig(),
+                         batch_override=b, seq_override=s)
+
+    ctx = use_mesh(mesh) if mesh is not None else _null_ctx()
+    with ctx:
+        state = build_state()
+        start = 0
+        if args.ckpt_dir:
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                print(f"[resume] restoring step {last} from {args.ckpt_dir}")
+                state = restore(args.ckpt_dir, last, state)
+                start = last
+                data = data_iterator(cfg, dims, shape, DataConfig(),
+                                     start_step=last,
+                                     batch_override=b, seq_override=s)
+
+        step_times = {}
+
+        def on_metrics(step, metrics):
+            if step % args.log_every == 0 or step == start + 1:
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                dt = step_times.get("last", 0.0)
+                print(f"step {step:6d}  loss {loss:.4f}  gnorm {gn:.2f}  "
+                      f"{dt*1e3:.0f} ms/step", flush=True)
+            stragglers = detect_stragglers(
+                {f"host{i}": step_times.get("last", 0.0)
+                 for i in range(jax.process_count())})
+            if stragglers:
+                print(f"[straggler] {stragglers}")
+
+        import os
+        crash_at = int(os.environ.get("REPRO_CRASH_AT_STEP", "0")) or None
+        steps_done = {"n": start}
+
+        def timed_step(st, batch):
+            if crash_at is not None and steps_done["n"] + 1 >= crash_at:
+                # simulated node failure (examples/train_driver.py --crash-at);
+                # the StepGuard commits the last good state before re-raising.
+                raise RuntimeError(
+                    f"simulated node failure at step {crash_at}")
+            t0 = time.perf_counter()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            st, m = step_fn(st, batch)
+            jax.block_until_ready(m["loss"])
+            step_times["last"] = time.perf_counter() - t0
+            steps_done["n"] += 1
+            return st, m
+
+        if args.ckpt_dir:
+            guard = StepGuard(AsyncCheckpointer(args.ckpt_dir),
+                              save_every=args.save_every)
+            state, end = guard.run(state, timed_step, data,
+                                   args.steps, start_step=start,
+                                   on_metrics=on_metrics)
+        else:
+            end = start
+            for _ in range(args.steps):
+                state, metrics = timed_step(state, next(data))
+                end += 1
+                on_metrics(end, metrics)
+        print(f"[done] trained to step {end}")
+    return 0
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,47 @@
+"""Shared param init for op-graph models (He/LeCun init per op type)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.opgraph import Graph
+
+
+def init_graph_params(g: Graph, key: jax.Array
+                      ) -> Dict[str, Dict[str, jax.Array]]:
+    params: Dict[str, Dict[str, jax.Array]] = {}
+    for name in g.order:
+        node = g.nodes[name]
+        if node.op == "conv2d":
+            kh, kw = node.attrs["kernel"]
+            cin = g.nodes[node.inputs[0]].out_shape[-1]
+            cout = node.attrs["features"]
+            key, k1 = jax.random.split(key)
+            fan_in = kh * kw * cin
+            params[name] = {
+                "w": jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32)
+                * (2.0 / fan_in) ** 0.5,
+                "b": jnp.zeros((cout,), jnp.float32)}
+        elif node.op == "conv3d":
+            kd, kh, kw = node.attrs["kernel"]
+            cin = g.nodes[node.inputs[0]].out_shape[-1]
+            cout = node.attrs["features"]
+            key, k1 = jax.random.split(key)
+            fan_in = kd * kh * kw * cin
+            params[name] = {
+                "w": jax.random.normal(k1, (kd, kh, kw, cin, cout),
+                                       jnp.float32) * (2.0 / fan_in) ** 0.5,
+                "b": jnp.zeros((cout,), jnp.float32)}
+        elif node.op == "dense":
+            fin = int(np.prod(g.nodes[node.inputs[0]].out_shape))
+            fout = node.attrs["features"]
+            key, k1 = jax.random.split(key)
+            p = {"w": jax.random.normal(k1, (fin, fout), jnp.float32)
+                 * (1.0 / fin) ** 0.5}
+            if node.attrs.get("bias", True):
+                p["b"] = jnp.zeros((fout,), jnp.float32)
+            params[name] = p
+    return params

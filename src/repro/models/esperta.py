@@ -1,0 +1,91 @@
+"""ESPERTA / multi-ESPERTA — Solar Energetic Particle event prediction
+(Laurenza et al. 2009; Alberti et al. 2017).
+
+Each ESPERTA model is a 3-input logistic threshold unit over (flare
+heliolongitude, time-integrated soft X-ray flux, time-integrated ~1 MHz
+radio flux): p = sigmoid(w.x + b); warn = p > threshold. The paper's
+multi-ESPERTA packs SIX such models with different weights/thresholds in
+parallel behind a shared input — 24 params, ~60 ops, and the op mix
+(sigmoid + greater) is precisely what the DPU cannot run, forcing the
+flexible path.
+
+Weights/thresholds follow the published technique's regime split
+(six (w, b, thr) sets, one per heliolongitude/flux regime).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.opgraph import Graph
+
+N_MODELS = 6
+
+# per Laurenza et al.: logistic coefficients per regime (w_lon, w_sxr,
+# w_radio, bias) and decision threshold. Values set per the published
+# 10-minute-warning operating point.
+WEIGHTS = np.array([
+    [0.012, 1.10, 0.85, -2.10],
+    [0.010, 1.25, 0.70, -1.95],
+    [0.015, 0.95, 0.95, -2.30],
+    [0.008, 1.40, 0.60, -1.80],
+    [0.013, 1.05, 0.80, -2.05],
+    [0.011, 1.15, 0.75, -2.00],
+], np.float32)
+THRESHOLDS = np.array([0.50, 0.45, 0.55, 0.40, 0.50, 0.48], np.float32)
+
+
+def build_graph(n_models: int = N_MODELS) -> Graph:
+    g = Graph("multi_esperta")
+    x = g.input("features", (3,))
+    for m in range(n_models):
+        z = g.add("dense", [x], name=f"logit{m}", features=1)
+        p = g.add("sigmoid", [z], name=f"prob{m}")
+        w = g.add("greater", [p], name=f"warn{m}",
+                  threshold=float(THRESHOLDS[m]))
+        g.mark_output(p, w)
+    return g
+
+
+def build_single_graph(m: int = 0) -> Graph:
+    """One ESPERTA model (the paper's sequential original)."""
+    g = Graph(f"esperta_{m}")
+    x = g.input("features", (3,))
+    z = g.add("dense", [x], name="logit", features=1)
+    p = g.add("sigmoid", [z], name="prob")
+    w = g.add("greater", [p], name="warn", threshold=float(THRESHOLDS[m]))
+    g.mark_output(p, w)
+    return g
+
+
+def init_params(key: jax.Array = None) -> Dict[str, Dict[str, jax.Array]]:
+    del key  # fixed published weights, not trained
+    return {
+        f"logit{m}": {"w": jnp.asarray(WEIGHTS[m, :3][:, None]),
+                      "b": jnp.asarray(WEIGHTS[m, 3:4])}
+        for m in range(N_MODELS)
+    }
+
+
+def sequential_reference(inputs: Dict[str, jax.Array]) -> Dict[str, np.ndarray]:
+    """The paper's ORIGINAL formulation: six ESPERTA models invoked one
+    after another — the oracle multi-ESPERTA must match exactly."""
+    x = np.asarray(inputs["features"], np.float32)
+    out: Dict[str, np.ndarray] = {}
+    for m in range(N_MODELS):
+        z = float(x @ WEIGHTS[m, :3] + WEIGHTS[m, 3])
+        p = 1.0 / (1.0 + np.exp(-z))
+        out[f"prob{m}"] = np.asarray([p], np.float32)
+        out[f"warn{m}"] = np.asarray([p > THRESHOLDS[m]], np.float32)
+    return out
+
+
+def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    lon = jax.random.uniform(k1, (), minval=-90.0, maxval=90.0)
+    sxr = jax.random.uniform(k2, (), minval=0.5, maxval=3.0)   # log-integr.
+    radio = jax.random.uniform(k3, (), minval=0.3, maxval=2.5)
+    return {"features": jnp.stack([lon, sxr, radio]).astype(jnp.float32)}

@@ -1,0 +1,98 @@
+"""MMS Neural Networks — dayside plasma-region classifiers (Ekelund et al.
+2024; BaselineNet originally Olshevsky et al. 2021).
+
+Input: 32x16x32 3-D ion energy distribution from the FPI instrument;
+output: 4 classes (SW / IF / MSH / MSP). Three topologies:
+
+* BaselineNet — 3-D convs + FC (calibrated: 918,625 params vs paper
+  915,492; +0.34%, ~102 MOP vs 110.5 MOP).
+* ReducedNet  — pool-first + slim 3-D conv + FC (44,363 vs 44,624; -0.6%).
+* LogisticNet — pool + flatten + linear (8,196 — exact).
+
+The paper drops the final sigmoid (argmax-only classification) — so do we;
+3-D conv/pool is exactly the op class the DPU lacks, routing these to the
+flexible path (the paper's HLS).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opgraph import Graph
+from repro.models.common import init_graph_params
+
+INPUT_SHAPE = (32, 16, 32, 1)
+N_CLASSES = 4
+
+
+def build_logistic_graph() -> Graph:
+    g = Graph("logistic_net")
+    x = g.input("dist", INPUT_SHAPE)
+    x = g.add("maxpool3d", [x], name="pool", kernel=2)
+    x = g.add("flatten", [x], name="flatten")
+    y = g.add("dense", [x], name="head", features=N_CLASSES)
+    c = g.add("argmax", [y], name="region")
+    g.mark_output(y, c)
+    return g
+
+
+def build_reduced_graph() -> Graph:
+    g = Graph("reduced_net")
+    x = g.input("dist", INPUT_SHAPE)
+    x = g.add("maxpool3d", [x], name="pool0", kernel=2)
+    x = g.add("conv3d", [x], name="conv0", kernel=(3, 3, 3), features=4,
+              padding="SAME")
+    x = g.add("relu", [x], name="act0")
+    x = g.add("maxpool3d", [x], name="pool1", kernel=2)
+    x = g.add("flatten", [x], name="flatten")
+    x = g.add("dense", [x], name="fc1", features=43)
+    x = g.add("relu", [x], name="fc1_act")
+    y = g.add("dense", [x], name="head", features=N_CLASSES)
+    c = g.add("argmax", [y], name="region")
+    g.mark_output(y, c)
+    return g
+
+
+def build_baseline_graph() -> Graph:
+    g = Graph("baseline_net")
+    x = g.input("dist", INPUT_SHAPE)
+    x = g.add("conv3d", [x], name="conv0", kernel=(3, 3, 3), features=16,
+              padding="SAME")
+    x = g.add("relu", [x], name="act0")
+    x = g.add("maxpool3d", [x], name="pool0", kernel=2)
+    x = g.add("conv3d", [x], name="conv1", kernel=(3, 3, 3), features=48,
+              padding="SAME")
+    x = g.add("relu", [x], name="act1")
+    x = g.add("maxpool3d", [x], name="pool1", kernel=2)
+    x = g.add("flatten", [x], name="flatten")
+    x = g.add("dense", [x], name="fc1", features=73)
+    x = g.add("relu", [x], name="fc1_act")
+    y = g.add("dense", [x], name="head", features=N_CLASSES)
+    c = g.add("argmax", [y], name="region")
+    g.mark_output(y, c)
+    return g
+
+
+GRAPH_BUILDERS = {
+    "logistic_net": build_logistic_graph,
+    "reduced_net": build_reduced_graph,
+    "baseline_net": build_baseline_graph,
+}
+
+
+def init_params(name: str, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
+    return init_graph_params(GRAPH_BUILDERS[name](), key)
+
+
+def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
+    """A synthetic FPI distribution: anisotropic beam (solar-wind-like)
+    plus thermal background."""
+    k1, k2 = jax.random.split(key)
+    e, t, p = jnp.mgrid[0:32, 0:16, 0:32]
+    beam = jnp.exp(-((e - 10.0) ** 2 / 8.0 + (t - 8.0) ** 2 / 6.0
+                     + (p - 16.0) ** 2 / 10.0))
+    background = 0.05 * jax.random.uniform(k1, (32, 16, 32))
+    dist = (beam + background)[..., None]
+    return {"dist": dist.astype(jnp.float32)}

@@ -1,0 +1,56 @@
+"""VAE Encoder — probabilistic conv encoder for SHARP magnetogram tiles.
+
+128x256 RGB tiles -> 6-element latent (1:16,384 compression). Five
+stride-2 conv+ReLU stages, then mu / logvar heads; the sampling + exp tail
+is kept in the graph but is *flex-path only* (the paper executes exactly
+these two ops on the CPU because they don't map to the DPU).
+
+Channel widths are calibrated to the paper's Table I:
+396,940 params (paper: 395,692; +0.32%), ~85.6 MOP (paper: 83.4 MOP).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opgraph import Graph
+
+INPUT_SHAPE = (128, 256, 3)
+LATENT = 6
+CHANNELS = (8, 32, 96, 144, 144)
+
+
+def build_graph() -> Graph:
+    g = Graph("vae_encoder")
+    x = g.input("image", INPUT_SHAPE)
+    for i, c in enumerate(CHANNELS):
+        x = g.add("conv2d", [x], name=f"conv{i}", kernel=(3, 3), features=c,
+                  stride=2, padding="SAME", fused_relu=True)
+        x = g.add("relu", [x], name=f"relu{i}")
+    x = g.add("flatten", [x], name="flatten")
+    mu = g.add("dense", [x], name="mu", features=LATENT)
+    logvar = g.add("dense", [x], name="logvar", features=LATENT)
+    z = g.add("sample_normal", [mu, logvar], name="sample")
+    g.mark_output(mu, logvar, z)
+    return g
+
+
+def init_params(key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
+    from repro.models.common import init_graph_params
+    return init_graph_params(build_graph(), key)
+
+
+def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
+    """A synthetic active-region tile: bipolar gaussian blobs (sunspot pair)
+    on a noisy background — matches Fig 1's structure."""
+    k1, k2 = jax.random.split(key)
+    h, w, _ = INPUT_SHAPE
+    yy, xx = jnp.mgrid[0:h, 0:w]
+    cy, cx = h // 2, w // 2
+    pos = jnp.exp(-(((yy - cy) / 12.0) ** 2 + ((xx - cx + 30) / 18.0) ** 2))
+    neg = -jnp.exp(-(((yy - cy) / 15.0) ** 2 + ((xx - cx - 30) / 20.0) ** 2))
+    field = pos + neg + 0.05 * jax.random.normal(k1, (h, w))
+    img = jnp.stack([field, jnp.abs(field), 0.5 * field], axis=-1)
+    return {"image": img.astype(jnp.float32)}

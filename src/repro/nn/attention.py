@@ -1,0 +1,254 @@
+"""Grouped-query attention with RoPE, KV cache, and memory-bounded softmax.
+
+Three interchangeable implementations (``impl=``):
+
+* ``naive``   — materializes the full [.., S, S] score matrix. Reference.
+* ``chunked`` — lax.scan over query chunks; each step computes exact
+  softmax rows against the full key set, so peak memory is O(chunk × S)
+  instead of O(S²). This is the XLA-native "flash-style" path used by the
+  dry-run (the compiled artifact is honest HLO, not an interpreted kernel).
+* ``pallas``  — the Pallas flash-attention kernel from
+  ``repro.kernels.flash_attention`` (TPU target; interpret-mode on CPU).
+
+Decode attends one new token against a cached [B, S_max, Hkv, hd] KV.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.dims import Dims
+from repro.nn.layers import apply_rope
+from repro.nn.params import ParamSpec
+from repro.parallel.sharding import constrain, sp_gather_seq, tp_proj_scatter
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    d, hq, hkv, hd = dims.d_model, dims.num_heads, dims.num_kv_heads, dims.head_dim
+    spec = {
+        "w_q": ParamSpec((d, hq, hd), ("fsdp", "heads", None)),
+        "w_k": ParamSpec((d, hkv, hd), ("fsdp", "kv_heads", None)),
+        "w_v": ParamSpec((d, hkv, hd), ("fsdp", "kv_heads", None)),
+        "w_o": ParamSpec((hq, hd, d), ("heads", None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        spec["b_q"] = ParamSpec((hq, hd), ("heads", None), init="zeros")
+        spec["b_k"] = ParamSpec((hkv, hd), ("kv_heads", None), init="zeros")
+        spec["b_v"] = ParamSpec((hkv, hd), ("kv_heads", None), init="zeros")
+    return spec
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    # SP -> TP transition: all-gather the sequence dim ONCE on the [B,S,D]
+    # activation (Megatron-SP style), so the three projections read gathered
+    # x and emit head-sharded outputs with no further collectives.
+    # (§Perf A2: one gather instead of three; A3: explicit bf16 shard_map
+    # all_gather so XLA cannot promote the wire dtype to f32.)
+    x = sp_gather_seq(x)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Cores
+# ---------------------------------------------------------------------------
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def _attend_naive(q, k, v, scale: float) -> jax.Array:
+    b, sq, n_kv, g, hd = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, n_kv * g, hd)
+
+
+def _attend_chunked(q, k, v, scale: float, chunk: int) -> jax.Array:
+    """Exact causal attention, O(chunk*S) memory, scan over query chunks."""
+    b, s, n_kv, g, hd = q.shape
+    n_chunks = s // chunk
+    qc = q.reshape(b, n_chunks, chunk, n_kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(s)
+
+    def step(_, args):
+        i, q_i = args                                       # q_i: [b,chunk,kv,g,hd]
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k).astype(jnp.float32) * scale
+        qpos = i * chunk + jnp.arange(chunk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+        return None, out
+
+    _, outs = jax.lax.scan(step, None, (jnp.arange(n_chunks), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, n_kv * g, hd)
+    return out
+
+
+def multihead_attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    dims: Dims,
+    positions: jax.Array,
+    impl: str = "chunked",
+    chunk: int = 512,
+    return_kv: bool = False,
+    s_max: Optional[int] = None,
+):
+    """Full (train/prefill) causal self-attention. x: [B, S, D].
+
+    With ``return_kv``, also returns the rope'd K/V (padded to ``s_max``)
+    so prefill can hand a cache to the decode loop."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    qg = _group(q, dims.num_kv_heads)
+    scale = dims.head_dim ** -0.5
+    s = x.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True)
+    elif impl == "naive" or s <= chunk:
+        out = _attend_naive(qg, k, v, scale)
+    elif impl == "chunked":
+        out = _attend_chunked(qg, k, v, scale, min(chunk, s))
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    out = constrain(out, "batch", None, "heads", None)
+    # TP -> SP: einsum + psum_scatter in one shard_map — an explicit bf16
+    # reduce-scatter instead of the partitioner's f32 all-reduce (§Perf A3).
+    y = tp_proj_scatter(out, params["w_o"], "bshk,hkd->bsd",
+                        ("batch", None, "heads", None), w_sharded_dim=0)
+    if not return_kv:
+        return y
+    s_max = s_max or s
+    pad = s_max - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.kv_quant:
+        from repro.core.lm_quant import quantize_kv
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        return y, {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, s_max: int, dims: Dims,
+                  dtype=jnp.bfloat16, quant: bool = False) -> dict:
+    from repro.nn.params import build_params
+    return build_params(kv_cache_spec(batch, s_max, dims, dtype, quant),
+                        jax.random.PRNGKey(0))
+
+
+def kv_cache_spec(batch: int, s_max: int, dims: Dims, dtype=jnp.bfloat16,
+                  quant: bool = False) -> dict:
+    shape = (batch, s_max, dims.num_kv_heads, dims.head_dim)
+    if quant:
+        # INT8 codes + per-(b, pos, head) f32 scales (§Perf B2): halves the
+        # decode-dominating cache reads vs bf16.
+        sshape = (batch, s_max, dims.num_kv_heads)
+        ax = ("batch", None, "kv_heads", None)
+        sax = ("batch", None, "kv_heads")
+        return {
+            "k_q": ParamSpec(shape, ax, init="zeros", dtype=jnp.int8),
+            "k_s": ParamSpec(sshape, sax, init="zeros", dtype=jnp.float32),
+            "v_q": ParamSpec(shape, ax, init="zeros", dtype=jnp.int8),
+            "v_s": ParamSpec(sshape, sax, init="zeros", dtype=jnp.float32),
+        }
+    return {
+        "k": ParamSpec(shape, ("batch", None, "kv_heads", None), dtype=dtype),
+        "v": ParamSpec(shape, ("batch", None, "kv_heads", None), dtype=dtype),
+    }
+
+
+def decode_attention(
+    params: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    dims: Dims,
+) -> Tuple[jax.Array, dict]:
+    """One-token step. x: [B, 1, D]; cache k/v: [B, S_max, Hkv, hd];
+    pos: scalar int32 — index the new token is written at (attends 0..pos)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    if cfg.kv_quant:
+        # §Perf B2: int8 cache — update codes+scales in place, attend on the
+        # dequantized view (fused dequant+dot on TPU; HBM reads are 1 B/elem)
+        from repro.core.lm_quant import dequantize_kv, quantize_kv
+        kq_new, ks_new = quantize_kv(k_new)
+        vq_new, vs_new = quantize_kv(v_new)
+        new_cache = {
+            "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq_new,
+                                                (0, pos, 0, 0)),
+            "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks_new,
+                                                (0, pos, 0)),
+            "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq_new,
+                                                (0, pos, 0, 0)),
+            "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs_new,
+                                                (0, pos, 0)),
+        }
+        k = dequantize_kv(new_cache["k_q"], new_cache["k_s"], x.dtype)
+        v = dequantize_kv(new_cache["v_q"], new_cache["v_s"], x.dtype)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+        return _decode_core(params, x, q, k, v, pos, dims), new_cache
+
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return _decode_core(params, x, q, k, v, pos, dims), {"k": k, "v": v}
+
+
+def _decode_core(params, x, q, k, v, pos, dims) -> jax.Array:
+    b = x.shape[0]
+    qg = _group(q, dims.num_kv_heads)[:, 0]                  # [B, kv, g, hd]
+    scale = dims.head_dim ** -0.5
+    s_max = k.shape[1]
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k).astype(jnp.float32) * scale
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
+    out = out.reshape(b, 1, dims.num_heads, dims.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])

@@ -1,0 +1,123 @@
+"""Residual blocks per family, in both full-sequence and decode forms.
+
+A *group* is the scan unit (see model.py): dense/ssm groups hold one block,
+moe groups hold ``layer_period`` blocks (dense FFN subs + one MoE block),
+hybrid groups hold ``hybrid_attn_period`` ssm blocks followed by one
+application of the weight-tied shared attention block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn_mod
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+from repro.nn.dims import Dims
+from repro.nn.layers import mlp, mlp_spec, norm_spec, rmsnorm
+from repro.nn.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+def _res(x):
+    return constrain(x, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Dense (attention + SwiGLU) block
+# ---------------------------------------------------------------------------
+
+
+def dense_block_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    return {
+        "ln1": norm_spec(dims.d_model),
+        "attn": attn_mod.attn_spec(cfg, dims),
+        "ln2": norm_spec(dims.d_model),
+        "mlp": mlp_spec(dims),
+    }
+
+
+def dense_block(params, x, cfg, dims, positions, attn_impl="chunked",
+                return_cache=False, s_max=None):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a = attn_mod.multihead_attention(params["attn"], h, cfg, dims, positions,
+                                     impl=attn_impl, return_kv=return_cache,
+                                     s_max=s_max)
+    if return_cache:
+        a, kv = a
+    x = _res(x + a)
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    x = _res(x + mlp(params["mlp"], h))
+    return (x, kv) if return_cache else x
+
+
+def dense_block_decode(params, x, cache, pos, cfg, dims):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a, cache = attn_mod.decode_attention(params["attn"], h, cache, pos, cfg, dims)
+    x = x + a
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    x = x + mlp(params["mlp"], h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# MoE block (dense attention + routed FFN)
+# ---------------------------------------------------------------------------
+
+
+def moe_block_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    return {
+        "ln1": norm_spec(dims.d_model),
+        "attn": attn_mod.attn_spec(cfg, dims),
+        "ln2": norm_spec(dims.d_model),
+        "moe": moe_mod.moe_spec(cfg, dims),
+    }
+
+
+def moe_block(params, x, cfg, dims, positions, attn_impl="chunked",
+              return_cache=False, s_max=None):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a = attn_mod.multihead_attention(params["attn"], h, cfg, dims, positions,
+                                     impl=attn_impl, return_kv=return_cache,
+                                     s_max=s_max)
+    if return_cache:
+        a, kv = a
+    x = _res(x + a)
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    x = _res(x + moe_mod.moe_ffn(params["moe"], h, cfg, dims))
+    return (x, kv) if return_cache else x
+
+
+def moe_block_decode(params, x, cache, pos, cfg, dims):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a, cache = attn_mod.decode_attention(params["attn"], h, cache, pos, cfg, dims)
+    x = x + a
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    x = x + moe_mod.moe_ffn(params["moe"], h, cfg, dims)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# SSM block
+# ---------------------------------------------------------------------------
+
+
+def ssm_block_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    return {"ln": norm_spec(dims.d_model), "ssm": ssm_mod.ssm_spec(cfg, dims)}
+
+
+def ssm_block(params, x, cfg, dims, return_cache=False):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    if return_cache:
+        y, cache = ssm_mod.ssm_mixer(params["ssm"], h, cfg, dims, return_cache=True)
+        return _res(x + y), cache
+    return _res(x + ssm_mod.ssm_mixer(params["ssm"], h, cfg, dims))
+
+
+def ssm_block_decode(params, x, cache, cfg, dims):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    y, cache = ssm_mod.ssm_decode_step(params["ssm"], h, cache, cfg, dims)
+    return x + y, cache

@@ -1,0 +1,114 @@
+"""Basic transformer layers: RMSNorm, SwiGLU MLP, embeddings, RoPE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.dims import Dims
+from repro.nn.params import ParamSpec
+from repro.parallel.sharding import constrain, sp_gather_seq, tp_proj_scatter
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(dims: Dims) -> dict:
+    d, f = dims.d_model, dims.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("fsdp", "ffn")),
+        "w_up": ParamSpec((d, f), ("fsdp", "ffn")),
+        "w_down": ParamSpec((f, d), ("ffn", "fsdp")),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    # SP gather once (explicit bf16), TP-sharded gate/up, explicit
+    # reduce-scatter down-projection (§Perf A2+A3).
+    x = sp_gather_seq(x)
+    h = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, "batch", None, "ffn")
+    return tp_proj_scatter(h, params["w_down"], "bsf,fd->bsd",
+                           ("batch", None, "ffn"), w_sharded_dim=0)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(dims: Dims, tie: bool) -> dict:
+    out = {"embedding": ParamSpec((dims.vocab, dims.d_model), ("vocab", "fsdp"))}
+    if not tie:
+        out["lm_head"] = ParamSpec((dims.d_model, dims.vocab), ("fsdp", "vocab"))
+    return out
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def lm_logits(params: dict, x: jax.Array) -> jax.Array:
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embedding"].T
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim//2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [B, S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (fp32, label-gather formulation — never materializes
+# a one-hot over the padded vocab)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  valid: Optional[jax.Array] = None) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if valid is None:
+        return jnp.mean(nll)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

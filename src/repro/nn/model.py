@@ -1,0 +1,380 @@
+"""Model assembly: stacked layer groups scanned with ``jax.lax.scan``.
+
+Scanning over a *stacked* parameter pytree keeps HLO size O(1) in depth —
+a 60-layer 34B model lowers in seconds, which is what makes the 40-cell
+multi-pod dry-run tractable on this host.
+
+The scan unit is a *group* (see blocks.py):
+  dense   — 1 dense block per group, L groups
+  moe     — ``layer_period`` blocks per group (period-1 dense FFN + 1 MoE)
+  ssm     — 1 Mamba2 block per group
+  hybrid  — ``hybrid_attn_period`` ssm blocks + one application of the
+            weight-tied shared attention block; tail layers scanned after
+
+Caches mirror the group structure so prefill output == decode input.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import blocks
+from repro.nn.attention import kv_cache_spec
+from repro.nn.dims import Dims, compute_dims
+from repro.nn.layers import cross_entropy, embed, embed_spec, lm_logits, norm_spec, rmsnorm
+from repro.nn.params import (ParamSpec, abstract_params, build_axes,
+                             build_params, stack)
+from repro.nn.ssm import ssm_cache_spec
+from repro.parallel.sharding import constrain
+
+# Activation-checkpoint policies (§Perf cell D): 'nothing' = full remat
+# (recompute everything in bwd — smallest live set, most recompute traffic);
+# 'dots' = save matmul outputs (no dot recompute — less HBM traffic and
+# FLOPs in bwd, bigger live set).
+REMAT_POLICIES = {
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def remat_policy_fn(name: str):
+    return REMAT_POLICIES[name]()
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+
+def group_layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, blocks_per_group, n_tail_ssm_layers)."""
+    if cfg.family == "dense":
+        return cfg.num_layers, 1, 0
+    if cfg.family == "moe":
+        p = cfg.moe.layer_period
+        assert cfg.num_layers % p == 0, "moe period must divide num_layers"
+        return cfg.num_layers // p, p, 0
+    if cfg.family == "ssm":
+        return cfg.num_layers, 1, 0
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_attn_period
+        return cfg.num_layers // p, p, cfg.num_layers % p
+    raise ValueError(cfg.family)
+
+
+def _group_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    if cfg.family == "dense":
+        return blocks.dense_block_spec(cfg, dims)
+    if cfg.family == "moe":
+        p = cfg.moe.layer_period
+        spec: Dict[str, Any] = {"moe": blocks.moe_block_spec(cfg, dims)}
+        if p > 1:
+            spec["subs"] = stack(blocks.dense_block_spec(cfg, dims), p - 1)
+        return spec
+    if cfg.family == "ssm":
+        return blocks.ssm_block_spec(cfg, dims)
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_attn_period
+        return {"ssm_subs": stack(blocks.ssm_block_spec(cfg, dims), p)}
+    raise ValueError(cfg.family)
+
+
+def model_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    n_groups, _, tail = group_layout(cfg)
+    spec: Dict[str, Any] = {
+        "embed": embed_spec(dims, cfg.tie_embeddings),
+        "groups": stack(_group_spec(cfg, dims), n_groups),
+        "final_norm": norm_spec(dims.d_model),
+    }
+    if cfg.family == "hybrid":
+        spec["shared_attn"] = blocks.dense_block_spec(cfg, dims)
+        if tail:
+            spec["tail"] = stack(blocks.ssm_block_spec(cfg, dims), tail)
+    return spec
+
+
+def init_params(cfg: ArchConfig, dims: Dims, key: jax.Array):
+    return build_params(model_spec(cfg, dims), key)
+
+
+def param_axes(cfg: ArchConfig, dims: Dims):
+    return build_axes(model_spec(cfg, dims))
+
+
+def abstract_model_params(cfg: ArchConfig, dims: Dims):
+    return abstract_params(model_spec(cfg, dims))
+
+
+# ---------------------------------------------------------------------------
+# Cache layout (mirrors groups; scanned together with params in decode)
+# ---------------------------------------------------------------------------
+
+
+def group_cache_spec(cfg: ArchConfig, dims: Dims, batch: int, s_max: int):
+    """Cache spec for ONE scan group (the per-group dry-run probes this)."""
+    _, p, _ = group_layout(cfg)
+    if cfg.family == "dense":
+        return kv_cache_spec(batch, s_max, dims, quant=cfg.kv_quant)
+    if cfg.family == "moe":
+        g = {"moe": kv_cache_spec(batch, s_max, dims, quant=cfg.kv_quant)}
+        if p > 1:
+            g["subs"] = stack(
+                kv_cache_spec(batch, s_max, dims, quant=cfg.kv_quant), p - 1)
+        return g
+    if cfg.family == "ssm":
+        return ssm_cache_spec(batch, cfg, dims)
+    if cfg.family == "hybrid":
+        return {
+            "ssm_subs": stack(ssm_cache_spec(batch, cfg, dims), p),
+            "attn": kv_cache_spec(batch, s_max, dims, quant=cfg.kv_quant),
+        }
+    raise ValueError(cfg.family)
+
+
+def cache_spec(cfg: ArchConfig, dims: Dims, batch: int, s_max: int) -> dict:
+    n_groups, p, tail = group_layout(cfg)
+    g = group_cache_spec(cfg, dims, batch, s_max)
+    spec: Dict[str, Any] = {"groups": stack(g, n_groups)}
+    if cfg.family == "hybrid" and tail:
+        spec["tail"] = stack(ssm_cache_spec(batch, cfg, dims), tail)
+    return spec
+
+
+def init_cache(cfg: ArchConfig, dims: Dims, batch: int, s_max: int):
+    zeroed = jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.logical, init="zeros", dtype=s.dtype),
+        cache_spec(cfg, dims, batch, s_max),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return build_params(zeroed, jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ArchConfig, dims: Dims, batch: int, s_max: int):
+    return abstract_params(cache_spec(cfg, dims, batch, s_max))
+
+
+def cache_axes(cfg: ArchConfig, dims: Dims, batch: int, s_max: int):
+    return build_axes(cache_spec(cfg, dims, batch, s_max))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    inputs: jax.Array,              # tokens [B,S] int32 | embeds [B,S,D]
+    cfg: ArchConfig,
+    dims: Dims,
+    *,
+    mode: str = "train",            # train | prefill
+    s_max: Optional[int] = None,    # cache capacity for prefill
+    attn_impl: str = "chunked",
+    remat: bool = True,
+    remat_policy: str = "nothing",
+):
+    """Returns logits [B,S,V] (and the cache pytree when mode='prefill')."""
+    want_cache = mode == "prefill"
+    if cfg.frontend == "text":
+        x = embed(params["embed"], inputs)
+    else:
+        x = inputs                                   # stub frontend: embeddings
+    b, s = x.shape[:2]
+    s_max = s_max or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, "batch", "seq", None)
+
+    if cfg.family == "hybrid":
+        x, group_caches = _hybrid_forward(params, x, cfg, dims, positions,
+                                          attn_impl, want_cache, s_max, remat,
+                                          remat_policy)
+    else:
+        def group_step(x, gp):
+            return _group_forward(gp, x, cfg, dims, positions, attn_impl,
+                                  want_cache, s_max)
+
+        step = group_step
+        if remat and not want_cache:
+            step = jax.checkpoint(group_step, policy=remat_policy_fn(remat_policy))
+
+        x, group_caches = jax.lax.scan(step, x, params["groups"])
+
+    tail_caches = None
+    if cfg.family == "hybrid" and "tail" in params:
+        def tail_step(x, lp):
+            if want_cache:
+                x, c = blocks.ssm_block(lp, x, cfg, dims, return_cache=True)
+                return x, c
+            return blocks.ssm_block(lp, x, cfg, dims), None
+        tstep = tail_step if want_cache or not remat else jax.checkpoint(
+            tail_step, policy=remat_policy_fn(remat_policy))
+        x, tail_caches = jax.lax.scan(tstep, x, params["tail"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x)
+    logits = constrain(logits, "batch", "seq", None)
+    if not want_cache:
+        return logits
+    cache = {"groups": group_caches}
+    if tail_caches is not None:
+        cache["tail"] = tail_caches
+    return logits, cache
+
+
+def _group_forward(gp, x, cfg, dims, positions, attn_impl, want_cache, s_max):
+    """One scan step. Returns (x, caches-or-None)."""
+    if cfg.family == "dense":
+        if want_cache:
+            x, kv = blocks.dense_block(gp, x, cfg, dims, positions, attn_impl,
+                                       return_cache=True, s_max=s_max)
+            return x, kv
+        return blocks.dense_block(gp, x, cfg, dims, positions, attn_impl), None
+
+    if cfg.family == "moe":
+        caches: Dict[str, Any] = {}
+        if "subs" in gp:
+            sub_caches = []
+            p_minus_1 = jax.tree.leaves(gp["subs"])[0].shape[0]
+            for j in range(p_minus_1):
+                sub = jax.tree.map(lambda a: a[j], gp["subs"])
+                if want_cache:
+                    x, kv = blocks.dense_block(sub, x, cfg, dims, positions,
+                                               attn_impl, return_cache=True,
+                                               s_max=s_max)
+                    sub_caches.append(kv)
+                else:
+                    x = blocks.dense_block(sub, x, cfg, dims, positions, attn_impl)
+            if want_cache:
+                caches["subs"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *sub_caches)
+        if want_cache:
+            x, kv = blocks.moe_block(gp["moe"], x, cfg, dims, positions,
+                                     attn_impl, return_cache=True, s_max=s_max)
+            caches["moe"] = kv
+            return x, caches
+        return blocks.moe_block(gp["moe"], x, cfg, dims, positions, attn_impl), None
+
+    if cfg.family == "ssm":
+        if want_cache:
+            return blocks.ssm_block(gp, x, cfg, dims, return_cache=True)
+        return blocks.ssm_block(gp, x, cfg, dims), None
+
+    raise ValueError(cfg.family)  # hybrid is handled by _hybrid_forward
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def decode(
+    params: dict,
+    token_or_embed: jax.Array,      # [B,1] int32 | [B,1,D]
+    cache: dict,
+    pos: jax.Array,                 # scalar int32 — write index
+    cfg: ArchConfig,
+    dims: Dims,
+):
+    """One decode step. Returns (logits [B,1,V], new cache)."""
+    if cfg.frontend == "text":
+        x = embed(params["embed"], token_or_embed)
+    else:
+        x = token_or_embed
+    x = constrain(x, "batch", None, None)
+
+    shared = params.get("shared_attn")
+
+    def group_step(x, inp):
+        gp, gc = inp
+        return _group_decode(gp, gc, x, pos, cfg, dims, shared)
+
+    x, new_group_caches = jax.lax.scan(group_step, x,
+                                       (params["groups"], cache["groups"]))
+    new_cache = {"groups": new_group_caches}
+
+    if cfg.family == "hybrid" and "tail" in params:
+        def tail_step(x, inp):
+            lp, lc = inp
+            return blocks.ssm_block_decode(lp, x, lc, cfg, dims)
+        x, new_tail = jax.lax.scan(tail_step, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x)
+    return logits, new_cache
+
+
+def _group_decode(gp, gc, x, pos, cfg, dims, shared):
+    if cfg.family == "dense":
+        return blocks.dense_block_decode(gp, x, gc, pos, cfg, dims)
+    if cfg.family == "moe":
+        new_c: Dict[str, Any] = {}
+        if "subs" in gp:
+            p_minus_1 = jax.tree.leaves(gp["subs"])[0].shape[0]
+            subs_new = []
+            for j in range(p_minus_1):
+                sub = jax.tree.map(lambda a: a[j], gp["subs"])
+                subc = jax.tree.map(lambda a: a[j], gc["subs"])
+                x, c = blocks.dense_block_decode(sub, x, subc, pos, cfg, dims)
+                subs_new.append(c)
+            new_c["subs"] = jax.tree.map(lambda *xs: jnp.stack(xs), *subs_new)
+        x, c = blocks.moe_block_decode(gp["moe"], x, gc["moe"], pos, cfg, dims)
+        new_c["moe"] = c
+        return x, new_c
+    if cfg.family == "ssm":
+        return blocks.ssm_block_decode(gp, x, gc, cfg, dims)
+    if cfg.family == "hybrid":
+        p = jax.tree.leaves(gp["ssm_subs"])[0].shape[0]
+        ssm_new = []
+        for j in range(p):
+            sub = jax.tree.map(lambda a: a[j], gp["ssm_subs"])
+            subc = jax.tree.map(lambda a: a[j], gc["ssm_subs"])
+            x, c = blocks.ssm_block_decode(sub, x, subc, cfg, dims)
+            ssm_new.append(c)
+        x, attn_c = blocks.dense_block_decode(shared, x, gc["attn"], pos, cfg, dims)
+        return x, {"ssm_subs": jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_new),
+                   "attn": attn_c}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid full-sequence forward needs the shared block in closure, so the
+# generic scan above delegates here.
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_forward(params, x, cfg, dims, positions, attn_impl, want_cache,
+                    s_max, remat, remat_policy="nothing"):
+    shared = params["shared_attn"]
+    p = cfg.hybrid_attn_period
+
+    def group_step(x, gp):
+        caches: Dict[str, Any] = {}
+        ssm_caches = []
+        for j in range(p):
+            sub = jax.tree.map(lambda a: a[j], gp["ssm_subs"])
+            if want_cache:
+                x_new, c = blocks.ssm_block(sub, x, cfg, dims, return_cache=True)
+                x = x_new
+                ssm_caches.append(c)
+            else:
+                x = blocks.ssm_block(sub, x, cfg, dims)
+        if want_cache:
+            x, kv = blocks.dense_block(shared, x, cfg, dims, positions,
+                                       attn_impl, return_cache=True, s_max=s_max)
+            caches["ssm_subs"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                              *ssm_caches)
+            caches["attn"] = kv
+            return x, caches
+        x = blocks.dense_block(shared, x, cfg, dims, positions, attn_impl)
+        return x, None
+
+    step = group_step
+    if remat and not want_cache:
+        step = jax.checkpoint(group_step, policy=remat_policy_fn(remat_policy))
+    return jax.lax.scan(step, x, params["groups"])

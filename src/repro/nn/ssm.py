@@ -1,0 +1,278 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+Train/prefill use the chunked SSD algorithm (arXiv:2405.21060): intra-chunk
+terms are dense matmuls (MXU-friendly — this is the whole point of SSD),
+inter-chunk terms are a short ``lax.scan`` over chunk states. Decode is the
+O(1)-state recurrence, which is what makes the long_500k cell tractable.
+
+Per head h (H heads, head_dim P, state N):
+    state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t + D_h * x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.dims import Dims
+from repro.nn.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def ssm_spec(cfg: ArchConfig, dims: Dims) -> dict:
+    s = cfg.ssm
+    d, di, h, n = dims.d_model, dims.d_inner, dims.ssm_heads, s.state_dim
+    w = s.conv_width
+    return {
+        "w_z": ParamSpec((d, di), ("fsdp", "ffn")),
+        "w_x": ParamSpec((d, di), ("fsdp", "ffn")),
+        "w_B": ParamSpec((d, n), ("fsdp", None)),
+        "w_C": ParamSpec((d, n), ("fsdp", None)),
+        "w_dt": ParamSpec((d, h), ("fsdp", "ssm_heads")),
+        "conv_x": ParamSpec((w, di), (None, "ffn"), scale=0.5),
+        "conv_B": ParamSpec((w, n), (None, None), scale=0.5),
+        "conv_C": ParamSpec((w, n), (None, None), scale=0.5),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "gate_norm": ParamSpec((di,), ("ffn",), init="ones"),
+        "w_out": ParamSpec((di, d), ("ffn", "fsdp")),
+    }
+
+
+def ssm_cache_spec(batch: int, cfg: ArchConfig, dims: Dims,
+                   dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    return {
+        # last (conv_width - 1) pre-activation inputs of x / B / C streams
+        "conv_x": ParamSpec((batch, s.conv_width - 1, dims.d_inner),
+                            ("batch", None, "ffn"), dtype=dtype),
+        "conv_B": ParamSpec((batch, s.conv_width - 1, s.state_dim),
+                            ("batch", None, None), dtype=dtype),
+        "conv_C": ParamSpec((batch, s.conv_width - 1, s.state_dim),
+                            ("batch", None, None), dtype=dtype),
+        "state": ParamSpec((batch, dims.ssm_heads, s.head_dim, s.state_dim),
+                           ("batch", "ssm_heads", None, None), dtype=jnp.float32),
+    }
+
+
+def init_ssm_cache(batch: int, cfg: ArchConfig, dims: Dims, dtype=jnp.bfloat16):
+    from repro.nn.params import build_params
+    return build_params(
+        jax.tree.map(
+            lambda p: ParamSpec(p.shape, p.logical, init="zeros", dtype=p.dtype),
+            ssm_cache_spec(batch, cfg, dims, dtype),
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        ),
+        jax.random.PRNGKey(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B, S, C], w [W, C] -> [B, S, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: unrolled shifts beat a gather here
+        out = out + pad[:, i: i + x.shape[1], :] * w[i]
+    return out
+
+
+def _conv_step(cache: jax.Array, x_t: jax.Array, w: jax.Array):
+    """One-token causal conv. cache [B, W-1, C], x_t [B, C]."""
+    win = jnp.concatenate([cache, x_t[:, None, :]], axis=1)        # [B, W, C]
+    y = jnp.einsum("bwc,wc->bc", win, w)
+    return y, win[:, 1:, :]
+
+
+def _dt_activation(dt_raw: jax.Array, dt_bias: jax.Array) -> jax.Array:
+    return jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,        # [B, S, H, P]   (fp32-ish values; any float dtype)
+    B_: jax.Array,       # [B, S, N]
+    C_: jax.Array,       # [B, S, N]
+    dt: jax.Array,       # [B, S, H]      (already softplus'd, fp32)
+    A: jax.Array,        # [H]            (negative, fp32)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, H, P], final_state [B, H, P, N])."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    if s % chunk:
+        # largest divisor of s <= chunk (keeps the algorithm exact for
+        # odd lengths; production shapes are multiples of the chunk size)
+        chunk = next(c for c in range(min(chunk, s), 0, -1) if s % c == 0)
+    nc, q = s // chunk, chunk
+
+    xr = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    Br = B_.astype(jnp.float32).reshape(b, nc, q, n)
+    Cr = C_.astype(jnp.float32).reshape(b, nc, q, n)
+    dtr = dt.reshape(b, nc, q, h)
+
+    a = dtr * A                                   # [b,nc,q,h] log-decay
+    cum = jnp.cumsum(a, axis=2)                   # inclusive cumsum
+
+    # --- intra-chunk (dense, MXU-shaped) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)              # [b,nc,i,j]
+    M = scores[..., None] * L * dtr[:, :, None, :, :]           # [b,nc,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xr)
+
+    # --- chunk boundary states ---
+    suffix = jnp.exp(cum[:, :, -1:, :] - cum)                   # [b,nc,q,h]
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", suffix * dtr, Br, xr)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [b,nc,h]
+
+    # --- inter-chunk recurrence ---
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        s_c, dec = inp                                          # [b,h,p,n], [b,h]
+        new = carry * dec[:, :, None, None] + s_c
+        return new, carry                                       # emit state BEFORE chunk
+
+    final, prevs = jax.lax.scan(
+        step, init_state,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    # prevs: [nc, b, h, p, n] — state entering each chunk
+    y_inter = jnp.einsum("bcin,cbhpn->bcihp", Cr, prevs) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+
+def ssm_mixer(
+    params: dict,
+    x: jax.Array,            # [B, S, D]
+    cfg: ArchConfig,
+    dims: Dims,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba2 block core (no residual/norm — block adds those)."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    h, p, n = dims.ssm_heads, s_cfg.head_dim, s_cfg.state_dim
+
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xs = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    Bs = jnp.einsum("bsd,dn->bsn", x, params["w_B"])
+    Cs = jnp.einsum("bsd,dn->bsn", x, params["w_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+
+    xs_pre, Bs_pre, Cs_pre = xs, Bs, Cs       # pre-conv streams (cache tail)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"]).astype(jnp.float32))
+    Bs = jax.nn.silu(_causal_conv(Bs, params["conv_B"]).astype(jnp.float32))
+    Cs = jax.nn.silu(_causal_conv(Cs, params["conv_C"]).astype(jnp.float32))
+
+    dt = _dt_activation(dt_raw, params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xs.reshape(b, s, h, p)
+    xh = constrain(xh, "batch", None, "ssm_heads", None)
+    # On TPU the Pallas SSD kernel keeps the [P,N] state and the [Q,Q]
+    # decay masks VMEM-resident; the XLA path is the CPU/dry-run lowering.
+    from repro.kernels import ops as kops
+    if kops.on_tpu():
+        y, final_state = kops.ssd(xh, Bs, Cs, dt, A,
+                                  chunk=min(s_cfg.chunk_size, s))
+    else:
+        y, final_state = ssd_chunked(xh, Bs, Cs, dt, A,
+                                     chunk=min(s_cfg.chunk_size, s))
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, dims.d_inner).astype(x.dtype)
+
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    y = y * params["gate_norm"] * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    if not return_cache:
+        return out
+    w = s_cfg.conv_width
+    cache = {
+        "conv_x": xs_pre[:, s - (w - 1):, :],
+        "conv_B": Bs_pre[:, s - (w - 1):, :],
+        "conv_C": Cs_pre[:, s - (w - 1):, :],
+        "state": final_state,
+    }
+    return out, cache
+
+
+def ssm_decode_step(
+    params: dict,
+    x: jax.Array,            # [B, 1, D]
+    cache: dict,
+    cfg: ArchConfig,
+    dims: Dims,
+):
+    """O(1) recurrent step; returns (y [B,1,D], new cache)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    h, p, n = dims.ssm_heads, s_cfg.head_dim, s_cfg.state_dim
+    xt = x[:, 0, :]
+
+    z = xt @ params["w_z"]
+    xs = xt @ params["w_x"]
+    Bs = xt @ params["w_B"]
+    Cs = xt @ params["w_C"]
+    dt_raw = xt @ params["w_dt"]
+
+    xs, conv_x = _conv_step(cache["conv_x"], xs, params["conv_x"])
+    Bs, conv_B = _conv_step(cache["conv_B"], Bs, params["conv_B"])
+    Cs, conv_C = _conv_step(cache["conv_C"], Cs, params["conv_C"])
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    Bs = jax.nn.silu(Bs.astype(jnp.float32))
+    Cs = jax.nn.silu(Cs.astype(jnp.float32))
+
+    dt = _dt_activation(dt_raw, params["dt_bias"])              # [B, H]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                     # [B, H]
+
+    xh = xs.reshape(b, h, p)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bs, xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cs, state) + params["D"][None, :, None] * xh
+    y = y.reshape(b, dims.d_inner)
+
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps))
+    y = y * params["gate_norm"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype)
+
+    out = (y @ params["w_out"])[:, None, :]
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "state": state}
+    return out, new_cache

@@ -1,0 +1,101 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and fp32 master
+state over bf16 params (optax-free — this container only has jax+numpy).
+
+State layout is a plain pytree so it checkpoints and shards like params:
+``m`` / ``v`` / master weights inherit each param's logical axes, which under
+the FSDP rules means optimizer state is fully sharded over (data x model) —
+the ZeRO-style trick that lets 34B-param training fit v5e HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array           # scalar int32
+    m: Any                    # fp32 pytree
+    v: Any                    # fp32 pytree
+    master: Any               # fp32 master weights
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(f32, params),
+            v=jax.tree.map(f32, params),
+            master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        )
+
+    def abstract_init(self, abstract_params) -> AdamWState:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(f32, abstract_params),
+            v=jax.tree.map(f32, abstract_params),
+            master=jax.tree.map(f32, abstract_params),
+        )
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state, grad_norm)."""
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, w):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            w = w - lr * (mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * w)
+            return m, v, w
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_w = treedef.flatten_up_to(state.master)
+        out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+        new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_w = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+        old_flat = treedef.flatten_up_to(params)
+        new_params = jax.tree.unflatten(
+            treedef, [w.astype(p.dtype) for w, p in zip([o[2] for o in out], old_flat)]
+        )
+        return new_params, AdamWState(step, new_m, new_v, new_w), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod data parallelism.
+
+The paper's energy lever is quantization (INT8 weights on the DPU); the
+distributed-training analog is quantizing the *gradient* traffic that
+crosses the slow pod-to-pod links. Two composable schemes:
+
+* :func:`int8_compress` / :func:`int8_decompress` — per-tensor symmetric
+  INT8 with an fp32 scale (4x reduction of DP all-reduce bytes).
+* :class:`ErrorFeedback` — residual accumulation so the quantization error
+  is re-injected next step (keeps convergence; standard EF-SGD result).
+
+These wrap the gradient pytree *before* the pjit-inserted all-reduce: the
+compressed dtype flows through the collective, which is what shrinks the
+collective-term in the roofline for multi-pod training.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads) -> Any:
+    return jax.tree.map(lambda g: int8_compress(g), grads,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def decompress_tree(comp, dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda qs: int8_decompress(qs[0], qs[1], dtype), comp,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any
+
+    @staticmethod
+    def init(params) -> "ErrorFeedback":
+        return ErrorFeedback(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_compress(grads, ef: ErrorFeedback):
+    """Quantize (grad + residual); stash the new residual."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    comp, resid = [], []
+    for g, r in zip(flat_g, flat_r):
+        target = g.astype(jnp.float32) + r
+        q, s = int8_compress(target)
+        comp.append((q, s))
+        resid.append(target - int8_decompress(q, s))
+    return (jax.tree.unflatten(treedef, comp),
+            ErrorFeedback(jax.tree.unflatten(treedef, resid)))

@@ -1,0 +1,120 @@
+"""Mathematical invariants of the LM substrate.
+
+* causality — future tokens cannot influence past logits (all families)
+* prefill/decode consistency — decoding token S against a prefilled cache
+  matches the full-sequence forward at position S
+* SSD chunked scan == naive recurrence oracle
+* chunked attention == naive attention
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.nn import model as model_lib
+from repro.nn.dims import compute_dims
+from repro.nn.ssm import ssd_chunked
+
+FAMILIES = ["tinyllama-1.1b", "llama4-scout-17b-a16e", "mamba2-780m",
+            "zamba2-1.2b"]
+
+
+def _setup(arch_id, key=0):
+    cfg = reduced(get_arch(arch_id))
+    dims = compute_dims(cfg, tp=1)
+    params = model_lib.init_params(cfg, dims, jax.random.PRNGKey(key))
+    return cfg, dims, params
+
+
+@pytest.mark.parametrize("arch_id", FAMILIES)
+def test_causality(arch_id):
+    # b=1: capacity-based MoE dispatch legitimately couples sequences in a
+    # batch (an eviction in row 0 can displace row 1's expert slot), so
+    # causality is an intra-sequence invariant. See nn/moe.py docstring.
+    cfg, dims, params = _setup(arch_id)
+    b, s = 1, 32
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits1 = model_lib.forward(params, toks, cfg, dims, mode="train",
+                                remat=False)
+    # perturb the LAST token; logits at positions < s-1 must not move
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 7) % cfg.vocab_size)
+    logits2 = model_lib.forward(params, toks2, cfg, dims, mode="train",
+                                remat=False)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1], np.float32),
+        np.asarray(logits2[:, :-1], np.float32), atol=1e-2)
+
+
+@pytest.mark.parametrize("arch_id", FAMILIES)
+def test_prefill_decode_consistency(arch_id):
+    """logits(prefill S tokens, decode token S) == logits(forward S+1)."""
+    cfg, dims, params = _setup(arch_id)
+    b, s = 2, 33
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    full = model_lib.forward(params, toks, cfg, dims, mode="train",
+                             remat=False)
+    _, cache = model_lib.forward(params, toks[:, :-1], cfg, dims,
+                                 mode="prefill", s_max=s)
+    dec_logits, _ = model_lib.decode(params, toks[:, -1:], cache,
+                                     jnp.int32(s - 1), cfg, dims)
+    a = np.asarray(full[:, -1], np.float32)
+    c = np.asarray(dec_logits[:, 0], np.float32)
+    # bf16 accumulation differences across two codepaths
+    np.testing.assert_allclose(a, c, atol=0.15, rtol=0.05)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 64, 3, 8, 16
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.5 + 0.1, jnp.float32)
+    A = jnp.asarray(-np.exp(rng.standard_normal(h) * 0.3), jnp.float32)
+
+    for chunk in (8, 16, 64):
+        y, final = ssd_chunked(x, B, C, dt, A, chunk=chunk)
+        # naive recurrence
+        state = np.zeros((b, h, p, n), np.float32)
+        ys = np.zeros((b, s, h, p), np.float32)
+        xn, Bn, Cn, dtn, An = map(np.asarray, (x, B, C, dt, A))
+        for t in range(s):
+            decay = np.exp(dtn[:, t] * An)                     # [b,h]
+            state = state * decay[:, :, None, None] + np.einsum(
+                "bh,bn,bhp->bhpn", dtn[:, t], Bn[:, t], xn[:, t])
+            ys[:, t] = np.einsum("bn,bhpn->bhp", Cn[:, t], state)
+        np.testing.assert_allclose(np.asarray(y), ys, atol=2e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(final), state, atol=2e-3,
+                                   rtol=1e-3)
+
+
+def test_chunked_attention_matches_naive():
+    from repro.nn.attention import _attend_chunked, _attend_naive, _group
+    rng = np.random.default_rng(1)
+    b, s, hq, hkv, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    qg = _group(q, hkv)
+    naive = _attend_naive(qg, k, v, hd ** -0.5)
+    chunked = _attend_chunked(qg, k, v, hd ** -0.5, chunk=32)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(chunked),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_param_count_analytic_vs_actual():
+    """ArchConfig.param_count() (used for 6ND roofline) tracks real
+    parameter tensors within the padding margin."""
+    from repro.nn.params import count_params
+    from repro.nn.model import model_spec
+    for arch_id in ["tinyllama-1.1b", "qwen1.5-0.5b", "mamba2-780m"]:
+        cfg = get_arch(arch_id)
+        dims = compute_dims(cfg, tp=1)
+        actual = count_params(model_spec(cfg, dims))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / analytic < 0.02, (
+            arch_id, actual, analytic)

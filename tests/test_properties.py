@@ -1,0 +1,202 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.optim.compress import (ErrorFeedback, ef_compress, decompress_tree,
+                                  int8_compress, int8_decompress)
+from repro.parallel.sharding import (MULTI_POD_RULES, SINGLE_POD_RULES,
+                                     spec_for)
+from repro.runtime.fault_tolerance import (detect_stragglers,
+                                           elastic_mesh_shape,
+                                           rebalance_batch)
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64),
+       st.floats(1e-3, 1e3), st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bound(m, n, scale_mag, seed):
+    """|x - dequant(quant(x))| <= column_scale/2 for every element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, n)) * scale_mag, jnp.float32)
+    q, s = ref.quantize_ref(x, axis=0)
+    deq = ref.dequantize_ref(q, s, axis=0)
+    err = np.abs(np.asarray(x) - np.asarray(deq))
+    bound = np.asarray(s)[None, :] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 256), st.integers(0, 2 ** 31 - 1))
+def test_int8_compress_4x_and_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    q, s = int8_compress(g)
+    assert q.dtype == jnp.int8                    # 4x fewer wire bytes
+    back = int8_decompress(q, s)
+    assert float(jnp.max(jnp.abs(g - back))) <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_bounded_residual(steps, seed):
+    """EF-SGD invariant: the residual never exceeds one quantization step,
+    so compressed updates sum to the true gradient up to O(scale)."""
+    rng = np.random.default_rng(seed)
+    g_true = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    ef = ErrorFeedback.init({"w": g_true})
+    total = np.zeros(8, np.float32)
+    for _ in range(steps):
+        comp, ef = ef_compress({"w": g_true}, ef)
+        total += np.asarray(decompress_tree(comp)["w"])
+    # sum of decompressed == steps * g_true - final residual
+    expect = steps * np.asarray(g_true) - np.asarray(ef.residual["w"])
+    np.testing.assert_allclose(total, expect, atol=1e-4)
+    q, s = int8_compress(g_true + ef.residual["w"])
+    assert np.abs(np.asarray(ef.residual["w"])).max() <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution
+# ---------------------------------------------------------------------------
+
+MESHES = st.sampled_from([(16, 16), (2, 16, 16), (4, 8), (2, 4, 4)])
+LOGICALS = st.lists(
+    st.sampled_from([None, "batch", "seq", "heads", "ffn", "vocab", "embed",
+                     "expert", "kv_heads"]),
+    min_size=1, max_size=4)
+
+
+def _mk_mesh(shape):
+    names = ("pod", "data", "model")[-len(shape):]
+    devs = np.arange(int(np.prod(shape))).reshape(shape)
+    # avoid building real device meshes in the property test: spec_for only
+    # reads mesh.shape / axis names
+    class FakeMesh:
+        pass
+    m = FakeMesh()
+    m.shape = dict(zip(names, shape))
+    m.axis_names = names
+    return m
+
+
+@settings(max_examples=200, deadline=None)
+@given(MESHES, LOGICALS,
+       st.lists(st.integers(1, 4096), min_size=1, max_size=4))
+def test_spec_for_invariants(mesh_shape, logical, dims):
+    """1) sharded dims always divide the mesh-axis product;
+       2) no mesh axis is used twice;  3) rank is preserved."""
+    n = min(len(logical), len(dims))
+    logical, dims = logical[:n], dims[:n]
+    mesh = _mk_mesh(mesh_shape)
+    rules = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    spec = spec_for(dims, logical, mesh, rules)
+    assert len(spec) == n
+    used = []
+    for dim, part in zip(dims, spec):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+            used.append(a)
+        assert dim % prod == 0, (dim, axes, prod)
+    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 2048), st.sampled_from([4, 8, 16]),
+       st.sampled_from([64, 256]))
+def test_elastic_mesh_invariants(alive, model_degree, pod_size):
+    if alive < model_degree:
+        try:
+            elastic_mesh_shape(alive, model_degree, pod_size)
+            assert False, "expected unrecoverable"
+        except RuntimeError:
+            return
+    pods, data, model = elastic_mesh_shape(alive, model_degree, pod_size)
+    assert model == model_degree                  # TP never resharded
+    assert pods * data * model <= max(alive, pod_size * pods)
+    assert pods * data * model <= alive or pods * pod_size <= alive
+    assert pods >= 1 and data >= 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 4096))
+def test_rebalance_batch_keeps_per_replica(old_data, new_data, per):
+    gb = per * old_data
+    nb = rebalance_batch(gb, old_data, new_data)
+    assert nb == per * new_data                   # per-replica batch constant
+
+
+def test_detect_stragglers_median_rule():
+    times = {f"h{i}": 1.0 for i in range(8)}
+    times["h3"] = 3.5
+    assert detect_stragglers(times) == ["h3"]
+    assert detect_stragglers({"a": 1.0, "b": 9.0}) == []   # <3 hosts: no-op
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_data_pipeline_step_seeded(step):
+    """Restart determinism: batch(step) is a pure function of step."""
+    from repro.configs import get_arch, reduced
+    from repro.configs.base import ShapeSpec
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.nn.dims import compute_dims
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    dims = compute_dims(cfg, tp=1)
+    shape = ShapeSpec("t", 32, 4, "train")
+    a = synthetic_batch(step, cfg, dims, shape, DataConfig())
+    b = synthetic_batch(step, cfg, dims, shape, DataConfig())
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# opgraph shape inference vs execution
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_graph_shape_inference_matches_execution(seed):
+    """Inferred out_shape equals the actual executed shape for every node
+    of a randomly-chosen space model."""
+    from repro.core.engine import OP_IMPLS
+    from repro.models import SPACE_MODELS
+    rng = np.random.default_rng(seed)
+    name = sorted(SPACE_MODELS)[seed % len(SPACE_MODELS)]
+    m = SPACE_MODELS[name]
+    g = m.build_graph()
+    params = m.init_params(jax.random.PRNGKey(seed % 997))
+    inputs = m.synthetic_input(jax.random.PRNGKey((seed + 1) % 997))
+    vals = {k: jnp.asarray(inputs[k], jnp.float32) for k in g.graph_inputs}
+    key = jax.random.PRNGKey(0)
+    for node_name in g.order:
+        node = g.nodes[node_name]
+        if node.op == "input":
+            continue
+        key, sub = jax.random.split(key)
+        vals[node_name] = OP_IMPLS[node.op](
+            [vals[i] for i in node.inputs], params.get(node_name, {}),
+            node.attrs, sub)
+        assert tuple(vals[node_name].shape) == tuple(node.out_shape), (
+            name, node_name, node.op, vals[node_name].shape, node.out_shape)
