@@ -9,8 +9,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ["table1", "table2", "table3", "table45", "fig_power", "roofline",
-            "lm_energy"]
+SECTIONS = ["table1", "table2", "table3", "throughput", "table45",
+            "fig_power", "roofline", "lm_energy"]
 
 
 def main() -> None:
@@ -32,6 +32,10 @@ def main() -> None:
     if "table3" in wanted:
         from benchmarks import table3_performance
         table3_performance.main()
+        print()
+    if "throughput" in wanted:
+        from benchmarks import throughput
+        throughput.main()
         print()
     if "table45" in wanted:
         from benchmarks import table45_context

@@ -1,0 +1,128 @@
+"""Throughput sweep — the compiled-batched engine against the per-sample
+seed path, batch {1, 8, 32} x backend {cpu, flex, accel}, all use cases.
+
+For every (model, backend, batch) cell this measures the steady-state
+samples/s of the staged execution plan (core/plan.py): the plan is
+compiled once, then timed over repeated calls — exactly the paper's
+serving regime, where compilation (the bitstream) is paid offline. Two
+reference columns anchor each cell:
+
+* ``speedup_vs_cpu``        — against the cpu backend at batch 1 (the
+                              paper's ARM-CPU "1x" baseline), and
+* ``speedup_vs_per_sample`` — against a loop of single-sample
+                              ``Engine.run`` calls on the SAME backend
+                              (the seed engine's serving pattern).
+
+J/inference comes from core/energy.py's measured-host accounting
+(HOST_POWER_BUSY x latency). Results land in BENCH_throughput.json so
+the perf trajectory is tracked across PRs. NB: on this host the accel
+backend runs Pallas in interpret mode — its absolute numbers measure the
+emulation, not the MXU; the batched-vs-per-sample ratio is still the
+honest staging-overhead signal.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.energy import HOST_POWER_BUSY
+from repro.core.engine import Engine
+from repro.models import SPACE_MODELS
+
+BATCHES = (1, 8, 32)
+BACKENDS = ("cpu", "flex", "accel")
+OUT_PATH = "BENCH_throughput.json"
+# time budget per cell; cpu-backend cells of the conv models are the slow
+# ones and get a single repeat
+MIN_SECONDS = 0.25
+MAX_REPEATS = 30
+
+
+def _time_call(fn, min_s: float = MIN_SECONDS, max_reps: int = MAX_REPEATS,
+               warmup: bool = True) -> float:
+    if warmup:                                   # absorb compile/first-touch
+        jax.block_until_ready(fn())
+    reps, total = 0, 0.0
+    while reps < 1 or (total < min_s and reps < max_reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        total += time.perf_counter() - t0
+        reps += 1
+    return total / reps
+
+
+def bench_model(name: str, batches=BATCHES, backends=BACKENDS) -> List[Dict]:
+    m = SPACE_MODELS[name]
+    g = m.build_graph()
+    engine = Engine(g, m.init_params(jax.random.PRNGKey(42)))
+    engine.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                      for i in range(4)])
+    rows: List[Dict] = []
+
+    per_sample_fps: Dict[str, float] = {}
+    sample = m.synthetic_input(jax.random.PRNGKey(7))
+    rng = jax.random.PRNGKey(0)
+    for backend in backends:
+        # the seed engine's serving pattern: one sample per call
+        t = _time_call(lambda: engine.run(sample, backend, rng),
+                       max_reps=4 if backend == "cpu" else MAX_REPEATS,
+                       warmup=backend != "cpu")
+        per_sample_fps[backend] = 1.0 / t
+
+    cpu_baseline = per_sample_fps["cpu"]
+    for backend in backends:
+        for batch in batches:
+            inputs = m.synthetic_batch(jax.random.PRNGKey(9), batch)
+            rngs = jax.random.split(jax.random.PRNGKey(3), batch)
+            plan = engine.compile(backend, batch)
+            staged = {k: jax.device_put(v) for k, v in inputs.items()}
+            t = _time_call(lambda: plan(staged, rngs),
+                           max_reps=2 if backend == "cpu" else MAX_REPEATS,
+                           warmup=backend != "cpu")
+            fps = batch / t
+            rows.append({
+                "model": name,
+                "backend": backend,
+                "batch": batch,
+                "samples_per_s": fps,
+                "latency_per_sample_ms": 1e3 / fps,
+                "speedup_vs_cpu": fps / cpu_baseline,
+                "speedup_vs_per_sample": fps / per_sample_fps[backend],
+                "j_per_inference": HOST_POWER_BUSY / fps,
+                "plan_traces": getattr(plan, "n_traces", 0),
+            })
+            r = rows[-1]
+            print(f"  {name:18s} {backend:5s} B={batch:<3d} "
+                  f"{fps:10.1f} samp/s  "
+                  f"x_cpu={r['speedup_vs_cpu']:8.2f}  "
+                  f"x_seed={r['speedup_vs_per_sample']:6.2f}  "
+                  f"J/inf={r['j_per_inference']:.3e}")
+    return rows
+
+
+def main(models=None, batches=BATCHES, backends=BACKENDS,
+         out_path: str = OUT_PATH) -> List[Dict]:
+    print("== Throughput: compiled-batched plans vs per-sample seed path ==")
+    all_rows: List[Dict] = []
+    for name in (models or SPACE_MODELS):
+        all_rows.extend(bench_model(name, batches, backends))
+    payload = {
+        "host_power_w": HOST_POWER_BUSY,
+        "note": ("accel runs Pallas interpret-mode on this host; "
+                 "speedup_vs_per_sample compares against looped "
+                 "single-sample Engine.run on the same backend"),
+        "rows": all_rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path} ({len(all_rows)} rows)")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

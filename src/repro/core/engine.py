@@ -1,99 +1,62 @@
-"""Dual-backend inference engine — the paper's toolchain trade-off as code.
+"""Dual-backend inference engine — compile once, serve batches.
 
 Three execution backends for an op graph (DESIGN.md §2):
 
-* ``cpu``   — the ARM-CPU baseline analog: pure-jnp ops, ``jax.disable_jit``
-              at call time, fp32. Slow on purpose; it is the measured "1x".
-* ``flex``  — the Vitis-HLS analog: the same fp32 math, jit-compiled by
-              XLA. Supports *every* operator (sigmoid, 3-D conv/pool,
-              comparators, sampling) at IEEE-754 fp32 — the paper's
-              "numerical fidelity <= 1e-10" property is tested against cpu.
-* ``accel`` — the Vitis-AI/DPU analog: INT8 PTQ weights, Pallas MXU kernels
-              for conv2d (im2col) and dense, fused ReLU epilogues; only a
-              restricted operator set (core/inspector.py). Models with
-              unsupported ops are *partitioned*: supported segments run
-              accel, the rest falls back to flex — exactly the paper's
-              VAE-tail (sampling/exp on CPU) arrangement.
+* ``cpu``   — the ARM-CPU baseline analog: the same batched program run
+              op-by-op under ``jax.disable_jit``, fp32. Slow on purpose;
+              it is the measured "1x".
+* ``flex``  — the Vitis-HLS analog: fp32 math, jit-compiled by XLA.
+              Supports *every* operator (sigmoid, 3-D conv/pool,
+              comparators, sampling) at IEEE-754 fp32.
+* ``accel`` — the Vitis-AI/DPU analog: INT8 PTQ weights, Pallas MXU
+              kernels for conv2d (shift-and-matmul, no HBM im2col) and
+              dense, fused ReLU + dequant epilogues; only a restricted
+              operator set (core/inspector.py). Unsupported — or
+              PTQ-infidelity-demoted — nodes fall back to flex, exactly
+              the paper's partial-offload arrangement.
 
-Weight residency mirrors the paper's BRAM policy: quantized weights are
-device-resident arrays (VMEM residency on real TPU is the kernels' block
-lifetime); the energy model charges HBM traffic for anything that spills.
+Execution is staged (core/plan.py, DESIGN.md §7): ``compile(backend,
+batch_size)`` runs the inspector once, partitions the graph into
+contiguous accel/flex segments, folds PTQ weight/activation scales and
+fused epilogues into per-node constants, and emits ONE jitted batched
+callable — inputs carry a leading batch dim end-to-end. Compiled plans
+are cached per instance keyed by (backend, batch size), so steady-state
+serving never re-traces; ``run``/``run_batch`` are thin wrappers over the
+cache. Weight residency mirrors the paper's BRAM policy: quantized
+weights are device-resident plan constants (VMEM residency on real TPU is
+the kernels' block lifetime).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import inspector as inspector_mod
-from repro.core.opgraph import Graph, Node
+from repro.core.opgraph import Graph
+from repro.core.plan import (BATCHED_OP_IMPLS, CompiledPlan, EagerPlan,
+                             ExecutionPlan)
 from repro.core.quantize import QuantizedLayer
-from repro.kernels import ops as kops
 
 # ---------------------------------------------------------------------------
-# fp32 op implementations (cpu + flex backends)
+# Single-sample fp32 op implementations (calibration tracing + references) —
+# derived from the batched table so the math executed at calibration time
+# can never drift from the math the plans serve.
 # ---------------------------------------------------------------------------
 
 
-def _conv2d_xla(x, p, a):
-    out = jax.lax.conv_general_dilated(
-        x[None].astype(jnp.float32), p["w"].astype(jnp.float32),
-        window_strides=(a.get("stride", 1),) * 2,
-        padding=a.get("padding", "SAME"),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
-    return out + p["b"]
-
-
-def _conv3d_xla(x, p, a):
-    out = jax.lax.conv_general_dilated(
-        x[None].astype(jnp.float32), p["w"].astype(jnp.float32),
-        window_strides=(a.get("stride", 1),) * 3,
-        padding=a.get("padding", "SAME"),
-        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))[0]
-    return out + p["b"]
-
-
-def _pool(x, a, ndim, op):
-    k, s = a["kernel"], a.get("stride", a["kernel"])
-    window = (k,) * ndim + (1,)
-    strides = (s,) * ndim + (1,)
-    if op == "max":
-        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, strides,
-                                     "VALID")
-    out = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, strides, "VALID")
-    return out / (k ** ndim)
+def _single_sample(op_impl: Callable) -> Callable:
+    def f(xs, p, a, rng):
+        sub = None if rng is None else _raw_keys(rng)[None]
+        return op_impl([x[None] for x in xs], p, a, sub)[0]
+    return f
 
 
 OP_IMPLS: Dict[str, Callable] = {
-    "conv2d": lambda x, p, a, rng: _conv2d_xla(x[0], p, a),
-    "conv3d": lambda x, p, a, rng: _conv3d_xla(x[0], p, a),
-    "maxpool2d": lambda x, p, a, rng: _pool(x[0], a, 2, "max"),
-    "avgpool2d": lambda x, p, a, rng: _pool(x[0], a, 2, "avg"),
-    "maxpool3d": lambda x, p, a, rng: _pool(x[0], a, 3, "max"),
-    "avgpool3d": lambda x, p, a, rng: _pool(x[0], a, 3, "avg"),
-    "dense": lambda x, p, a, rng: x[0].reshape(-1) @ p["w"] +
-    (p["b"] if "b" in p else 0.0),
-    "flatten": lambda x, p, a, rng: x[0].reshape(-1),
-    "relu": lambda x, p, a, rng: jnp.maximum(x[0], 0.0),
-    "leaky_relu": lambda x, p, a, rng: jnp.where(
-        x[0] > 0, x[0], a.get("alpha", 0.01) * x[0]),
-    "sigmoid": lambda x, p, a, rng: jax.nn.sigmoid(x[0]),
-    "tanh": lambda x, p, a, rng: jnp.tanh(x[0]),
-    "softplus": lambda x, p, a, rng: jax.nn.softplus(x[0]),
-    "exp": lambda x, p, a, rng: jnp.exp(x[0]),
-    "concat": lambda x, p, a, rng: jnp.concatenate(x, axis=a.get("axis", -1)),
-    "add": lambda x, p, a, rng: x[0] + x[1],
-    "sub": lambda x, p, a, rng: x[0] - x[1],
-    "mul": lambda x, p, a, rng: x[0] * x[1],
-    "greater": lambda x, p, a, rng: (x[0] > a["threshold"]).astype(jnp.float32),
-    "sample_normal": lambda x, p, a, rng: x[0] + jnp.exp(0.5 * x[1])
-    * jax.random.normal(rng, x[0].shape),
-    "argmax": lambda x, p, a, rng: jnp.argmax(x[0]).astype(jnp.int32),
-}
+    op: _single_sample(impl) for op, impl in BATCHED_OP_IMPLS.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -111,11 +74,18 @@ class EnginePlan:
 class Engine:
     """Executes an op graph on a chosen backend (or a partitioned mix)."""
 
-    def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]]):
+    def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]],
+                 ptq_demote_threshold: float = 0.2):
         self.graph = graph
         self.params = params
+        self.ptq_demote_threshold = ptq_demote_threshold
         self._quant: Optional[Dict[str, QuantizedLayer]] = None
         self._calib: Dict[str, float] = {}
+        self._ptq_err: Dict[str, float] = {}
+        # per-instance plan caches (an lru_cache on a bound method would pin
+        # `self` — and its quantized weights — for the process lifetime)
+        self._planned: Dict[str, ExecutionPlan] = {}
+        self._compiled: Dict[tuple, object] = {}
 
     # -- planning (paper: run the inspector, then choose the toolchain) -----
 
@@ -129,120 +99,85 @@ class Engine:
     # -- PTQ ----------------------------------------------------------------
 
     def calibrate(self, sample_inputs: List[Dict[str, np.ndarray]]) -> None:
-        """Post-training quantization: record per-node activation absmax over
-        a calibration set, then quantize weights per-output-channel."""
-        from repro.core.quantize import calibrate_graph, quantize_weights
-        self._calib = calibrate_graph(self, sample_inputs)
+        """Post-training quantization: record per-node activation absmax
+        over a calibration set, quantize weights per-output-channel, and
+        measure per-node PTQ error (the plan-time demotion gate)."""
+        from repro.core.quantize import (_trace, calibrate_graph,
+                                         ptq_error_ratios, quantize_weights)
+        traces = [_trace(self, s) for s in sample_inputs]   # one fp32 pass
+        self._calib = calibrate_graph(self, sample_inputs, traces=traces)
         self._quant = quantize_weights(self.graph, self.params)
+        self._ptq_err = ptq_error_ratios(self, sample_inputs, self._quant,
+                                         self._calib, traces=traces)
+        # new scales/weights invalidate any previously folded accel plan
+        self._planned.pop("accel", None)
+        self._compiled = {k: v for k, v in self._compiled.items()
+                          if k[0] != "accel"}
+
+    # -- staged compilation --------------------------------------------------
+
+    def planned(self, backend: str = "flex") -> ExecutionPlan:
+        """The **Planned** stage for a backend (inspector + PTQ folding run
+        exactly once; cached per instance)."""
+        key = "accel" if backend == "accel" else "flex"
+        if key not in self._planned:
+            self._planned[key] = ExecutionPlan(
+                self.graph, self.params, key,
+                quant=self._quant, act_absmax=self._calib,
+                ptq_err=self._ptq_err,
+                ptq_demote_threshold=self.ptq_demote_threshold)
+        return self._planned[key]
+
+    def compile(self, backend: str = "flex", batch_size: int = 1):
+        """The **Compiled** stage: one batched executable per (backend,
+        batch-size), cached — calling it never re-traces."""
+        if backend not in ("cpu", "flex", "accel"):
+            raise ValueError(backend)
+        key = (backend, batch_size)
+        if key not in self._compiled:
+            planned = self.planned(backend)
+            if backend == "cpu":
+                self._compiled[key] = EagerPlan(planned, batch_size)
+            else:
+                self._compiled[key] = planned.lower(batch_size).compile()
+        return self._compiled[key]
 
     # -- execution ----------------------------------------------------------
 
     def run(self, inputs: Dict[str, jax.Array], backend: str = "flex",
             rng: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
-        """Single-sample execution (the paper measures per-inference)."""
-        if backend == "cpu":
-            with jax.disable_jit():
-                return self._execute(inputs, "flex",
-                                     rng if rng is not None
-                                     else jax.random.PRNGKey(0))
-        if backend in ("flex", "accel"):
-            return self._execute_jit(inputs, backend,
-                                     rng if rng is not None
-                                     else jax.random.PRNGKey(0))
-        raise ValueError(backend)
+        """Single-sample execution (the paper measures per-inference) —
+        a batch-1 view over the compiled plan."""
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        batched = self.run_batch(
+            {k: jnp.asarray(v, jnp.float32)[None] for k, v in inputs.items()},
+            backend, rngs=_raw_keys(rng)[None])
+        return {k: v[0] for k, v in batched.items()}
 
-    @functools.lru_cache(maxsize=8)
-    def _jitted(self, backend: str):
-        def f(inputs, rng):
-            return self._execute(inputs, backend, rng)
-        return jax.jit(f)
-
-    def _execute_jit(self, inputs, backend, rng):
-        return self._jitted(backend)(inputs, rng)
-
-    def _execute(self, inputs: Dict[str, jax.Array], backend: str,
-                 rng: Optional[jax.Array]) -> Dict[str, jax.Array]:
-        if backend == "accel" and self._quant is None:
-            raise RuntimeError("accel backend needs calibrate() first (PTQ)")
-        assignment = (inspector_mod.assign_backends(self.graph)
-                      if backend == "accel" else None)
-        vals: Dict[str, jax.Array] = {}
+    def run_batch(self, inputs: Dict[str, jax.Array], backend: str = "flex",
+                  rngs: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+        """Batched execution: every input carries a leading batch dim;
+        ``rngs`` is one PRNG key per sample ([B, 2])."""
+        staged = {}
+        batch = None
         for name, shape in self.graph.graph_inputs.items():
             x = jnp.asarray(inputs[name], jnp.float32)
-            assert x.shape == shape, (name, x.shape, shape)
-            vals[name] = x
-        for name in self.graph.order:
-            node = self.graph.nodes[name]
-            if node.op == "input":
-                continue
-            xs = [vals[i] for i in node.inputs]
-            p = self.params.get(name, {})
-            if rng is not None:
-                rng, sub = jax.random.split(rng)
-            else:
-                sub = jax.random.PRNGKey(0)
-            if backend == "accel" and assignment[name] == "accel" \
-                    and name in (self._quant or {}):
-                vals[name] = self._run_quantized(node, xs)
-            else:
-                vals[name] = OP_IMPLS[node.op](xs, p, node.attrs, sub)
-        return {o: vals[o] for o in self.graph.outputs}
-
-    def _run_quantized(self, node: Node, xs) -> jax.Array:
-        """INT8 path: quantize activation per-tensor, run the Pallas MXU
-        kernel, dequant in the fused epilogue."""
-        q = self._quant[node.name]
-        x = xs[0]
-        if node.op == "dense":
-            xf = x.reshape(1, -1)
-        else:  # conv2d via im2col
-            xf, out_spatial = _im2col(x, node.attrs, q.w_q.shape)
-        xs_scale = jnp.max(jnp.abs(xf), axis=1) / 127.0 + 1e-12
-        x_q = jnp.clip(jnp.round(xf / xs_scale[:, None]), -127, 127
-                       ).astype(jnp.int8)
-        m, k = x_q.shape
-        n = q.w_q.shape[1]
-        bm = _pick_block(m)
-        bk = _pick_block(k)
-        bn = _pick_block(n)
-        out = kops.int8_matmul(x_q, q.w_q, xs_scale, q.w_scale, q.bias,
-                               relu=bool(node.attrs.get("fused_relu")),
-                               bm=bm, bn=bn, bk=bk)
-        if node.op == "dense":
-            return out.reshape(-1)
-        return out.reshape(*out_spatial, n)
+            assert x.ndim == len(shape) + 1 and x.shape[1:] == shape, \
+                (name, x.shape, shape)
+            if batch is None:
+                batch = x.shape[0]
+            assert x.shape[0] == batch, (name, x.shape, batch)
+            staged[name] = x
+        if rngs is None:
+            rngs = jax.random.split(jax.random.PRNGKey(0), batch)
+        rngs = _raw_keys(rngs)
+        assert rngs.shape == (batch, 2), rngs.shape
+        return self.compile(backend, batch)(staged, rngs)
 
 
-def _pick_block(n: int, target: int = 128) -> int:
-    """Largest divisor of n that is <= target (MXU-aligned when possible)."""
-    if n % target == 0:
-        return target
-    for b in range(min(target, n), 0, -1):
-        if n % b == 0:
-            return b
-    return n
-
-
-def _im2col(x: jax.Array, attrs: dict, wq_shape) -> tuple:
-    """[H,W,Cin] -> patch matrix [Ho*Wo, KH*KW*Cin] (+ out spatial dims)."""
-    kh, kw = attrs["kernel"]
-    stride = attrs.get("stride", 1)
-    pad = attrs.get("padding", "SAME")
-    h, w, cin = x.shape
-    if pad == "SAME":
-        ho, wo = -(-h // stride), -(-w // stride)
-        ph = max((ho - 1) * stride + kh - h, 0)
-        pw = max((wo - 1) * stride + kw - w, 0)
-        x = jnp.pad(x, ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
-                        (0, 0)))
-    else:
-        ho, wo = (h - kh) // stride + 1, (w - kw) // stride + 1
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            sl = jax.lax.slice(x, (i, j, 0),
-                               (i + (ho - 1) * stride + 1,
-                                j + (wo - 1) * stride + 1, cin),
-                               (stride, stride, 1))
-            cols.append(sl.reshape(ho * wo, cin))
-    return jnp.concatenate(cols, axis=1), (ho, wo)
+def _raw_keys(rng: jax.Array) -> jax.Array:
+    """Accept both old-style uint32 keys and new-style typed keys."""
+    if jax.dtypes.issubdtype(rng.dtype, jax.dtypes.prng_key):
+        rng = jax.random.key_data(rng)
+    return jnp.asarray(rng, jnp.uint32)

@@ -74,18 +74,10 @@ def inspect(graph: Graph) -> InspectionReport:
     accel_macs = sum(n.macs for n in graph.nodes.values()
                      if assignment[n.name] == "accel")
 
-    segments = []
-    for name in graph.order:
-        node = graph.nodes[name]
-        if node.op == "input":
-            continue
-        b = assignment[name]
-        if segments and segments[-1]["backend"] == b:
-            segments[-1]["last"] = name
-            segments[-1]["n"] += 1
-        else:
-            segments.append({"backend": b, "first": name, "last": name,
-                             "n": 1})
+    from repro.core.plan import partition_segments
+    segments = [{"backend": seg.backend, "first": seg.nodes[0],
+                 "last": seg.nodes[-1], "n": len(seg.nodes)}
+                for seg in partition_segments(graph, assignment)]
     return InspectionReport(
         graph_name=graph.name,
         supported=supported,

@@ -53,7 +53,14 @@ class ServeStats:
 
 
 class ServingPipeline:
-    """Micro-batched, double-buffered inference over a request stream."""
+    """Micro-batched, double-buffered inference over a request stream.
+
+    Uses the engine's staged plan cache: ONE compiled batched executable
+    per (backend, batch_size), built up front — the serving loop never
+    re-traces. Ragged final chunks are padded up to the plan's batch size
+    (and the padding sliced off), so a request stream of any length hits
+    exactly one executable.
+    """
 
     def __init__(self, engine, backend: str = "flex",
                  batch_size: int = 16,
@@ -62,13 +69,15 @@ class ServingPipeline:
         self.backend = backend
         self.batch_size = batch_size
         self.keep_predicate = keep_predicate
-        # vmap the single-sample engine over the batch dim
-        self._batched = jax.jit(jax.vmap(
-            lambda inp, rng: engine._execute(inp, backend, rng)))
+        self._plan = engine.compile(backend, batch_size)
 
     def _stage(self, reqs: List[Dict[str, np.ndarray]]) -> Dict[str, jax.Array]:
         batch = {k: jnp.stack([jnp.asarray(r[k], jnp.float32) for r in reqs])
                  for k in reqs[0]}
+        if len(reqs) < self.batch_size:        # pad the ragged tail
+            pad = self.batch_size - len(reqs)
+            batch = {k: jnp.concatenate(
+                [v, jnp.repeat(v[-1:], pad, axis=0)]) for k, v in batch.items()}
         return jax.device_put(batch)
 
     def run(self, requests: Iterable[Dict[str, np.ndarray]]) -> ServeStats:
@@ -89,9 +98,9 @@ class ServingPipeline:
             current = staged
 
             t0 = time.perf_counter()
-            rngs = jax.random.split(rng, len(chunk) + 1)
+            rngs = jax.random.split(rng, self.batch_size + 1)
             rng, sub = rngs[0], rngs[1:]
-            out = self._batched(current, sub)
+            out = self._plan(current, sub)
             jax.block_until_ready(out)
             compute_t = time.perf_counter() - t0
 
@@ -109,7 +118,7 @@ class ServingPipeline:
             phases.overlapped += min(stage_t, compute_t)
 
             t0 = time.perf_counter()
-            host_out = {k: np.asarray(v) for k, v in out.items()}
+            host_out = {k: np.asarray(v)[:len(chunk)] for k, v in out.items()}
             phases.stage_out += time.perf_counter() - t0
 
             if self.keep_predicate is not None:

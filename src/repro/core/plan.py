@@ -1,0 +1,385 @@
+"""Staged execution plans: Planned -> Lowered -> Compiled (DESIGN.md §7).
+
+The paper's deployment flow is ahead-of-time by construction: the
+inspector partitions the model, the quantizer folds scales, the compiler
+emits a bitstream, and serving only ever *runs*. The seed engine instead
+re-derived all of that per call. This module is the JaCe-style staged
+chain that moves every decision to plan time:
+
+* :class:`ExecutionPlan` (**Planned**) — built once per (engine, backend):
+  the inspector's backend assignment, the contiguous accel/flex
+  *segments*, PTQ weight/activation scales and fused ReLU epilogues all
+  folded into per-node constants, plus the PTQ fidelity gate (nodes whose
+  calibration-time quantization error is too large are demoted to the
+  flex path — the mixed-precision analog of the paper's partial offload).
+* :class:`LoweredPlan` (**Lowered**) — the plan traced for one concrete
+  batch size: a single jitted callable over ``[B, ...]`` inputs; every op
+  implementation is natively batched (no per-sample ``x[None]``).
+* :class:`CompiledPlan` (**Compiled**) — the XLA executable. Calling it
+  never re-traces; the engine caches one per (backend, batch-size), so
+  steady-state serving runs at whatever rate the hardware allows.
+
+Random ops thread a per-sample key array ``rngs [B, 2]`` through the plan
+(split per random node, vmapped over the batch), so row *i* of a batched
+run is bit-identical to a single-sample run with key ``rngs[i]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opgraph import Graph, Node
+from repro.kernels import ops as kops
+
+RANDOM_OPS = frozenset({"sample_normal"})
+
+
+# ---------------------------------------------------------------------------
+# Batched fp32 op implementations (leading batch dim everywhere)
+# ---------------------------------------------------------------------------
+
+
+def _conv2d_b(x, p, a):
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), p["w"].astype(jnp.float32),
+        window_strides=(a.get("stride", 1),) * 2,
+        padding=a.get("padding", "SAME"),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def _conv3d_b(x, p, a):
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), p["w"].astype(jnp.float32),
+        window_strides=(a.get("stride", 1),) * 3,
+        padding=a.get("padding", "SAME"),
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))
+    return out + p["b"]
+
+
+def _pool_b(x, a, ndim, op):
+    k, s = a["kernel"], a.get("stride", a["kernel"])
+    window = (1,) + (k,) * ndim + (1,)
+    strides = (1,) + (s,) * ndim + (1,)
+    if op == "max":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window,
+                                     strides, "VALID")
+    out = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, strides, "VALID")
+    return out / (k ** ndim)
+
+
+def _dense_b(x, p, a):
+    out = x.reshape(x.shape[0], -1) @ p["w"]
+    if "b" in p:
+        out = out + p["b"]
+    return out
+
+
+def _concat_axis(a) -> int:
+    ax = a.get("axis", -1)
+    return ax + 1 if ax >= 0 else ax
+
+
+def _sample_normal_b(xs, rngs):
+    mu, logvar = xs
+    eps = jax.vmap(lambda k, m: jax.random.normal(k, m.shape))(rngs, mu)
+    return mu + jnp.exp(0.5 * logvar) * eps
+
+
+BATCHED_OP_IMPLS: Dict[str, Callable] = {
+    "conv2d": lambda x, p, a, rng: _conv2d_b(x[0], p, a),
+    "conv3d": lambda x, p, a, rng: _conv3d_b(x[0], p, a),
+    "maxpool2d": lambda x, p, a, rng: _pool_b(x[0], a, 2, "max"),
+    "avgpool2d": lambda x, p, a, rng: _pool_b(x[0], a, 2, "avg"),
+    "maxpool3d": lambda x, p, a, rng: _pool_b(x[0], a, 3, "max"),
+    "avgpool3d": lambda x, p, a, rng: _pool_b(x[0], a, 3, "avg"),
+    "dense": lambda x, p, a, rng: _dense_b(x[0], p, a),
+    "flatten": lambda x, p, a, rng: x[0].reshape(x[0].shape[0], -1),
+    "relu": lambda x, p, a, rng: jnp.maximum(x[0], 0.0),
+    "leaky_relu": lambda x, p, a, rng: jnp.where(
+        x[0] > 0, x[0], a.get("alpha", 0.01) * x[0]),
+    "sigmoid": lambda x, p, a, rng: jax.nn.sigmoid(x[0]),
+    "tanh": lambda x, p, a, rng: jnp.tanh(x[0]),
+    "softplus": lambda x, p, a, rng: jax.nn.softplus(x[0]),
+    "exp": lambda x, p, a, rng: jnp.exp(x[0]),
+    "concat": lambda x, p, a, rng: jnp.concatenate(x, axis=_concat_axis(a)),
+    "add": lambda x, p, a, rng: x[0] + x[1],
+    "sub": lambda x, p, a, rng: x[0] - x[1],
+    "mul": lambda x, p, a, rng: x[0] * x[1],
+    "greater": lambda x, p, a, rng: (x[0] > a["threshold"]).astype(
+        jnp.float32),
+    "sample_normal": lambda x, p, a, rng: _sample_normal_b(x, rng),
+    "argmax": lambda x, p, a, rng: jnp.argmax(
+        x[0].reshape(x[0].shape[0], -1), axis=1).astype(jnp.int32),
+}
+
+
+# ---------------------------------------------------------------------------
+# Plan-time folding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of nodes on one backend (the paper's partial
+    offload unit — e.g. the VAE's sampling tail on the flex path)."""
+    backend: str                    # 'accel' | 'flex'
+    nodes: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class QuantNodePlan:
+    """PTQ constants folded into a quantized node at plan time."""
+    op: str                         # 'conv2d' | 'dense'
+    w_q: jax.Array                  # dense: [K, N]; conv: [KH, KW, Cin, Cout]
+    w_scale: jax.Array              # [N] per-output-channel
+    bias: Optional[jax.Array]
+    act_scale: float                # static per-tensor input scale
+    fused_relu: bool                # ReLU epilogue folded in
+    stride: int = 1
+    padding: str = "SAME"
+
+
+def partition_segments(graph: Graph, assignment: Dict[str, str]
+                       ) -> List[Segment]:
+    """Group ``graph.order`` into contiguous same-backend runs."""
+    segs: List[Segment] = []
+    run: List[str] = []
+    cur: Optional[str] = None
+    for name in graph.order:
+        if graph.nodes[name].op == "input":
+            continue
+        b = assignment[name]
+        if b != cur and run:
+            segs.append(Segment(cur, tuple(run)))
+            run = []
+        cur = b
+        run.append(name)
+    if run:
+        segs.append(Segment(cur, tuple(run)))
+    return segs
+
+
+def _consumers(graph: Graph) -> Dict[str, List[str]]:
+    out: Dict[str, List[str]] = {n: [] for n in graph.nodes}
+    for name in graph.order:
+        for i in graph.nodes[name].inputs:
+            out[i].append(name)
+    return out
+
+
+class ExecutionPlan:
+    """**Planned** stage: everything derivable without a batch size.
+
+    Holds the folded graph program; :meth:`lower` binds a batch size and
+    traces, :meth:`compile` (on the lowered stage) produces the reusable
+    executable. ``n_traces`` counts lowerings — steady-state serving must
+    not grow it.
+    """
+
+    def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]],
+                 backend: str,
+                 quant: Optional[Dict[str, Any]] = None,
+                 act_absmax: Optional[Dict[str, float]] = None,
+                 ptq_err: Optional[Dict[str, float]] = None,
+                 ptq_demote_threshold: float = 0.2):
+        from repro.core import inspector as inspector_mod
+        self.graph = graph
+        self.params = params
+        self.backend = backend
+        self.n_traces = 0
+
+        assignment = inspector_mod.assign_backends(graph)
+        self.demoted: List[str] = []
+        self.qplans: Dict[str, QuantNodePlan] = {}
+        self.fused_into: Dict[str, str] = {}    # relu node -> producer
+
+        if backend == "accel":
+            if quant is None:
+                raise RuntimeError(
+                    "accel backend needs calibrate() first (PTQ)")
+            consumers = _consumers(graph)
+            for name in graph.order:
+                node = graph.nodes[name]
+                if (assignment[name] != "accel"
+                        or node.op not in ("conv2d", "dense")
+                        or name not in quant):
+                    continue
+                # PTQ fidelity gate: calibration-time quantization error too
+                # large -> run this node fp32 on the flex path instead
+                # (the engine-level analog of the paper's QAT remark).
+                err = (ptq_err or {}).get(name, 0.0)
+                if err > ptq_demote_threshold:
+                    assignment[name] = "flex"
+                    self.demoted.append(name)
+                    continue
+                q = quant[name]
+                inp = node.inputs[0]
+                absmax = (act_absmax or {}).get(inp)
+                if absmax is None:
+                    raise RuntimeError(
+                        f"no calibration absmax for {inp!r} (accel plan)")
+                act_scale = float(absmax) / 127.0 + 1e-12
+                # fuse a sole-consumer ReLU into the kernel epilogue
+                fused = False
+                cons = consumers[name]
+                if (len(cons) == 1 and graph.nodes[cons[0]].op == "relu"
+                        and name not in graph.outputs
+                        and assignment.get(cons[0]) == "accel"):
+                    fused = True
+                    self.fused_into[cons[0]] = name
+                if node.op == "conv2d":
+                    w4 = q.w_q.reshape(params[name]["w"].shape)
+                    self.qplans[name] = QuantNodePlan(
+                        "conv2d", w4, q.w_scale, q.bias, act_scale, fused,
+                        stride=node.attrs.get("stride", 1),
+                        padding=node.attrs.get("padding", "SAME"))
+                else:
+                    self.qplans[name] = QuantNodePlan(
+                        "dense", q.w_q, q.w_scale, q.bias, act_scale, fused)
+        else:
+            assignment = {n: "flex" for n in assignment}
+
+        self.assignment = assignment
+        self.segments = partition_segments(graph, assignment)
+        self._lowered: Dict[int, "LoweredPlan"] = {}
+
+    # -- the batched program -------------------------------------------------
+
+    def batched_fn(self) -> Callable:
+        """The plan as a python callable ``f(inputs[B,...], rngs[B,2])``."""
+        graph, params = self.graph, self.params
+        qplans, fused_into = self.qplans, self.fused_into
+
+        def f(inputs: Dict[str, jax.Array], rngs: jax.Array
+              ) -> Dict[str, jax.Array]:
+            vals: Dict[str, jax.Array] = {}
+            for name in graph.graph_inputs:
+                vals[name] = inputs[name].astype(jnp.float32)
+            for seg in self.segments:
+                for name in seg.nodes:
+                    node = graph.nodes[name]
+                    if name in fused_into:      # ReLU folded into producer
+                        vals[name] = vals[fused_into[name]]
+                        continue
+                    xs = [vals[i] for i in node.inputs]
+                    if name in qplans:
+                        vals[name] = _run_quantized(qplans[name], xs[0])
+                        continue
+                    sub = None
+                    if node.op in RANDOM_OPS:
+                        nxt = jax.vmap(jax.random.split)(rngs)  # [B, 2, 2]
+                        rngs, sub = nxt[:, 0], nxt[:, 1]
+                    vals[name] = BATCHED_OP_IMPLS[node.op](
+                        xs, params.get(name, {}), node.attrs, sub)
+            return {o: vals[o] for o in graph.outputs}
+
+        return f
+
+    # -- staging -------------------------------------------------------------
+
+    def lower(self, batch_size: int) -> "LoweredPlan":
+        if batch_size in self._lowered:
+            return self._lowered[batch_size]
+        in_sds = {
+            name: jax.ShapeDtypeStruct((batch_size,) + tuple(shape),
+                                       jnp.float32)
+            for name, shape in self.graph.graph_inputs.items()}
+        rng_sds = jax.ShapeDtypeStruct((batch_size, 2), jnp.uint32)
+        lowered = jax.jit(self.batched_fn()).lower(in_sds, rng_sds)
+        self.n_traces += 1
+        lp = LoweredPlan(self, batch_size, lowered)
+        self._lowered[batch_size] = lp
+        return lp
+
+    def summary(self) -> str:
+        lines = [f"ExecutionPlan[{self.graph.name}/{self.backend}]: "
+                 f"{len(self.segments)} segment(s), "
+                 f"{len(self.qplans)} quantized node(s), "
+                 f"{len(self.fused_into)} fused epilogue(s)"]
+        for seg in self.segments:
+            lines.append(f"  [{seg.backend:5s}] {seg.nodes[0]} .. "
+                         f"{seg.nodes[-1]} ({len(seg.nodes)} nodes)")
+        if self.demoted:
+            lines.append(f"  PTQ-demoted to flex: {self.demoted}")
+        return "\n".join(lines)
+
+
+def _run_quantized(qp: QuantNodePlan, x: jax.Array) -> jax.Array:
+    """One fused kernel per quantized layer: static-scale requantize ->
+    int8 MXU matmul/conv -> dequant (+bias, +ReLU) epilogue.
+
+    Static scales are the DPU contract (and what makes the plan a fixed
+    program): activations beyond the calibration-set absmax SATURATE at
+    +-127, exactly as on the real accelerator — serve-time inputs must be
+    covered by a representative calibration set (DESIGN.md §7)."""
+    s = qp.act_scale
+    if qp.op == "dense":
+        b = x.shape[0]
+        x_q = jnp.clip(jnp.round(x.reshape(b, -1) / s), -127, 127
+                       ).astype(jnp.int8)
+        return kops.int8_matmul(
+            x_q, qp.w_q, jnp.full((b,), s, jnp.float32), qp.w_scale,
+            qp.bias, relu=qp.fused_relu)
+    x_q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return kops.conv2d_int8(
+        x_q, qp.w_q, qp.w_scale, qp.bias, x_scale=s,
+        stride=qp.stride, padding=qp.padding, relu=qp.fused_relu)
+
+
+class LoweredPlan:
+    """**Lowered** stage: traced for one batch size, not yet an executable."""
+
+    def __init__(self, plan: ExecutionPlan, batch_size: int, lowered):
+        self.plan = plan
+        self.batch_size = batch_size
+        self.lowered = lowered
+        self._compiled: Optional[CompiledPlan] = None
+
+    def as_text(self) -> str:
+        return self.lowered.as_text()
+
+    def compile(self) -> "CompiledPlan":
+        if self._compiled is None:
+            self._compiled = CompiledPlan(self.plan, self.batch_size,
+                                          self.lowered.compile())
+        return self._compiled
+
+
+class CompiledPlan:
+    """**Compiled** stage: an XLA executable — calling it never re-traces."""
+
+    def __init__(self, plan: ExecutionPlan, batch_size: int, executable):
+        self.plan = plan
+        self.batch_size = batch_size
+        self._executable = executable
+
+    @property
+    def n_traces(self) -> int:
+        return self.plan.n_traces
+
+    def __call__(self, inputs: Dict[str, jax.Array], rngs: jax.Array
+                 ) -> Dict[str, jax.Array]:
+        return self._executable(inputs, rngs)
+
+
+class EagerPlan:
+    """The cpu-backend stage: the same batched program, run op-by-op with
+    jit disabled (the paper's ARM-CPU '1x' baseline analog)."""
+
+    def __init__(self, plan: ExecutionPlan, batch_size: int):
+        self.plan = plan
+        self.batch_size = batch_size
+        self._fn = plan.batched_fn()
+
+    @property
+    def n_traces(self) -> int:
+        return self.plan.n_traces
+
+    def __call__(self, inputs: Dict[str, jax.Array], rngs: jax.Array
+                 ) -> Dict[str, jax.Array]:
+        with jax.disable_jit():
+            return self._fn(inputs, rngs)

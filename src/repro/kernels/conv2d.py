@@ -21,6 +21,39 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
+
+def _conv_geometry(x: jax.Array, kh: int, kw: int, stride: int,
+                   padding: str, rows_per_block: int = 1):
+    """Shared SAME/VALID geometry for the fp32 and int8 kernels: returns
+    ``(x_padded, h_out, w_out, rows, n_row_blocks)`` with the image
+    extended so every row window the grid touches — including rows padded
+    out to a whole number of ``rows_per_block`` blocks — is in range.
+    Zero padding is exact for both fp32 and int8 accumulation."""
+    _, h, wd, _ = x.shape
+    if padding == "SAME":
+        h_out = -(-h // stride)
+        w_out = -(-wd // stride)
+        pad_h = max((h_out - 1) * stride + kh - h, 0)
+        pad_w = max((w_out - 1) * stride + kw - wd, 0)
+        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    elif padding == "VALID":
+        h_out = (h - kh) // stride + 1
+        w_out = (wd - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    rows = min(rows_per_block, h_out)
+    n_row_blocks = -(-h_out // rows)
+    need_h = (n_row_blocks * rows - 1) * stride + kh
+    need_w = (w_out - 1) * stride + kw
+    h_pad, w_pad = x.shape[1], x.shape[2]
+    if need_h > h_pad or need_w > w_pad:
+        x = jnp.pad(x, ((0, 0), (0, max(need_h - h_pad, 0)),
+                        (0, max(need_w - w_pad, 0)), (0, 0)))
+    return x, h_out, w_out, rows, n_row_blocks
+
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, w_out: int,
             stride: int, relu: bool, has_bias: bool):
@@ -63,39 +96,17 @@ def conv2d(
 ) -> jax.Array:
     b, h, wd, cin = x.shape
     kh, kw, _, cout = w.shape
-    if padding == "SAME":
-        h_out = -(-h // stride)
-        w_out = -(-wd // stride)
-        pad_h = max((h_out - 1) * stride + kh - h, 0)
-        pad_w = max((w_out - 1) * stride + kw - wd, 0)
-        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
-                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
-    elif padding == "VALID":
-        h_out = (h - kh) // stride + 1
-        w_out = (wd - kw) // stride + 1
-    else:
-        raise ValueError(padding)
-    h_pad, w_pad = x.shape[1], x.shape[2]
+    x, h_out, w_out, _, _ = _conv_geometry(x, kh, kw, stride, padding)
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((cout,), jnp.float32)
-
-    # make sure every block fits: extend the padded image so the last
-    # block's row window is in range
-    need_h = (h_out - 1) * stride + kh
-    if need_h > h_pad:
-        x = jnp.pad(x, ((0, 0), (0, need_h - h_pad), (0, 0), (0, 0)))
-    need_w = (w_out - 1) * stride + kw
-    if need_w > w_pad:
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, need_w - w_pad), (0, 0)))
-        w_pad = need_w
 
     out = pl.pallas_call(
         functools.partial(_kernel, kh=kh, kw=kw, w_out=w_out, stride=stride,
                           relu=relu, has_bias=has_bias),
         grid=(b, h_out),
         in_specs=[
-            pl.BlockSpec((1, x.shape[1], w_pad, cin),
+            pl.BlockSpec((1, x.shape[1], x.shape[2], cin),
                          lambda bi, hi: (bi, 0, 0, 0)),
             pl.BlockSpec((kh, kw, cin, cout), lambda bi, hi: (0, 0, 0, 0)),
             pl.BlockSpec((cout,), lambda bi, hi: (0,)),
@@ -103,8 +114,103 @@ def conv2d(
         out_specs=pl.BlockSpec((1, 1, w_out, cout),
                                lambda bi, hi: (bi, hi, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, cout), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, bias)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# INT8 variant — the DPU conv engine proper: int8 taps x int8 weights
+# accumulated in int32 on the MXU, dequant + bias + ReLU fused into the
+# epilogue. Same shift-and-matmul structure (no im2col patch matrix ever
+# touches HBM); the grid blocks ``rows_per_block`` output rows per step so
+# small feature maps don't drown in grid overhead.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_int8(x_ref, w_ref, ws_ref, b_ref, o_ref, *, kh: int, kw: int,
+                 w_out: int, stride: int, rows: int, x_scale: float,
+                 relu: bool, has_bias: bool):
+    # x_ref block: [1, H_pad, W_pad, Cin] int8 (whole image in VMEM);
+    # o_ref block: [1, rows, W_out, Cout] f32.
+    cout = o_ref.shape[-1]
+    cin = x_ref.shape[-1]
+    base = pl.program_id(1) * rows * stride
+    dequant = ws_ref[...] * jnp.float32(x_scale)         # [Cout]
+    for rr in range(rows):
+        row_start = base + rr * stride
+        taps_rows = x_ref[0, pl.dslice(row_start, kh)]   # [KH, W_pad, Cin] i8
+        acc = jnp.zeros((w_out, cout), jnp.int32)
+        for r in range(kh):
+            row = taps_rows[r]                           # [W_pad, Cin] int8
+            for c in range(kw):
+                taps = jax.lax.slice(
+                    row, (c, 0), (c + (w_out - 1) * stride + 1, cin),
+                    (stride, 1))                         # [w_out, Cin] int8
+                acc += jax.lax.dot_general(
+                    taps, w_ref[r, c],
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * dequant[None, :]
+        if has_bias:
+            out = out + b_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[0, rr] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x_scale", "stride", "padding", "relu", "rows_per_block", "interpret"))
+def conv2d_int8(
+    x_q: jax.Array,                 # [B, H, W, Cin] int8
+    w_q: jax.Array,                 # [KH, KW, Cin, Cout] int8
+    w_scale: jax.Array,             # [Cout] f32 per-output-channel
+    bias: Optional[jax.Array] = None,   # [Cout] f32
+    *,
+    x_scale: float = 1.0,           # static per-tensor activation scale
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    rows_per_block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized conv: ``deq(conv_int32(x_q, w_q))`` with fused epilogue.
+
+    ``x_scale`` is folded at plan time (PTQ calibration absmax / 127), so
+    the whole layer is one kernel launch — no per-sample HBM im2col and no
+    dynamic scale reduction on the critical path.
+    """
+    b, _, _, cin = x_q.shape
+    kh, kw, _, cout = w_q.shape
+    x_q, h_out, w_out, rows, n_row_blocks = _conv_geometry(
+        x_q, kh, kw, stride, padding, rows_per_block)
+    h_out_pad = n_row_blocks * rows
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((cout,), jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_int8, kh=kh, kw=kw, w_out=w_out,
+                          stride=stride, rows=rows, x_scale=float(x_scale),
+                          relu=relu, has_bias=has_bias),
+        grid=(b, n_row_blocks),
+        in_specs=[
+            pl.BlockSpec((1, x_q.shape[1], x_q.shape[2], cin),
+                         lambda bi, ri: (bi, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda bi, ri: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda bi, ri: (0,)),
+            pl.BlockSpec((cout,), lambda bi, ri: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, w_out, cout),
+                               lambda bi, ri: (bi, ri, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out_pad, w_out, cout),
+                                       jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, w_scale, bias)
+    if h_out_pad != h_out:
+        out = out[:, :h_out]
     return out

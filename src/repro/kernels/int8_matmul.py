@@ -14,6 +14,8 @@ that accelerator speedup comes from avoiding per-layer round-trips
 
 Block defaults are MXU-aligned (128x128); VMEM working set at defaults is
 bm*bk + bk*bn (int8) + bm*bn (int32) = 16KB + 16KB + 64KB << 16MB VMEM.
+Dims that don't divide the tile are zero-padded up to aligned tiles (exact
+for integer matmul) rather than shrinking blocks to tiny divisors.
 """
 from __future__ import annotations
 
@@ -24,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
@@ -49,6 +53,16 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
         o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _aligned_block(dim: int, target: int) -> int:
+    """MXU-aligned block size: full ``target`` tiles when the dim is big
+    enough, otherwise the dim rounded up to a multiple of 8 sublanes.
+    Never a tiny divisor — callers pad instead (zero padding is exact for
+    integer matmul)."""
+    if dim >= target:
+        return target
+    return -(-dim // 8) * 8
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bm", "bn", "bk", "relu", "out_dtype", "interpret"))
@@ -69,16 +83,27 @@ def int8_matmul(
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (k, k2)
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    n_k = k // bk
+    bm = min(bm, _aligned_block(m, bm))
+    bn = min(bn, _aligned_block(n, bn))
+    bk = min(bk, _aligned_block(k, bk))
+    # pad every dim up to a whole number of aligned tiles; padded K
+    # contributes exact zeros, padded M/N rows/cols are sliced off below
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp, np_) != (m, k, n):
+        x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+        x_scale = jnp.pad(x_scale, (0, mp - m), constant_values=1.0)
+        w_scale = jnp.pad(w_scale, (0, np_ - n), constant_values=1.0)
+        if bias is not None:
+            bias = jnp.pad(bias, (0, np_ - n))
+    n_k = kp // bk
     has_bias = bias is not None
     if bias is None:
-        bias = jnp.zeros((n,), jnp.float32)
+        bias = jnp.zeros((np_,), jnp.float32)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, relu=relu, has_bias=has_bias),
-        grid=(m // bm, n // bn, n_k),
+        grid=(mp // bm, np_ // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
             pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
@@ -87,9 +112,12 @@ def int8_matmul(
             pl.BlockSpec((bn,), lambda i, j, h: (j,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, x_scale, w_scale, bias)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out

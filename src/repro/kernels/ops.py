@@ -40,6 +40,14 @@ def conv2d(x, w, bias=None, *, stride=1, padding="SAME", relu=False):
                           relu=relu, interpret=_interp())
 
 
+def conv2d_int8(x_q, w_q, w_scale, bias=None, *, x_scale=1.0, stride=1,
+                padding="SAME", relu=False, rows_per_block=8):
+    return _conv2d.conv2d_int8(x_q, w_q, w_scale, bias, x_scale=x_scale,
+                               stride=stride, padding=padding, relu=relu,
+                               rows_per_block=rows_per_block,
+                               interpret=_interp())
+
+
 def flash_attention(q, k, v, *, causal=True, bq=256, bk=256):
     return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                   interpret=_interp())

@@ -62,3 +62,8 @@ def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
         "image": jnp.stack([hmi, aia], axis=-1).astype(jnp.float32),
         "background_flux": jnp.array([1e-6 * 3.0], jnp.float32) * 1e6,
     }
+
+
+def synthetic_batch(key: jax.Array, n: int) -> Dict[str, jax.Array]:
+    from repro.models.common import batch_synthetic
+    return batch_synthetic(synthetic_input, key, n)

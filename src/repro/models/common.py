@@ -1,13 +1,24 @@
-"""Shared param init for op-graph models (He/LeCun init per op type)."""
+"""Shared param init for op-graph models (He/LeCun init per op type) and
+batched synthetic-input stacking."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.opgraph import Graph
+
+
+def batch_synthetic(synthetic_input: Callable, key: jax.Array, n: int
+                    ) -> Dict[str, jax.Array]:
+    """Stack ``n`` independent synthetic samples into ``[n, ...]`` inputs
+    (the layout the engine's batched execution plans consume)."""
+    keys = jax.random.split(key, n)
+    samples = [synthetic_input(k) for k in keys]
+    return {name: jnp.stack([s[name] for s in samples])
+            for name in samples[0]}
 
 
 def init_graph_params(g: Graph, key: jax.Array

@@ -89,3 +89,8 @@ def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
     sxr = jax.random.uniform(k2, (), minval=0.5, maxval=3.0)   # log-integr.
     radio = jax.random.uniform(k3, (), minval=0.3, maxval=2.5)
     return {"features": jnp.stack([lon, sxr, radio]).astype(jnp.float32)}
+
+
+def synthetic_batch(key: jax.Array, n: int) -> Dict[str, jax.Array]:
+    from repro.models.common import batch_synthetic
+    return batch_synthetic(synthetic_input, key, n)

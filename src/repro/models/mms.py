@@ -96,3 +96,8 @@ def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
     background = 0.05 * jax.random.uniform(k1, (32, 16, 32))
     dist = (beam + background)[..., None]
     return {"dist": dist.astype(jnp.float32)}
+
+
+def synthetic_batch(key: jax.Array, n: int) -> Dict[str, jax.Array]:
+    from repro.models.common import batch_synthetic
+    return batch_synthetic(synthetic_input, key, n)

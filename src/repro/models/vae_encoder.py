@@ -54,3 +54,8 @@ def synthetic_input(key: jax.Array) -> Dict[str, jax.Array]:
     field = pos + neg + 0.05 * jax.random.normal(k1, (h, w))
     img = jnp.stack([field, jnp.abs(field), 0.5 * field], axis=-1)
     return {"image": img.astype(jnp.float32)}
+
+
+def synthetic_batch(key: jax.Array, n: int) -> Dict[str, jax.Array]:
+    from repro.models.common import batch_synthetic
+    return batch_synthetic(synthetic_input, key, n)

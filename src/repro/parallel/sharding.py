@@ -23,6 +23,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map across jax versions: new API takes ``check_vma``,
+    older ones (top-level or experimental) call the same knob
+    ``check_rep``."""
+    try:
+        from jax import shard_map as _sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+    try:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
+    except TypeError:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+
 # ---------------------------------------------------------------------------
 # Rule tables
 # ---------------------------------------------------------------------------
@@ -201,7 +217,6 @@ def _sp_ready(mesh, seq: int, *dims_mod_model: int) -> bool:
 
 def sp_gather_seq(x: jax.Array, batch_logical: str = "batch") -> jax.Array:
     """[B, s/tp, D] seq-sharded -> [B, S, D] gathered, explicit bf16 wire."""
-    from jax import shard_map
     mesh = current_mesh()
     if not _sp_ready(mesh, x.shape[1]):
         return constrain(x, batch_logical, None, None) if mesh is not None else x
@@ -236,7 +251,6 @@ def tp_proj_scatter(inp: jax.Array, w: jax.Array, subscripts: str,
     inp: [B, S, ...] with the contracted dim model-sharded; w's
     ``w_sharded_dim`` is viewed P('model') (other dims replicated — jit
     gathers them, cheap for weight matrices)."""
-    from jax import shard_map
     mesh = current_mesh()
     contracted = inp.shape[-1] if inp.ndim == 3 else inp.shape[2]
     if not _sp_ready(mesh, inp.shape[1], contracted):
