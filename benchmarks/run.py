@@ -9,8 +9,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ["table1", "table2", "table3", "throughput", "table45",
-            "fig_power", "roofline", "lm_energy"]
+SECTIONS = ["table1", "table2", "table3", "throughput", "serving",
+            "table45", "fig_power", "roofline", "lm_energy"]
 
 
 def main() -> None:
@@ -36,6 +36,13 @@ def main() -> None:
     if "throughput" in wanted:
         from benchmarks import throughput
         throughput.main()
+        print()
+    failures = []
+    if "serving" in wanted:
+        from benchmarks import serving_load
+        if serving_load.main([]):
+            # keep running the remaining sections; fail at the end
+            failures.append("serving_load gate")
         print()
     if "table45" in wanted:
         from benchmarks import table45_context
@@ -64,6 +71,8 @@ def main() -> None:
             print("no dryrun ledger — skipping lm_energy", file=sys.stderr)
         print()
     print(f"benchmarks done in {time.time()-t0:.1f}s")
+    if failures:
+        sys.exit(f"failed: {', '.join(failures)}")
 
 
 if __name__ == "__main__":

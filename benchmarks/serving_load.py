@@ -1,0 +1,138 @@
+"""Serving-load benchmark — the continuous-batching scheduler under
+Poisson and bursty arrival traces -> BENCH_serving.json.
+
+Drives two co-served space models through one scheduler per trace shape
+and records per-model telemetry: p50/p99 latency against the use case's
+deadline, achieved fps, batch-fill per ladder rung, deadline misses, and
+the selective-downlink reduction. The virtual-clock trace makes the run
+deterministic up to measured kernel service times.
+
+Integrity is checked on every run (the acceptance gate for the bursty
+regime): every submitted request completes exactly once — no drops, no
+duplicates.
+
+    PYTHONPATH=src python -m benchmarks.serving_load            # full
+    PYTHONPATH=src python -m benchmarks.serving_load --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.scheduler import (ContinuousBatchingScheduler, DEFAULT_LADDER,
+                                  bursty_arrivals, poisson_arrivals)
+from repro.launch.serve import KEEP_PREDICATES
+from repro.models import SPACE_MODELS, synthetic_requests
+
+OUT_PATH = "BENCH_serving.json"
+MODELS = ("logistic_net", "multi_esperta")
+LADDER = DEFAULT_LADDER
+
+
+def _requests(name: str, n: int, seed: int) -> List[Dict]:
+    return synthetic_requests(SPACE_MODELS[name], n, seed=seed)
+
+
+def _traces(kind: str, n: int, rate: float, seed: int) -> List[float]:
+    if kind == "poisson":
+        return poisson_arrivals(rate, n, seed=seed)
+    # bursty: the instrument dumps half a ladder-top of samples at once,
+    # with inter-burst gaps sized to the same mean rate
+    burst = LADDER[-1] // 2
+    return bursty_arrivals(n, burst_size=burst, gap_s=burst / rate,
+                           seed=seed)
+
+
+def run_trace(kind: str, backend: str, n_per_model: int, rate: float,
+              engines: Dict[str, Engine], warmups: Dict[str, Dict]
+              ) -> List[Dict]:
+    sched = ContinuousBatchingScheduler()
+    trace = []
+    for mi, name in enumerate(MODELS):
+        sched.register(name, engines[name], backend=backend, ladder=LADDER,
+                       keep_predicate=KEEP_PREDICATES.get(name),
+                       warmup_sample=warmups[name])
+        reqs = _requests(name, n_per_model, seed=10 + mi)
+        trace += [(t, name, r) for t, r in
+                  zip(_traces(kind, n_per_model, rate, seed=20 + mi), reqs)]
+    end = sched.serve_trace(trace)
+
+    # integrity: every submitted request completed exactly once
+    rids = [c.rid for c in sched.completions]
+    n_dropped = len(trace) - len(set(rids))
+    n_duplicated = len(rids) - len(set(rids))
+    assert n_dropped == 0 and n_duplicated == 0, (n_dropped, n_duplicated)
+
+    rows = []
+    for name, tel in sched.telemetry().items():
+        row = tel.to_dict()
+        row.update(trace_kind=kind, backend=backend, rate_hz=rate,
+                   virtual_end_s=end, n_dropped=n_dropped,
+                   n_duplicated=n_duplicated,
+                   p99_under_deadline=tel.p99_latency_ms
+                   < tel.deadline_s * 1e3)
+        rows.append(row)
+        print(f"  [{kind}/{backend}] {name}: p50={tel.p50_latency_ms:.2f} ms "
+              f"p99={tel.p99_latency_ms:.2f} ms "
+              f"(deadline {tel.deadline_s*1e3:.0f} ms, "
+              f"{tel.deadline_misses} missed)  fps={tel.fps:.0f}  "
+              f"fill={tel.mean_batch_fill:.0%}  "
+              f"downlink -{tel.downlink_reduction:.0%}")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request counts for CI")
+    # a full top-rung batch (32) should fill well inside the tightest
+    # deadline window (150 ms): 384 req/s fills one in ~83 ms
+    ap.add_argument("--rate", type=float, default=384.0,
+                    help="per-model mean arrival rate (req/s)")
+    ap.add_argument("--backends", default="flex",
+                    help="comma list of backends to sweep")
+    args = ap.parse_args(argv)
+    n = 64 if args.smoke else 256
+
+    print(f"== serving load: {', '.join(MODELS)} x "
+          f"{{poisson, bursty}} @ {args.rate:.0f} req/s each ==")
+    rows: List[Dict] = []
+    for backend in args.backends.split(","):
+        engines, warmups = {}, {}
+        for name in MODELS:
+            m = SPACE_MODELS[name]
+            engines[name] = Engine(m.build_graph(),
+                                   m.init_params(jax.random.PRNGKey(0)))
+            warmups[name] = _requests(name, 1, seed=99)[0]
+            if backend == "accel":
+                engines[name].calibrate(_requests(name, 4, seed=98))
+        for kind in ("poisson", "bursty"):
+            rows += run_trace(kind, backend, n, args.rate, engines, warmups)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump({"n_per_model": n, "ladder": list(LADDER),
+                   "rows": rows}, f, indent=1)
+    print(f"[serving_load] wrote {len(rows)} rows -> {OUT_PATH}")
+
+    poisson_flex = [r for r in rows
+                    if r["trace_kind"] == "poisson" and r["backend"] == "flex"]
+    ok_fill = all(r["mean_batch_fill"] > 0.5 for r in poisson_flex)
+    ok_p99 = all(r["p99_under_deadline"] for r in poisson_flex)
+    print(f"[gate] poisson/flex batch-fill>50%: {ok_fill}  "
+          f"p99<deadline: {ok_p99}")
+    if args.smoke:
+        # CI runners have unpredictable speed; wall-clock p99 vs a mission
+        # deadline is a host property, not a code property — smoke gates
+        # only on the machine-independent invariants (fill; the no-drop /
+        # no-dup assert above).
+        return 0 if ok_fill else 1
+    return 0 if (ok_fill and ok_p99) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

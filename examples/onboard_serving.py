@@ -1,7 +1,9 @@
 """End-to-end on-board serving driver — the paper's mission scenario.
 
 Simulates one orbit segment of a spacecraft running two concurrent
-use cases through the batched, double-buffered serving pipeline:
+use cases through the continuous-batching scheduler — both models served
+from ONE process, round-robin, each with its own request queue, batch
+ladder, and mission-cadence deadline:
 
   * **event detection / selective downlink** — the MMS plasma-region
     classifier scans FPI ion-energy distributions and keeps only
@@ -9,8 +11,11 @@ use cases through the batched, double-buffered serving pipeline:
   * **compression** — the VAE encoder turns 128x256 magnetogram tiles
     into 6-float latents for downlink (1:16,384).
 
-Reports per-phase times (staging vs compute — Fig 11's observation),
-achieved FPS, and the end-to-end downlink-budget reduction.
+Requests arrive on interleaved Poisson traces (the instruments sample
+independently); the scheduler fills batches up to the ladder and flushes
+ragged tails when a deadline approaches. Reports per-model telemetry
+(p50/p99 latency vs deadline, batch fill, fps) and the end-to-end
+downlink-budget reduction.
 
 Run:  PYTHONPATH=src python examples/onboard_serving.py \
           [--requests 256] [--backend flex]
@@ -21,74 +26,85 @@ import jax
 import numpy as np
 
 from repro.core.engine import Engine
-from repro.core.pipeline import ServingPipeline
-from repro.models import SPACE_MODELS
+from repro.core.scheduler import (ContinuousBatchingScheduler, capped_ladder,
+                                  poisson_arrivals)
+from repro.models import SPACE_MODELS, synthetic_requests
 
 FP32 = 4
 
+USE_CASES = ("baseline_net", "vae_encoder")
 
-def run_use_case(name: str, n_requests: int, backend: str, batch: int):
-    m = SPACE_MODELS[name]
-    graph = m.build_graph()
-    engine = Engine(graph, m.init_params(jax.random.PRNGKey(0)))
-    key = jax.random.PRNGKey(1)
-    reqs = []
-    for _ in range(n_requests):
-        key, sub = jax.random.split(key)
-        reqs.append({k: np.asarray(v) for k, v in m.synthetic_input(sub).items()})
-    if backend == "accel":
-        engine.calibrate(reqs[:4])
 
-    if name == "vae_encoder":
-        keep = None                 # compression: every latent downlinks
-    else:
-        # MMS ROI policy: keep MSH/MSP crossings (paper's region-of-interest
-        # trigger) PLUS low-margin (uncertain) classifications for ground
-        # verification — the standard conservative on-board filter.
-        def keep(out):
-            head = np.sort(np.asarray(out["head"]).ravel())
-            margin = float(head[-1] - head[-2])
-            return int(out["region"]) >= 2 or margin < 0.113
-
-    pipe = ServingPipeline(engine, backend=backend, batch_size=batch,
-                           keep_predicate=keep)
-    stats = pipe.run(reqs)
-
-    in_bytes = sum(int(np.prod(s)) for s in graph.graph_inputs.values()) * FP32
-    if name == "vae_encoder":
-        out_bytes = 6 * FP32                       # latent downlink
-        downlinked = stats.n_requests * out_bytes
-    else:
-        out_bytes = in_bytes                       # kept raw samples downlink
-        downlinked = stats.n_kept * out_bytes
-    raw = stats.n_requests * in_bytes
-
-    ph = stats.phases
-    print(f"\n[{name}] {stats.n_requests} requests @ backend={backend}")
-    print(f"  fps={stats.fps:9.1f}   kept={stats.n_kept}")
-    print(f"  phases: stage_in={ph.stage_in*1e3:7.1f} ms  "
-          f"compute={ph.compute*1e3:7.1f} ms  "
-          f"overlapped={ph.overlapped*1e3:7.1f} ms  "
-          f"wall={ph.wall*1e3:7.1f} ms")
-    print(f"  downlink: raw={raw/1e6:.2f} MB -> sent={downlinked/1e6:.4f} MB "
-          f"({(1 - downlinked/raw)*100:.2f}% reduction)")
-    return raw, downlinked
+def keep_mms(out):
+    # MMS ROI policy: keep MSH/MSP crossings (paper's region-of-interest
+    # trigger) PLUS low-margin (uncertain) classifications for ground
+    # verification — the standard conservative on-board filter.
+    head = np.sort(np.asarray(out["head"]).ravel())
+    margin = float(head[-1] - head[-2])
+    return int(out["region"]) >= 2 or margin < 0.113
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=256,
+                    help="requests per use case")
     ap.add_argument("--backend", default="flex",
                     choices=["cpu", "flex", "accel"])
-    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=32,
+                    help="top batch-ladder rung")
+    # both conv-heavy use cases together saturate the CPU emulation host
+    # above ~20 req/s each; real accelerator hardware takes far more
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="per-instrument Poisson arrival rate (req/s)")
     args = ap.parse_args()
 
     print("== on-board inference: one orbit segment ==")
+    ladder = capped_ladder(args.batch)
+    sched = ContinuousBatchingScheduler()
+    graphs, trace = {}, []
+    for mi, name in enumerate(USE_CASES):
+        m = SPACE_MODELS[name]
+        graphs[name] = m.build_graph()
+        engine = Engine(graphs[name], m.init_params(jax.random.PRNGKey(0)))
+        reqs = synthetic_requests(m, args.requests, seed=1 + mi)
+        if args.backend == "accel":
+            engine.calibrate(reqs[:4])
+        # compression keeps everything (the latent IS the downlink product)
+        keep = keep_mms if name == "baseline_net" else None
+        # Mission-cadence deadlines for THIS host: BaselineNet gets the
+        # FPI *fast-survey* cadence (4.5 s) — the default burst-mode
+        # deadline (150 ms) budgets for the paper's FPGA latency, which
+        # this CPU emulation host can't match for the 3-D conv net — and
+        # the VAE gets the SHARP product cadence (45 s): compressed
+        # latents only downlink once per product anyway.
+        deadline = 4.5 if name == "baseline_net" else 45.0
+        sched.register(name, engine, backend=args.backend, ladder=ladder,
+                       deadline_s=deadline, keep_predicate=keep,
+                       warmup_sample=reqs[0])
+        trace += [(t, name, r) for t, r in
+                  zip(poisson_arrivals(args.rate, args.requests, seed=mi),
+                      reqs)]
+
+    end = sched.serve_trace(trace)
+    tel = sched.telemetry()
+    print(f"\n[schedule] {len(trace)} requests co-served in {end:.3f} s "
+          f"(virtual)\n" + sched.summary())
+
     totals = [0, 0]
-    for uc in ("baseline_net", "vae_encoder"):
-        raw, sent = run_use_case(uc, args.requests, args.backend, args.batch)
+    for name in USE_CASES:
+        t = tel[name]
+        in_bytes = sum(int(np.prod(s))
+                       for s in graphs[name].graph_inputs.values()) * FP32
+        if name == "vae_encoder":
+            downlinked = t.n_completed * 6 * FP32   # latent downlink
+        else:
+            downlinked = t.n_kept * in_bytes        # kept raw samples
+        raw = t.n_completed * in_bytes
+        print(f"[{name}] downlink: raw={raw/1e6:.2f} MB -> "
+              f"sent={downlinked/1e6:.4f} MB "
+              f"({(1 - downlinked/raw)*100:.2f}% reduction)")
         totals[0] += raw
-        totals[1] += sent
+        totals[1] += downlinked
     print(f"\n[mission] total raw {totals[0]/1e6:.2f} MB -> downlinked "
           f"{totals[1]/1e6:.4f} MB "
           f"({(1 - totals[1]/totals[0])*100:.2f}% downlink reduction)")

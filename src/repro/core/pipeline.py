@@ -12,6 +12,13 @@ requests whose model output crosses the trigger predicate are kept
 (e.g. MMS region-of-interest, ESPERTA warnings), everything else is
 dropped, and the achieved downlink-reduction ratio is reported (the
 paper's motivating metric).
+
+``ServingPipeline`` is the *single-model, single-batch-size synchronous
+core*: one compiled plan, one padded batch per call. The continuous-
+batching scheduler (core/scheduler.py) composes one pipeline per ladder
+rung and drives :meth:`execute_batch` per dispatch; :meth:`run` is the
+standalone fixed-batch streaming mode over a pre-materialized request
+list.
 """
 from __future__ import annotations
 
@@ -20,7 +27,6 @@ import time
 from typing import Callable, Dict, Iterable, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -52,6 +58,44 @@ class ServeStats:
         return 1.0 - self.n_kept / max(self.n_requests, 1)
 
 
+@dataclasses.dataclass
+class BatchResult:
+    """One dispatched batch: host outputs sliced back to the real requests,
+    the per-request selective-downlink verdicts, and per-phase timings."""
+    outputs: Dict[str, np.ndarray]      # [n_real, ...] — padding sliced off
+    keep: List[bool]                    # per real request
+    stage_time: float
+    compute_time: float
+    output_time: float
+
+    @property
+    def n_kept(self) -> int:
+        return sum(self.keep)
+
+
+def stage_batch(reqs: List[Dict[str, np.ndarray]], batch_size: int
+                ) -> Dict[str, jax.Array]:
+    """Stack request dicts into one ``[batch_size, ...]`` device batch,
+    padding a ragged tail by repeating the last sample (the padding rows
+    are sliced off after compute). The single staging/padding path shared
+    by the fixed-batch pipeline and the scheduler's ladder dispatches.
+
+    Assembly is host-side NumPy on purpose: staging must cost one device
+    transfer, never an XLA compile — jnp stacking would recompile for
+    every distinct ragged length the scheduler flushes."""
+    if not reqs:
+        raise ValueError("stage_batch needs at least one request")
+    if len(reqs) > batch_size:
+        raise ValueError(f"{len(reqs)} requests > batch size {batch_size}")
+    batch = {k: np.stack([np.asarray(r[k], np.float32) for r in reqs])
+             for k in reqs[0]}
+    if len(reqs) < batch_size:             # pad the ragged tail
+        pad = batch_size - len(reqs)
+        batch = {k: np.concatenate(
+            [v, np.repeat(v[-1:], pad, axis=0)]) for k, v in batch.items()}
+    return jax.device_put(batch)
+
+
 class ServingPipeline:
     """Micro-batched, double-buffered inference over a request stream.
 
@@ -72,17 +116,52 @@ class ServingPipeline:
         self._plan = engine.compile(backend, batch_size)
 
     def _stage(self, reqs: List[Dict[str, np.ndarray]]) -> Dict[str, jax.Array]:
-        batch = {k: jnp.stack([jnp.asarray(r[k], jnp.float32) for r in reqs])
-                 for k in reqs[0]}
-        if len(reqs) < self.batch_size:        # pad the ragged tail
-            pad = self.batch_size - len(reqs)
-            batch = {k: jnp.concatenate(
-                [v, jnp.repeat(v[-1:], pad, axis=0)]) for k, v in batch.items()}
-        return jax.device_put(batch)
+        return stage_batch(reqs, self.batch_size)
+
+    def _compute(self, staged: Dict[str, jax.Array], rng: jax.Array):
+        """One plan call; returns (device outputs, carried-over rng)."""
+        rngs = jax.random.split(rng, self.batch_size + 1)
+        out = self._plan(staged, rngs[1:])
+        jax.block_until_ready(out)
+        return out, rngs[0]
+
+    def _unstage(self, out: Dict[str, jax.Array], n_real: int
+                 ) -> Dict[str, np.ndarray]:
+        return {k: np.asarray(v)[:n_real] for k, v in out.items()}
+
+    def _keep(self, host_out: Dict[str, np.ndarray], n_real: int
+              ) -> List[bool]:
+        if self.keep_predicate is None:
+            return [True] * n_real
+        return [bool(self.keep_predicate({k: v[i] for k, v in host_out.items()}))
+                for i in range(n_real)]
+
+    # -- the scheduler's dispatch core --------------------------------------
+
+    def execute_batch(self, reqs: List[Dict[str, np.ndarray]],
+                      rng: Optional[jax.Array] = None) -> BatchResult:
+        """Serve exactly ONE (possibly ragged) batch synchronously:
+        stage + pad -> compiled plan -> slice padding -> keep predicate."""
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        t0 = time.perf_counter()
+        staged = self._stage(reqs)
+        t1 = time.perf_counter()
+        out, _ = self._compute(staged, rng)
+        t2 = time.perf_counter()
+        host_out = self._unstage(out, len(reqs))
+        keep = self._keep(host_out, len(reqs))
+        t3 = time.perf_counter()
+        return BatchResult(host_out, keep, stage_time=t1 - t0,
+                           compute_time=t2 - t1, output_time=t3 - t2)
+
+    # -- standalone fixed-batch streaming mode ------------------------------
 
     def run(self, requests: Iterable[Dict[str, np.ndarray]]) -> ServeStats:
         reqs = list(requests)
         phases = PhaseTimes()
+        if not reqs:                        # empty stream: zero-request stats
+            return ServeStats(n_requests=0, n_kept=0, phases=phases, fps=0.0)
         kept = 0
         rng = jax.random.PRNGKey(0)
         batches = [reqs[i:i + self.batch_size]
@@ -98,10 +177,7 @@ class ServingPipeline:
             current = staged
 
             t0 = time.perf_counter()
-            rngs = jax.random.split(rng, self.batch_size + 1)
-            rng, sub = rngs[0], rngs[1:]
-            out = self._plan(current, sub)
-            jax.block_until_ready(out)
+            out, rng = self._compute(current, rng)
             compute_t = time.perf_counter() - t0
 
             # double buffering: stage the NEXT batch while this one computes
@@ -118,16 +194,9 @@ class ServingPipeline:
             phases.overlapped += min(stage_t, compute_t)
 
             t0 = time.perf_counter()
-            host_out = {k: np.asarray(v)[:len(chunk)] for k, v in out.items()}
+            host_out = self._unstage(out, len(chunk))
+            kept += sum(self._keep(host_out, len(chunk)))
             phases.stage_out += time.perf_counter() - t0
-
-            if self.keep_predicate is not None:
-                for i in range(len(chunk)):
-                    if self.keep_predicate(
-                            {k: v[i] for k, v in host_out.items()}):
-                        kept += 1
-            else:
-                kept += len(chunk)
 
         phases.stage_in = sum(stage_times)
         fps = len(reqs) / max(phases.wall, 1e-12)

@@ -1,0 +1,520 @@
+"""Continuous-batching serving scheduler over the staged plan cache.
+
+The paper's motivating workload is a request *stream*: sensor frames
+arrive continuously (FPI ion distributions every survey cycle, SHARP
+magnetogram tiles, GOES channel samples) and are filtered on-board to
+ease downlink pressure. The fixed-batch ``ServingPipeline`` consumes a
+pre-materialized list at one batch size; this module adds the layer a
+real deployment needs on top of it:
+
+* **per-model request queues** with arrival timestamps and per-use-case
+  latency *deadlines* (each mission cadence implies one — see
+  ``DEFAULT_DEADLINES``),
+* a precompiled **batch-size ladder** per (model, backend): one compiled
+  executable per rung, built at ``register()`` time, so serving never
+  traces (PR-1's plan-cache contract),
+* a dispatch policy that **waits to fill**: a queue dispatches at the
+  largest ladder rung once it holds a full top-rung batch, but the
+  whole ragged tail is **flushed early into one padded batch** when the
+  oldest request's deadline gets within a safety margin of the measured
+  service time — batch-fill is traded for latency exactly when the
+  deadline forces it,
+* **round-robin fairness** across concurrently registered models (the
+  on-board reality: one accelerator, several instruments), and
+* per-model **telemetry**: p50/p99 latency, fps, batch-fill histogram
+  per rung, deadline misses, and the selective-downlink reduction ratio.
+
+Execution of one dispatched batch is delegated to
+``ServingPipeline.execute_batch`` (core/pipeline.py) — the scheduler owns
+*when and how many*, the pipeline owns *staging, padding, compute, and
+the keep predicate*.
+
+Two driving modes share the same ``step()`` core:
+
+* ``serve_trace(trace)`` — deterministic virtual-clock simulation:
+  arrivals happen at trace timestamps, service occupies the (measured)
+  execution time of each dispatched plan call. This is what the
+  benchmarks and property tests drive.
+* ``start()/submit()/stop()`` — a background dispatcher thread against
+  the wall clock, for asynchronous producers.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import BatchResult, ServingPipeline
+
+DEFAULT_LADDER = (1, 4, 16, 32)
+
+
+def capped_ladder(top: int, base: Sequence[int] = DEFAULT_LADDER
+                  ) -> Tuple[int, ...]:
+    """``base`` clamped to a caller-chosen top rung (which joins the
+    ladder if it isn't a base rung) — the one place launchers derive a
+    ladder from a ``--batch`` flag."""
+    if top < 1:
+        raise ValueError(f"top rung must be >= 1, got {top}")
+    return tuple(sorted({r for r in base if r < top} | {top}))
+
+# Per-use-case latency deadlines (seconds), mirroring mission cadences:
+# the MMS nets must keep up with FPI burst-mode distributions (150 ms
+# cadence); ESPERTA scores proton-event features as they are derived;
+# CNet ingests SDO full-disk images at ~1-min cadence; the VAE compresses
+# SHARP magnetogram tiles (45 s product cadence). A result that misses
+# the next sensor frame is stale, so the deadline is one cadence.
+DEFAULT_DEADLINES = {
+    "baseline_net": 0.150,
+    "reduced_net": 0.150,
+    "logistic_net": 0.150,
+    "multi_esperta": 1.0,
+    "cnet_plus_scalar": 2.0,
+    "vae_encoder": 1.0,
+}
+FALLBACK_DEADLINE = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    model: str
+    inputs: Dict[str, np.ndarray]
+    arrival: float
+    deadline: float                     # absolute completion deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    model: str
+    outputs: Dict[str, np.ndarray]
+    kept: bool
+    arrival: float
+    finished: float
+    rung: int                           # compiled batch size dispatched at
+    n_real: int                         # real (non-padding) requests in it
+    deadline: float
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+    @property
+    def missed_deadline(self) -> bool:
+        return self.finished > self.deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    model: str
+    rung: int
+    n_real: int
+    started: float
+    service_time: float
+    mode: str                           # 'full' | 'flush'
+
+    @property
+    def fill(self) -> float:
+        return self.n_real / self.rung
+
+
+@dataclasses.dataclass
+class ModelTelemetry:
+    model: str
+    deadline_s: float
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_kept: int = 0
+    deadline_misses: int = 0
+    fps: float = 0.0
+    p50_latency_ms: float = 0.0
+    p99_latency_ms: float = 0.0
+    mean_batch_fill: float = 0.0
+    fill_hist: Dict[int, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)           # rung -> {dispatches, mean_fill}
+    n_dispatches: int = 0
+
+    @property
+    def downlink_reduction(self) -> float:
+        return 1.0 - self.n_kept / max(self.n_completed, 1)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["fill_hist"] = {str(k): v for k, v in self.fill_hist.items()}
+        d["downlink_reduction"] = self.downlink_reduction
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces (virtual-clock simulation inputs)
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate_hz: float, n: int, seed: int = 0,
+                     start: float = 0.0) -> List[float]:
+    """``n`` Poisson-process arrival times at ``rate_hz`` (exp gaps)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return [float(t) for t in start + np.cumsum(gaps)]
+
+
+def bursty_arrivals(n: int, burst_size: int, gap_s: float,
+                    intra_s: float = 0.0, seed: int = 0,
+                    start: float = 0.0) -> List[float]:
+    """Bursts of ``burst_size`` back-to-back arrivals every ``gap_s``
+    (the paper's regime: an instrument dumps a survey window at once).
+    ``intra_s`` jitters samples inside a burst."""
+    rng = np.random.default_rng(seed)
+    times: List[float] = []
+    t = start
+    while len(times) < n:
+        for i in range(min(burst_size, n - len(times))):
+            times.append(float(t + (rng.uniform(0, intra_s)
+                                    if intra_s else 0.0)))
+        t += gap_s
+    return sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# Per-model service state
+# ---------------------------------------------------------------------------
+
+
+class _ModelService:
+    def __init__(self, name: str, pipelines: Dict[int, ServingPipeline],
+                 deadline_s: float, flush_safety: float):
+        self.name = name
+        self.pipelines = pipelines
+        self.ladder: Tuple[int, ...] = tuple(sorted(pipelines))
+        self.deadline_s = deadline_s
+        self.flush_safety = flush_safety
+        self.queue: Deque[Request] = deque()
+        self.n_submitted = 0
+        # EWMA service-time estimate per rung (seeded by register warmup)
+        self.est_service: Dict[int, float] = {}
+        self._rng = jax.random.PRNGKey(
+            int(np.frombuffer(name.encode()[:4].ljust(4, b"\0"),
+                              np.uint32)[0]))
+
+    def next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def observe_service(self, rung: int, seconds: float) -> None:
+        old = self.est_service.get(rung)
+        self.est_service[rung] = (seconds if old is None
+                                  else 0.5 * old + 0.5 * seconds)
+
+    def flush_margin(self) -> float:
+        """How long before the oldest deadline we must start computing:
+        safety x the worst measured rung service time (0 until measured —
+        then the first dispatch itself seeds the estimate)."""
+        worst = max(self.est_service.values(), default=0.0)
+        return self.flush_safety * worst
+
+    def flush_time(self) -> Optional[float]:
+        if not self.queue:
+            return None
+        return self.queue[0].deadline - self.flush_margin()
+
+    def pick(self, now: float) -> Optional[Tuple[str, int, int]]:
+        """(mode, rung, n_real) to dispatch at ``now``, or None to wait.
+
+        * ``full``  — a full top-rung batch is waiting: dispatch it at
+          100% fill (the largest ladder rung <= queue depth).
+        * ``flush`` — the oldest request's deadline is within the safety
+          margin: flush the WHOLE ragged tail as one batch, padded up to
+          the smallest rung that holds it (its queue-mates' deadlines
+          trail the oldest by arrival gaps, so one padded dispatch
+          minimizes their worst-case latency too).
+        """
+        depth = len(self.queue)
+        if depth == 0:
+            return None
+        top = self.ladder[-1]
+        if depth >= top:
+            return ("full", top, top)
+        ft = self.flush_time()
+        if ft is not None and ft <= now:
+            n_real = min(depth, top)
+            rung = self.ladder[bisect.bisect_left(self.ladder, n_real)]
+            return ("flush", rung, n_real)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+class ContinuousBatchingScheduler:
+    """Co-serves several space models from one process: per-model queues,
+    a precompiled batch ladder each, deadline-bounded batch filling, and
+    round-robin dispatch across models."""
+
+    def __init__(self, flush_safety: float = 2.0):
+        self.flush_safety = flush_safety
+        self._svcs: Dict[str, _ModelService] = {}
+        self._order: List[str] = []     # round-robin rotation
+        self._rr = 0
+        self._next_rid = 0
+        self._lock = threading.RLock()
+        self.completions: List[Completion] = []
+        self.dispatches: List[DispatchRecord] = []
+        self._thread: Optional[threading.Thread] = None
+        self._thread_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+    # -- setup --------------------------------------------------------------
+
+    def register(self, name: str, engine, backend: str = "flex",
+                 ladder: Sequence[int] = DEFAULT_LADDER,
+                 deadline_s: Optional[float] = None,
+                 keep_predicate: Optional[Callable] = None,
+                 warmup_sample: Optional[Dict[str, np.ndarray]] = None
+                 ) -> None:
+        """Precompile the batch ladder for ``(engine, backend)`` and open a
+        queue. ``warmup_sample`` (one request dict) additionally runs every
+        rung once, paying XLA first-call costs up front and seeding the
+        service-time estimates the deadline-flush margin uses."""
+        ladder = tuple(sorted(set(int(r) for r in ladder)))
+        if not ladder or ladder[0] < 1:
+            raise ValueError(f"bad ladder {ladder}")
+        pipelines = {r: ServingPipeline(engine, backend=backend, batch_size=r,
+                                        keep_predicate=keep_predicate)
+                     for r in ladder}
+        if deadline_s is None:
+            deadline_s = DEFAULT_DEADLINES.get(name, FALLBACK_DEADLINE)
+        svc = _ModelService(name, pipelines, deadline_s, self.flush_safety)
+        if warmup_sample is not None:
+            for rung in ladder:
+                # first call pays XLA first-run costs; the second is the
+                # steady-state service time the flush margin budgets for
+                pipelines[rung].execute_batch([warmup_sample] * rung)
+                t0 = time.perf_counter()
+                pipelines[rung].execute_batch([warmup_sample] * rung)
+                svc.observe_service(rung, time.perf_counter() - t0)
+        with self._lock:
+            if name in self._svcs:
+                raise ValueError(f"model {name!r} already registered")
+            self._svcs[name] = svc
+            self._order.append(name)
+
+    @property
+    def models(self) -> List[str]:
+        return list(self._order)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, model: str, inputs: Dict[str, np.ndarray],
+               arrival: Optional[float] = None) -> int:
+        """Enqueue one request; returns its id. ``arrival`` defaults to the
+        wall clock (async mode); trace mode passes virtual timestamps."""
+        with self._lock:
+            svc = self._svcs[model]
+            arrival = time.monotonic() if arrival is None else float(arrival)
+            rid = self._next_rid
+            self._next_rid += 1
+            svc.queue.append(Request(rid, model, inputs, arrival,
+                                     arrival + svc.deadline_s))
+            svc.n_submitted += 1
+            return rid
+
+    # -- dispatch core ------------------------------------------------------
+
+    def step(self, now: float, force: bool = False
+             ) -> Optional[DispatchRecord]:
+        """Dispatch at most ONE batch: scan models round-robin from the
+        rotation pointer, serve the first one with a ready queue, advance
+        the pointer past it. ``force`` flushes regardless of deadlines
+        (used by drain). Returns the dispatch record, or None if every
+        queue is waiting."""
+        with self._lock:
+            n = len(self._order)
+            for k in range(n):
+                name = self._order[(self._rr + k) % n]
+                svc = self._svcs[name]
+                picked = svc.pick(now)
+                if picked is None and force and svc.queue:
+                    depth = min(len(svc.queue), svc.ladder[-1])
+                    rung = svc.ladder[bisect.bisect_left(svc.ladder, depth)]
+                    picked = ("flush", rung, depth)
+                if picked is None:
+                    continue
+                mode, rung, n_real = picked
+                reqs = [svc.queue.popleft() for _ in range(n_real)]
+                self._rr = (self._rr + k + 1) % n
+                break
+            else:
+                return None
+            rng = svc.next_rng()
+
+        t0 = time.perf_counter()
+        try:
+            result: BatchResult = svc.pipelines[rung].execute_batch(
+                [r.inputs for r in reqs], rng=rng)
+        except BaseException:
+            # no silent loss: put the popped batch back at the queue head
+            # (original order) before surfacing the error
+            with self._lock:
+                svc.queue.extendleft(reversed(reqs))
+            raise
+        service = time.perf_counter() - t0
+
+        with self._lock:
+            svc.observe_service(rung, service)
+            finished = now + service
+            rec = DispatchRecord(svc.name, rung, n_real, now, service, mode)
+            self.dispatches.append(rec)
+            for i, req in enumerate(reqs):
+                self.completions.append(Completion(
+                    req.rid, req.model,
+                    {k: v[i] for k, v in result.outputs.items()},
+                    result.keep[i], req.arrival, finished, rung, n_real,
+                    req.deadline))
+            return rec
+
+    def next_event_time(self) -> Optional[float]:
+        """Earliest deadline-flush instant across nonempty queues."""
+        with self._lock:
+            times = [svc.flush_time() for svc in self._svcs.values()]
+            times = [t for t in times if t is not None]
+            return min(times) if times else None
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(svc.queue) for svc in self._svcs.values())
+
+    def drain(self, now: float) -> float:
+        """Flush every queue to empty (end of stream); returns the final
+        virtual time."""
+        while self.pending():
+            rec = self.step(now, force=True)
+            if rec is not None:
+                now += rec.service_time
+        return now
+
+    # -- virtual-clock trace serving ----------------------------------------
+
+    def serve_trace(self, trace: Sequence[Tuple[float, str, Dict]],
+                    start: float = 0.0) -> float:
+        """Serve a pre-built arrival trace of ``(t, model, inputs)`` under a
+        virtual clock: arrivals occur at trace time, each dispatch occupies
+        its measured execution time. Deterministic given the trace; returns
+        the final virtual time."""
+        ev = sorted(trace, key=lambda e: e[0])
+        now, i, n = start, 0, len(ev)
+        while i < n or self.pending():
+            while i < n and ev[i][0] <= now + 1e-12:
+                self.submit(ev[i][1], ev[i][2], arrival=ev[i][0])
+                i += 1
+            rec = self.step(now)
+            if rec is not None:
+                now += rec.service_time         # server busy while computing
+                continue
+            nxt = ev[i][0] if i < n else None
+            ft = self.next_event_time()
+            if ft is not None:
+                nxt = ft if nxt is None else min(nxt, ft)
+            if nxt is None:
+                break
+            now = max(now, nxt)
+        return now
+
+    # -- asynchronous (wall-clock) mode -------------------------------------
+
+    def start(self, poll_s: float = 0.001) -> None:
+        """Run the dispatcher on a background thread against the wall
+        clock; producers call :meth:`submit` concurrently."""
+        if self._thread is not None:
+            raise RuntimeError("scheduler already started")
+        self._stop.clear()
+        self._thread_error = None
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    rec = self.step(time.monotonic())
+                except BaseException as ex:     # batch re-queued by step()
+                    self._thread_error = ex
+                    return
+                if rec is None:
+                    time.sleep(poll_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="cb-scheduler")
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the dispatcher thread; by default flush what's queued.
+        Re-raises an error that killed the dispatcher (its batch was
+        re-queued, so nothing was lost — but serving DID stop)."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        if self._thread_error is not None:
+            err, self._thread_error = self._thread_error, None
+            raise err
+        if drain:
+            self.drain(time.monotonic())
+
+    # -- telemetry ----------------------------------------------------------
+
+    def telemetry(self) -> Dict[str, ModelTelemetry]:
+        with self._lock:
+            out: Dict[str, ModelTelemetry] = {}
+            for name, svc in self._svcs.items():
+                tel = ModelTelemetry(name, svc.deadline_s,
+                                     n_submitted=svc.n_submitted)
+                comps = [c for c in self.completions if c.model == name]
+                disps = [d for d in self.dispatches if d.model == name]
+                tel.n_completed = len(comps)
+                tel.n_kept = sum(c.kept for c in comps)
+                tel.deadline_misses = sum(c.missed_deadline for c in comps)
+                tel.n_dispatches = len(disps)
+                if comps:
+                    lat = np.array([c.latency for c in comps])
+                    tel.p50_latency_ms = float(np.percentile(lat, 50) * 1e3)
+                    tel.p99_latency_ms = float(np.percentile(lat, 99) * 1e3)
+                    span = (max(c.finished for c in comps)
+                            - min(c.arrival for c in comps))
+                    tel.fps = len(comps) / max(span, 1e-12)
+                if disps:
+                    tel.mean_batch_fill = float(
+                        np.mean([d.fill for d in disps]))
+                    for rung in svc.ladder:
+                        at = [d.fill for d in disps if d.rung == rung]
+                        if at:
+                            tel.fill_hist[rung] = {
+                                "dispatches": len(at),
+                                "mean_fill": float(np.mean(at))}
+                out[name] = tel
+            return out
+
+    def summary(self) -> str:
+        lines = []
+        for name, tel in self.telemetry().items():
+            lines.append(
+                f"[{name}] {tel.n_completed}/{tel.n_submitted} served  "
+                f"fps={tel.fps:.1f}  p50={tel.p50_latency_ms:.2f} ms  "
+                f"p99={tel.p99_latency_ms:.2f} ms "
+                f"(deadline {tel.deadline_s*1e3:.0f} ms, "
+                f"{tel.deadline_misses} missed)  "
+                f"fill={tel.mean_batch_fill:.0%} over {tel.n_dispatches} "
+                f"dispatches  kept={tel.n_kept} "
+                f"(downlink -{tel.downlink_reduction:.0%})")
+        return "\n".join(lines)

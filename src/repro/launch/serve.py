@@ -2,16 +2,19 @@
 
 Two modes:
 
-* ``space``: serve one of the six space use-case models through the
-  dual-backend engine + batched pipeline, with the use case's selective-
-  downlink predicate (the paper's motivating workload).
+* ``space``: serve one or more of the six space use-case models through
+  the continuous-batching scheduler (dual-backend engine + precompiled
+  batch ladder + deadline flushing), with each use case's selective-
+  downlink predicate (the paper's motivating workload). ``--model``
+  takes a comma list to co-serve several models from one process;
+  requests arrive on a per-model Poisson trace at ``--rate`` req/s.
 * ``lm``: prefill + decode loop for an assigned LM architecture (reduced
   config on CPU; production configs go through the dry-run/pod path).
 
 Usage::
 
-    PYTHONPATH=src python -m repro.launch.serve --model baseline_net \
-        --backend flex --requests 64
+    PYTHONPATH=src python -m repro.launch.serve \
+        --model baseline_net,vae_encoder --backend flex --requests 64
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
         --arch tinyllama-1.1b --smoke --tokens 32
 """
@@ -26,10 +29,11 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.core.engine import Engine
-from repro.core.pipeline import ServingPipeline
+from repro.core.scheduler import (ContinuousBatchingScheduler,
+                                  capped_ladder, poisson_arrivals)
 from repro.core import inspector
 from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import SPACE_MODELS
+from repro.models import SPACE_MODELS, synthetic_requests
 from repro.nn import model as model_lib
 from repro.nn.dims import compute_dims
 
@@ -50,35 +54,39 @@ KEEP_PREDICATES = {
 
 
 def serve_space(args) -> int:
-    m = SPACE_MODELS[args.model]
-    graph = m.build_graph()
-    params = m.init_params(jax.random.PRNGKey(1))
-    engine = Engine(graph, params)
+    names = [n.strip() for n in args.model.split(",") if n.strip()]
+    unknown = [n for n in names if n not in SPACE_MODELS]
+    if unknown or not names:
+        raise SystemExit(f"unknown model(s) {unknown}; choose from "
+                         f"{', '.join(sorted(SPACE_MODELS))}")
+    ladder = capped_ladder(args.batch)
 
-    report = inspector.inspect(graph)
-    print(report.summary())
+    sched = ContinuousBatchingScheduler()
+    trace = []
+    for mi, name in enumerate(names):
+        m = SPACE_MODELS[name]
+        graph = m.build_graph()
+        engine = Engine(graph, m.init_params(jax.random.PRNGKey(1)))
+        print(inspector.inspect(graph).summary())
 
-    key = jax.random.PRNGKey(0)
-    reqs = []
-    for i in range(args.requests):
-        key, sub = jax.random.split(key)
-        reqs.append({k: np.asarray(v) for k, v in m.synthetic_input(sub).items()})
+        reqs = synthetic_requests(m, args.requests, seed=mi)
+        if args.backend == "accel":
+            print(f"[ptq] {name}: calibrating on 4 samples")
+            engine.calibrate(reqs[:4])
 
-    if args.backend == "accel":
-        print("[ptq] calibrating on 4 samples")
-        engine.calibrate(reqs[:4])
+        sched.register(name, engine, backend=args.backend, ladder=ladder,
+                       keep_predicate=KEEP_PREDICATES.get(name),
+                       warmup_sample=reqs[0] if reqs else None)
+        trace += [(t, name, r) for t, r in
+                  zip(poisson_arrivals(args.rate, args.requests, seed=mi),
+                      reqs)]
 
-    pipe = ServingPipeline(engine, backend=args.backend,
-                           batch_size=args.batch,
-                           keep_predicate=KEEP_PREDICATES.get(args.model))
-    stats = pipe.run(reqs)
-    ph = stats.phases
-    print(f"[serve] {stats.n_requests} requests  fps={stats.fps:.1f}  "
-          f"kept={stats.n_kept} (downlink reduction "
-          f"{stats.downlink_reduction:.0%})")
-    print(f"[phases] stage_in={ph.stage_in*1e3:.1f} ms  "
-          f"compute={ph.compute*1e3:.1f} ms  stage_out={ph.stage_out*1e3:.1f} ms  "
-          f"overlapped={ph.overlapped*1e3:.1f} ms  wall={ph.wall*1e3:.1f} ms")
+    t0 = time.perf_counter()
+    end = sched.serve_trace(trace)
+    wall = time.perf_counter() - t0
+    print(f"[serve] {len(trace)} requests over {len(names)} model(s)  "
+          f"virtual={end:.3f} s  wall={wall:.3f} s")
+    print(sched.summary())
     return 0
 
 
@@ -139,11 +147,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="space", choices=["space", "lm"])
     ap.add_argument("--model", default="baseline_net",
-                    choices=sorted(SPACE_MODELS))
+                    help="comma list of space models to co-serve "
+                         f"({', '.join(sorted(SPACE_MODELS))})")
     ap.add_argument("--backend", default="flex",
                     choices=["cpu", "flex", "accel"])
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per model")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="top batch-ladder rung")
+    ap.add_argument("--rate", type=float, default=256.0,
+                    help="per-model Poisson arrival rate (req/s)")
     # lm mode
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

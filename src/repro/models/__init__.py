@@ -5,9 +5,10 @@ Registry keys match the paper's Table I rows. ``synthetic_batch`` yields
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple
+from typing import Callable, Dict, List, NamedTuple
 
 import jax
+import numpy as np
 
 from repro.models import cnet_plus_scalar, esperta, mms, vae_encoder
 
@@ -51,3 +52,17 @@ SPACE_MODELS: Dict[str, SpaceModel] = {
         mms.synthetic_input, mms.synthetic_batch,
         915_492, 110_541_696, "hls"),
 }
+
+
+def synthetic_requests(model: SpaceModel, n: int, seed: int = 0
+                       ) -> List[Dict[str, np.ndarray]]:
+    """``n`` independent synthetic request dicts as host numpy arrays —
+    the request-staging convention every serving driver and test shares
+    (one PRNG split chain from ``seed``, one dict per request)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        out.append({k: np.asarray(v)
+                    for k, v in model.synthetic_input(sub).items()})
+    return out

@@ -1,0 +1,98 @@
+"""Golden regression fixtures — every space model's outputs for a fixed
+PRNG synthetic batch, digested into an in-repo JSON file.
+
+Future kernel/plan/scheduler refactors cannot silently drift numerics:
+any change to what the compiled plans actually compute shows up as a
+mismatch against ``tests/golden/space_models.json``. Float outputs are
+compared at float-associativity tolerance (BLAS/XLA may reorder last-ulp
+across hosts); integer outputs (argmax classes) must match exactly.
+
+Regenerate (after an INTENTIONAL numeric change, with justification in
+the PR):
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+"""
+import json
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.models import SPACE_MODELS
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "space_models.json"
+BACKENDS = ("flex", "accel")
+BATCH = 2
+INPUT_KEY = 123
+PARAM_KEY = 0
+N_CALIB = 2
+MAX_STORED = 64          # per output: head of the flattened array
+
+
+def _compute_digest():
+    digest = {}
+    for name in sorted(SPACE_MODELS):
+        m = SPACE_MODELS[name]
+        e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(PARAM_KEY)))
+        e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                     for i in range(N_CALIB)])
+        inputs = m.synthetic_batch(jax.random.PRNGKey(INPUT_KEY), BATCH)
+        rngs = jax.random.split(jax.random.PRNGKey(7), BATCH)
+        digest[name] = {}
+        for backend in BACKENDS:
+            out = e.run_batch(inputs, backend, rngs)
+            digest[name][backend] = {}
+            for k, v in out.items():
+                a = np.asarray(v)
+                flat = a.ravel()[:MAX_STORED]
+                digest[name][backend][k] = {
+                    "shape": list(a.shape),
+                    "dtype": str(a.dtype),
+                    "sum": float(a.astype(np.float64).sum()),
+                    "values": [float(x) for x in flat.astype(np.float64)],
+                }
+    return digest
+
+
+@pytest.fixture(scope="module")
+def computed():
+    return _compute_digest()
+
+
+def test_golden_fixture_exists_or_regen(computed):
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN_PATH.parent.mkdir(exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(computed, f, indent=1, sort_keys=True)
+    assert GOLDEN_PATH.exists(), (
+        f"missing {GOLDEN_PATH}; run with REGEN_GOLDEN=1 to create it")
+
+
+@pytest.mark.parametrize("name", sorted(SPACE_MODELS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_outputs_match(name, backend, computed):
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert name in golden, f"no golden entry for {name}; REGEN_GOLDEN=1"
+    want = golden[name][backend]
+    got = computed[name][backend]
+    assert set(want) == set(got), (set(want), set(got))
+    for k in want:
+        w, g = want[k], got[k]
+        assert g["shape"] == w["shape"], (name, backend, k)
+        assert g["dtype"] == w["dtype"], (name, backend, k)
+        if np.issubdtype(np.dtype(w["dtype"]), np.integer):
+            np.testing.assert_array_equal(
+                g["values"], w["values"],
+                err_msg=f"{name}/{backend}/{k} (integer output drifted)")
+            assert g["sum"] == w["sum"], (name, backend, k)
+        else:
+            np.testing.assert_allclose(
+                g["values"], w["values"], rtol=1e-4, atol=1e-5,
+                err_msg=f"{name}/{backend}/{k} (numeric drift vs golden)")
+            np.testing.assert_allclose(
+                g["sum"], w["sum"], rtol=1e-4, atol=1e-4,
+                err_msg=f"{name}/{backend}/{k} (sum drifted)")

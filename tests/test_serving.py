@@ -1,0 +1,302 @@
+"""Serving-layer regression tests: pipeline ragged tails, the empty
+stream, and the continuous-batching scheduler.
+
+* Empty request stream returns a zero-request ServeStats (seed crashed
+  with ``reqs[0]`` IndexError).
+* Ragged-tail losslessness: for stream lengths NOT divisible by the
+  batch size, pipeline/scheduler outputs are BIT-identical to the same
+  compiled plan run on a manually padded batch — staging, padding, and
+  slice-off introduce no numeric change whatsoever.
+* Per-sample equivalence: pipeline/scheduler outputs match a loop of
+  single-sample ``Engine.run`` calls. On the fully-int8 accel path this
+  is bit-exact (static scales, int32 accumulation); fp32 flex matmuls
+  reduce in a batch-size-dependent order, so the flex bound is float
+  associativity (~1e-6 relative), with bitwise equality additionally
+  asserted for the int8-exact model/backend cell.
+* Scheduler: co-serves two models round-robin, drops/duplicates nothing,
+  dispatches only ladder rungs, precompiles the ladder (serving never
+  re-traces), and the async wall-clock mode completes every request.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.pipeline import ServeStats, ServingPipeline, stage_batch
+from repro.core.scheduler import (ContinuousBatchingScheduler,
+                                  bursty_arrivals, poisson_arrivals)
+from repro.models import SPACE_MODELS, synthetic_requests
+
+# two cheap space models, one per paper toolchain family
+MODELS = ("logistic_net", "multi_esperta")
+
+
+@pytest.fixture(scope="module")
+def engines():
+    out = {}
+    for name in MODELS:
+        m = SPACE_MODELS[name]
+        e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                     for i in range(2)])
+        out[name] = (m, e)
+    return out
+
+
+def _requests(m, n, seed=3):
+    return synthetic_requests(m, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# empty stream (seed regression: IndexError at reqs[0])
+# ---------------------------------------------------------------------------
+
+
+def test_empty_stream_returns_zero_stats(engines):
+    _, e = engines["logistic_net"]
+    pipe = ServingPipeline(e, backend="flex", batch_size=4)
+    stats = pipe.run([])
+    assert isinstance(stats, ServeStats)
+    assert stats.n_requests == 0 and stats.n_kept == 0
+    assert stats.fps == 0.0 and stats.phases.wall == 0.0
+    assert stats.downlink_reduction == 1.0  # nothing sent
+
+
+def test_stage_batch_rejects_empty_and_oversize(engines):
+    m, _ = engines["logistic_net"]
+    with pytest.raises(ValueError):
+        stage_batch([], 4)
+    with pytest.raises(ValueError):
+        stage_batch(_requests(m, 5), 4)
+
+
+# ---------------------------------------------------------------------------
+# ragged tails
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_ragged_tail_bit_identical_to_padded_plan(name, backend, engines):
+    """Pipeline output for a ragged stream == the SAME compiled plan fed a
+    manually padded batch, bit for bit: the serving layer's staging,
+    padding, and slicing add zero numeric perturbation."""
+    m, e = engines[name]
+    B, L = 4, 7                                   # 7 % 4 != 0
+    reqs = _requests(m, L)
+    pipe = ServingPipeline(e, backend=backend, batch_size=B)
+
+    for lo in range(0, L, B):
+        chunk = reqs[lo:lo + B]
+        got = pipe.execute_batch(chunk).outputs
+        padded = chunk + [chunk[-1]] * (B - len(chunk))
+        ref = e.run_batch(
+            {k: np.stack([np.asarray(r[k], np.float32) for r in padded])
+             for k in padded[0]}, backend)
+        for k in ref:
+            np.testing.assert_array_equal(
+                got[k], np.asarray(ref[k])[:len(chunk)],
+                err_msg=f"{name}/{backend}/{k} chunk@{lo}")
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_ragged_tail_matches_per_sample_engine_run(name, backend, engines):
+    """Pipeline over a ragged stream == a loop of per-sample Engine.run.
+    Bit-for-bit on the fully-int8 cell; float-associativity tolerance on
+    fp32 cells (batched gemms reduce in batch-size-dependent order)."""
+    m, e = engines[name]
+    B, L = 4, 7
+    reqs = _requests(m, L)
+    pipe = ServingPipeline(e, backend=backend, batch_size=B)
+    outs = []
+    for lo in range(0, L, B):
+        res = pipe.execute_batch(reqs[lo:lo + B])
+        outs += [{k: v[i] for k, v in res.outputs.items()}
+                 for i in range(len(res.keep))]
+    assert len(outs) == L
+    bit_exact = name == "multi_esperta" and backend == "accel"
+    for i, req in enumerate(reqs):
+        single = e.run(req, backend)
+        for k in single:
+            a, b = outs[i][k], np.asarray(single[k])
+            if bit_exact:
+                np.testing.assert_array_equal(a, b,
+                                              err_msg=f"{name}/{backend}/{k}")
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                           err_msg=f"{name}/{backend}/{k}")
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_scheduler_ragged_stream_matches_per_sample(name, backend, engines):
+    """Scheduler-served outputs (ladder dispatch + deadline flushes over a
+    non-rung-aligned stream) match per-sample Engine.run, request by
+    request."""
+    m, e = engines[name]
+    L = 11                                        # not on any rung boundary
+    reqs = _requests(m, L)
+    sched = ContinuousBatchingScheduler()
+    sched.register(name, e, backend=backend, ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    trace = [(0.001 * i, name, r) for i, r in enumerate(reqs)]
+    sched.serve_trace(trace)
+
+    comps = {c.rid: c for c in sched.completions}
+    assert len(comps) == L
+    bit_exact = name == "multi_esperta" and backend == "accel"
+    for rid, req in enumerate(reqs):
+        single = e.run(req, backend)
+        for k in single:
+            a, b = comps[rid].outputs[k], np.asarray(single[k])
+            if bit_exact:
+                np.testing.assert_array_equal(a, b,
+                                              err_msg=f"{name}/{backend}/{k}")
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                           err_msg=f"{name}/{backend}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# scheduler behavior
+# ---------------------------------------------------------------------------
+
+
+def _co_serve(engines, trace_fn, n=40):
+    sched = ContinuousBatchingScheduler()
+    trace = []
+    for mi, name in enumerate(MODELS):
+        m, e = engines[name]
+        reqs = _requests(m, n, seed=7 + mi)
+        sched.register(name, e, backend="flex", ladder=(1, 4, 16),
+                       warmup_sample=reqs[0])
+        trace += [(t, name, r)
+                  for t, r in zip(trace_fn(n, seed=30 + mi), reqs)]
+    sched.serve_trace(trace)
+    return sched, trace
+
+
+def test_scheduler_co_serves_two_models_no_drop_no_dup(engines):
+    sched, trace = _co_serve(
+        engines, lambda n, seed: poisson_arrivals(400.0, n, seed=seed))
+    rids = [c.rid for c in sched.completions]
+    assert len(rids) == len(trace)                # nothing dropped
+    assert len(set(rids)) == len(rids)            # nothing duplicated
+    per_model = {name: sum(1 for c in sched.completions if c.model == name)
+                 for name in MODELS}
+    assert all(v == len(trace) // 2 for v in per_model.values())
+
+
+def test_scheduler_bursty_trace_integrity(engines):
+    sched, trace = _co_serve(
+        engines,
+        lambda n, seed: bursty_arrivals(n, burst_size=8, gap_s=0.02,
+                                        seed=seed))
+    rids = sorted(c.rid for c in sched.completions)
+    assert rids == list(range(len(trace)))
+
+
+def test_scheduler_dispatches_only_ladder_rungs(engines):
+    sched, _ = _co_serve(
+        engines, lambda n, seed: poisson_arrivals(300.0, n, seed=seed), n=37)
+    assert sched.dispatches
+    for d in sched.dispatches:
+        assert d.rung in (1, 4, 16)
+        assert 1 <= d.n_real <= d.rung
+
+
+def test_scheduler_precompiles_ladder_and_never_retraces(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 25)
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4, 16),
+                   warmup_sample=reqs[0])
+    traces_before = e.planned("flex").n_traces
+    trace = [(0.002 * i, "logistic_net", r) for i, r in enumerate(reqs)]
+    sched.serve_trace(trace)
+    assert e.planned("flex").n_traces == traces_before   # zero serving traces
+    assert len(sched.completions) == len(reqs)
+
+
+def test_scheduler_telemetry_fields(engines):
+    sched, trace = _co_serve(
+        engines, lambda n, seed: poisson_arrivals(500.0, n, seed=seed))
+    tel = sched.telemetry()
+    assert set(tel) == set(MODELS)
+    for name, t in tel.items():
+        assert t.n_completed == t.n_submitted == len(trace) // 2
+        assert t.p99_latency_ms >= t.p50_latency_ms >= 0.0
+        assert 0.0 < t.mean_batch_fill <= 1.0
+        assert t.n_dispatches == sum(
+            h["dispatches"] for h in t.fill_hist.values())
+        d = t.to_dict()                           # JSON-ready
+        import json
+        json.dumps(d)
+
+
+def test_scheduler_keep_predicate_threads_through(engines):
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 20)
+    sched = ContinuousBatchingScheduler()
+    sched.register("multi_esperta", e, backend="flex", ladder=(1, 4),
+                   keep_predicate=lambda out: False,
+                   warmup_sample=reqs[0])
+    sched.serve_trace([(0.001 * i, "multi_esperta", r)
+                       for i, r in enumerate(reqs)])
+    tel = sched.telemetry()["multi_esperta"]
+    assert tel.n_kept == 0 and tel.downlink_reduction == 1.0
+    assert all(not c.kept for c in sched.completions)
+
+
+def test_scheduler_execution_error_requeues_batch(engines):
+    """A batch that fails mid-execute is put back at the queue head (no
+    silent loss) and the error surfaces to the caller."""
+    m, e = engines["logistic_net"]
+    good = _requests(m, 3)
+    bad = {"wrong_key": np.zeros((2, 2), np.float32)}   # stage KeyError
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=good[0])
+    with pytest.raises(Exception):
+        sched.serve_trace([(0.0, "logistic_net", good[0]),
+                           (0.001, "logistic_net", bad),
+                           (0.002, "logistic_net", good[1])])
+    done = len(sched.completions)
+    assert done + sched.pending() == 3                  # nothing dropped
+    svc = sched._svcs["logistic_net"]
+    assert any(r.inputs is bad for r in svc.queue)      # poison still queued
+
+
+def test_scheduler_async_error_requeues_and_reraises(engines):
+    m, e = engines["logistic_net"]
+    good = _requests(m, 2)
+    bad = {"wrong_key": np.zeros((2, 2), np.float32)}
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1,),
+                   warmup_sample=good[0])
+    sched.start(poll_s=0.0005)
+    sched.submit("logistic_net", bad)
+    deadline = time.time() + 10.0
+    while sched._thread_error is None and time.time() < deadline:
+        time.sleep(0.001)                               # wait for the thread
+    with pytest.raises(Exception):
+        sched.stop(drain=False)
+    assert sched.pending() == 1                         # poison re-queued
+
+
+def test_scheduler_async_mode_completes_everything(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 13)
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    sched.start(poll_s=0.0005)
+    try:
+        rids = [sched.submit("logistic_net", r) for r in reqs]
+    finally:
+        sched.stop(drain=True)
+    got = sorted(c.rid for c in sched.completions)
+    assert got == sorted(rids)
