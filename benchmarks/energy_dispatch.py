@@ -1,0 +1,152 @@
+"""Energy-dispatch benchmark — Table III's energy story, end to end
+-> BENCH_energy.json.
+
+Two parts, both machine-independent (everything is the plan-time modeled
+cost; the serving part runs on the scheduler's deterministic modeled
+clock):
+
+1. **Cost table**: modeled J/inference for all six space models on
+   cpu/flex/accel at every ladder rung (the plan-time cost signatures).
+   Gate: at the steady-state serving rung the accel (DPU-analog) path
+   uses no more energy per inference than the ARM-CPU baseline for EVERY
+   model — the paper's Table III direction — and the CPU-relative energy
+   ratios are reported per model.
+2. **Envelope serving**: a burst trace of two co-served models dispatched
+   under a 3 W sustained envelope with accel->flex->cpu fallback. The
+   high-power DPU path gets duty-cycled and the dispatcher defers or
+   falls back; the gates are the hard invariants: every request completes
+   exactly once (no drops, no duplicates) and the envelope ledger audits
+   to ZERO violations.
+
+    PYTHONPATH=src python -m benchmarks.energy_dispatch            # full
+    PYTHONPATH=src python -m benchmarks.energy_dispatch --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+
+from repro.core.energy import PowerEnvelope, cost_signature
+from repro.core.engine import Engine
+from repro.core.scheduler import ContinuousBatchingScheduler
+from repro.models import SPACE_MODELS, synthetic_requests
+
+OUT_PATH = "BENCH_energy.json"
+RUNGS = (1, 4, 16, 32)
+SERVE_RUNG = RUNGS[-1]                  # steady-state serving rung
+SERVE_MODELS = ("logistic_net", "multi_esperta")
+SERVE_BACKENDS = ("accel", "flex", "cpu")
+# 3 W sustained (inside the paper's 1.5-6.75 W MPSoC span). The window is
+# scaled to these models' modeled service times (ms), so the budget
+# actually bites within a CI-sized trace; a flight envelope would use a
+# seconds-scale window against a correspondingly longer trace.
+SUSTAINED_W = 3.0
+WINDOW_S = 0.001
+
+
+def cost_table() -> List[Dict]:
+    rows = []
+    for name, m in SPACE_MODELS.items():
+        g = m.build_graph()
+        for backend in ("cpu", "flex", "accel"):
+            for rung in RUNGS:
+                sig = cost_signature(g, backend, rung)
+                rows.append({
+                    "model": name, "backend": backend, "rung": rung,
+                    "hw": sig.hw, "flops": sig.flops,
+                    "bytes_moved": sig.bytes_moved,
+                    "latency_s": sig.latency_s,
+                    "j_per_inference": sig.j_per_inference,
+                    "power_w": sig.power_w,
+                    "weights_resident": sig.weights_resident,
+                })
+    return rows
+
+
+def check_table(rows: List[Dict]) -> Dict:
+    """Gate + per-model CPU-relative energy ratios at the serving rung."""
+    at = {(r["model"], r["backend"]): r for r in rows
+          if r["rung"] == SERVE_RUNG}
+    ratios, ok = {}, True
+    print(f"\n{'model':18s} {'cpu mJ/inf':>11s} {'accel mJ/inf':>13s} "
+          f"{'cpu/accel x':>12s} {'accel<=cpu':>11s}")
+    for name in SPACE_MODELS:
+        cpu = at[(name, "cpu")]["j_per_inference"]
+        acc = at[(name, "accel")]["j_per_inference"]
+        good = acc <= cpu
+        ok = ok and good
+        ratios[name] = {"cpu_mj": cpu * 1e3, "accel_mj": acc * 1e3,
+                        "energy_reduction_x": cpu / acc,
+                        "accel_le_cpu": good}
+        print(f"{name:18s} {cpu*1e3:11.4f} {acc*1e3:13.4f} "
+              f"{cpu/acc:12.2f} {str(good):>11s}")
+    return {"serve_rung": SERVE_RUNG, "per_model": ratios,
+            "accel_le_cpu_all": ok}
+
+
+def serve_under_envelope(n_per_model: int) -> Dict:
+    env = PowerEnvelope(SUSTAINED_W, window_s=WINDOW_S)
+    sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
+    trace = []
+    for mi, name in enumerate(SERVE_MODELS):
+        m = SPACE_MODELS[name]
+        engine = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        reqs = synthetic_requests(m, n_per_model, seed=10 + mi)
+        engine.calibrate(reqs[:4])
+        sched.register(name, engine, backend=SERVE_BACKENDS, ladder=RUNGS,
+                       warmup_sample=reqs[0])
+        # the instrument dumps its whole survey window at once: the burst
+        # forces full-throttle demand, which the envelope must pace
+        trace += [(0.0, name, r) for r in reqs]
+    end = sched.serve_trace(trace)
+
+    rids = [c.rid for c in sched.completions]
+    n_dropped = len(trace) - len(set(rids))
+    n_duplicated = len(rids) - len(set(rids))
+    audit = sched.envelope_report()
+    tel = {name: t.to_dict() for name, t in sched.telemetry().items()}
+    print(f"\n== serving {len(trace)} burst requests under "
+          f"{SUSTAINED_W} W (window {WINDOW_S*1e3:.0f} ms, modeled "
+          f"clock) ==")
+    print(sched.summary())
+    return {
+        "sustained_w": SUSTAINED_W, "window_s": WINDOW_S,
+        "backends": list(SERVE_BACKENDS), "n_per_model": n_per_model,
+        "virtual_end_s": end, "n_dropped": n_dropped,
+        "n_duplicated": n_duplicated, "envelope_audit": audit,
+        "n_deferrals": len(sched.deferrals), "telemetry": tel,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request counts for CI")
+    args = ap.parse_args(argv)
+    n = 96 if args.smoke else 256
+
+    print("== modeled energy per inference (plan-time cost signatures) ==")
+    rows = cost_table()
+    table_gate = check_table(rows)
+    serving = serve_under_envelope(n)
+
+    gates = {
+        "accel_le_cpu_all": table_gate["accel_le_cpu_all"],
+        "zero_dropped": serving["n_dropped"] == 0,
+        "zero_duplicated": serving["n_duplicated"] == 0,
+        "zero_envelope_violations":
+            serving["envelope_audit"]["n_violations"] == 0,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump({"cost_table": rows, "table_gate": table_gate,
+                   "serving": serving, "gates": gates}, f, indent=1)
+    print(f"\n[energy_dispatch] wrote {len(rows)} cost rows -> {OUT_PATH}")
+    print("[gates] " + "  ".join(f"{k}={v}" for k, v in gates.items()))
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,73 +2,83 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+
+Unknown section names and missing benchmark modules fail with a clear
+one-line message and a non-zero exit, never a raw traceback.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
 
-SECTIONS = ["table1", "table2", "table3", "throughput", "serving",
-            "table45", "fig_power", "roofline", "lm_energy"]
+# section name -> (module, needs_dryrun_ledger, gate) — `gate` sections
+# return an exit code that fails the driver at the end instead of
+# aborting the remaining sections.
+SECTIONS = {
+    "table1": ("benchmarks.table1_model_stats", False, False),
+    "table2": ("benchmarks.table2_footprint", False, False),
+    "table3": ("benchmarks.table3_performance", False, False),
+    "throughput": ("benchmarks.throughput", False, False),
+    "serving": ("benchmarks.serving_load", False, True),
+    "energy": ("benchmarks.energy_dispatch", False, True),
+    "table45": ("benchmarks.table45_context", False, False),
+    "fig_power": ("benchmarks.fig_power_phases", False, False),
+    "roofline": ("benchmarks.roofline", True, False),
+    "lm_energy": ("benchmarks.lm_energy", True, False),
+}
+
+
+def _load(name: str):
+    module, _, _ = SECTIONS[name]
+    try:
+        return importlib.import_module(module)
+    except ImportError as ex:
+        sys.exit(f"benchmark section {name!r} is broken: cannot import "
+                 f"{module} ({ex})")
+
+
+def _run_section(name: str, failures: list) -> None:
+    mod = _load(name)
+    _, needs_ledger, gate = SECTIONS[name]
+    entry = mod.run if name == "roofline" else mod.main
+    if name == "roofline":
+        print("== Roofline (3 terms per arch x shape, single-pod 256 "
+              "chips, scan-corrected) ==")
+    try:
+        # gate sections take an argv list; plain sections take none
+        rc = entry([]) if gate else entry()
+    except FileNotFoundError:
+        if needs_ledger:
+            print(f"no dryrun ledger — skipping {name} (run "
+                  "`PYTHONPATH=src python -m repro.launch.dryrun` first)",
+                  file=sys.stderr)
+            return
+        raise
+    if gate and rc:
+        # keep running the remaining sections; fail at the end
+        failures.append(f"{name} gate")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help=f"comma-list of {SECTIONS}")
+                    help=f"comma-list of {sorted(SECTIONS)}")
     args = ap.parse_args()
-    wanted = args.only.split(",") if args.only else SECTIONS
+    wanted = (list(SECTIONS) if not args.only
+              else [w.strip() for w in args.only.split(",") if w.strip()])
+    unknown = [w for w in wanted if w not in SECTIONS]
+    if unknown:
+        sys.exit(f"unknown benchmark section(s) {unknown}; choose from "
+                 f"{', '.join(sorted(SECTIONS))}")
 
     t0 = time.time()
-    if "table1" in wanted:
-        from benchmarks import table1_model_stats
-        table1_model_stats.main()
-        print()
-    if "table2" in wanted:
-        from benchmarks import table2_footprint
-        table2_footprint.main()
-        print()
-    if "table3" in wanted:
-        from benchmarks import table3_performance
-        table3_performance.main()
-        print()
-    if "throughput" in wanted:
-        from benchmarks import throughput
-        throughput.main()
-        print()
-    failures = []
-    if "serving" in wanted:
-        from benchmarks import serving_load
-        if serving_load.main([]):
-            # keep running the remaining sections; fail at the end
-            failures.append("serving_load gate")
-        print()
-    if "table45" in wanted:
-        from benchmarks import table45_context
-        table45_context.main()
-        print()
-    if "fig_power" in wanted:
-        from benchmarks import fig_power_phases
-        fig_power_phases.main()
-        print()
-    if "roofline" in wanted:
-        from benchmarks import roofline
-        print("== Roofline (3 terms per arch x shape, single-pod 256 chips, "
-              "scan-corrected) ==")
-        try:
-            roofline.run()
-        except FileNotFoundError:
-            print("no dryrun_ledger.json — run "
-                  "`PYTHONPATH=src python -m repro.launch.dryrun` first",
-                  file=sys.stderr)
-        print()
-    if "lm_energy" in wanted:
-        from benchmarks import lm_energy
-        try:
-            lm_energy.main()
-        except FileNotFoundError:
-            print("no dryrun ledger — skipping lm_energy", file=sys.stderr)
+    failures: list = []
+    for name in SECTIONS:
+        if name not in wanted:
+            continue
+        _run_section(name, failures)
         print()
     print(f"benchmarks done in {time.time()-t0:.1f}s")
     if failures:

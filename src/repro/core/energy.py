@@ -19,8 +19,10 @@ never conflated.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Dict, Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.opgraph import Graph
 
@@ -41,7 +43,12 @@ class HardwareModel:
     power_idle: float              # W static
     ici_bw: float = 0.0            # per-link bytes/s
     util: float = 1.0              # achievable fraction of peak compute
-    overhead_s: float = 0.0        # fixed per-inference overhead (staging)
+    overhead_s: float = 0.0        # fixed per-DISPATCH overhead (staging:
+                                   # one AXI/DMA setup per batch, amortized
+                                   # across the batch)
+    dispatch_s: float = 0.0        # per-node, per-SAMPLE framework dispatch
+                                   # overhead (the eager per-layer baseline;
+                                   # 0 for compiled/streaming backends)
 
 
 # Public TPU v5e figures: 197 TFLOP/s bf16 / 394 TOP/s int8, 819 GB/s HBM,
@@ -68,7 +75,14 @@ ZCU104_CPU = HardwareModel(
     name="zcu104_arm_a53",
     peak_flops_f32=6e9, peak_flops_bf16=6e9, peak_ops_int8=12e9,
     hbm_bw=19.2e9, onchip_bytes=1 * 2**20,
-    power_busy=2.75, power_idle=2.0)
+    power_busy=2.75, power_idle=2.0,
+    # The paper's CPU baseline runs PyTorch per-sample in the instrument
+    # loop; its small-model Table III rows are dispatch-bound, not
+    # FLOP-bound (LogisticNet: 3.13 ms measured vs ~5 us roofline). The
+    # implied per-layer eager-dispatch cost spans ~7-780 us across models;
+    # 30 us/node/sample is the geometric middle and reproduces the
+    # dispatch-dominated regime without over-fitting any one row.
+    dispatch_s=30e-6)
 ZCU104_DPU = HardwareModel(
     name="zcu104_dpu_b4096",
     peak_flops_f32=0.1e12, peak_flops_bf16=0.1e12, peak_ops_int8=1.2e12,
@@ -106,6 +120,7 @@ class EnergyReport:
     mops: float                     # throughput in MOP/s (paper's metric)
     weights_resident: bool
     bound: str                      # 'compute' | 'memory'
+    bytes_moved: float = 0.0        # modeled DDR/HBM traffic per inference
 
     def row(self) -> str:
         return (f"{self.hw:14s} {self.backend:6s} "
@@ -124,19 +139,31 @@ def _peak(hw: HardwareModel, backend: str) -> float:
     return hw.peak_flops_f32
 
 
-def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
-                batch: int = 1) -> EnergyReport:
-    """Analytic latency/energy for one inference (batch amortizes weights)."""
+def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int
+                ) -> Tuple[float, float, float, bool, int]:
+    """Shared roofline core for one dispatched batch.
+
+    Returns ``(compute_t, memory_t, bytes_moved, resident, latency)``-style
+    tuple: (compute_t, memory_t, bytes_moved, resident, n_compute_nodes) —
+    callers combine the roofline terms with the hw overhead model.
+
+    Weight residency mirrors the paper's BRAM policy: params that fit the
+    on-chip budget are charged DDR traffic once (the first load, amortized
+    away in steady-state serving); spilled params stream per inference
+    (the BaselineNet effect in the paper's Table III).
+    """
     db = _dtype_bytes(backend)
     param_bytes = graph.n_params * db
     resident = param_bytes <= hw.onchip_bytes
 
     compute_t = 0.0
-    memory_t = 0.0
+    bytes_moved = 0.0
     peak = _peak(hw, backend)
+    n_compute_nodes = 0
     for node in graph.nodes.values():
         if node.op == "input":
             continue
+        n_compute_nodes += 1
         compute_t += node.ops * batch / peak
         act_bytes = 1
         if node.out_shape:
@@ -145,11 +172,28 @@ def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
                 n *= d
             act_bytes = n * 4  # activations stay fp32 on the wire
         w_bytes = 0 if resident else node.param_count * db
-        memory_t += (act_bytes * batch + w_bytes * batch) / hw.hbm_bw
-    # non-resident weights stream once per inference; resident ones are
-    # loaded once and amortized away (steady-state serving)
+        bytes_moved += act_bytes * batch + w_bytes * batch
     compute_t /= hw.util
-    latency = max(compute_t, memory_t) + hw.overhead_s * batch
+    memory_t = bytes_moved / hw.hbm_bw
+    return compute_t, memory_t, bytes_moved, resident, n_compute_nodes
+
+
+def _batch_latency(hw: HardwareModel, compute_t: float, memory_t: float,
+                   batch: int, n_nodes: int) -> float:
+    """Roofline max + overheads: staging (`overhead_s`) is paid once per
+    dispatched batch; eager per-layer dispatch (`dispatch_s`) is paid per
+    node per sample (the paper's per-sample CPU baseline loop)."""
+    return (max(compute_t, memory_t) + hw.overhead_s
+            + hw.dispatch_s * n_nodes * batch)
+
+
+def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
+                batch: int = 1) -> EnergyReport:
+    """Analytic latency/energy for one inference (batch amortizes the
+    per-dispatch staging overhead and, via residency, the weight loads)."""
+    compute_t, memory_t, bytes_moved, resident, n_nodes = _graph_cost(
+        graph, hw, backend, batch)
+    latency = _batch_latency(hw, compute_t, memory_t, batch, n_nodes)
     bound = "compute" if compute_t >= memory_t else "memory"
     energy = hw.power_busy * latency
     return EnergyReport(
@@ -160,7 +204,348 @@ def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
         mops=graph.n_ops * batch / latency / 1e6,
         weights_resident=resident,
         bound=bound,
+        bytes_moved=bytes_moved / batch,
     )
+
+
+# ---------------------------------------------------------------------------
+# Plan-time cost signatures (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# The deployment analog each engine backend prices at (the paper's ZCU104):
+# cpu = the ARM A53 eager baseline, flex = the (naive) Vitis-HLS dataflow
+# path, accel = the Vitis-AI DPU int8 path. Partial-offload flex tails of
+# an accel plan are priced at the accel hw's fp32 rate — a documented
+# simplification (the signature prices the backend's nominal hardware).
+BACKEND_HW: Dict[str, HardwareModel] = {
+    "cpu": ZCU104_CPU,
+    "flex": ZCU104_HLS_NAIVE,
+    "accel": ZCU104_DPU,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSignature:
+    """Plan-time cost of ONE dispatched batch of a compiled plan: what the
+    dispatcher needs to rank (backend, rung) candidates and to charge the
+    power envelope — no serving-time measurement involved."""
+    backend: str
+    batch: int
+    hw: str
+    flops: float                    # arithmetic ops, whole batch
+    bytes_moved: float              # modeled DDR traffic, whole batch
+    latency_s: float                # whole-batch modeled latency
+    energy_j: float                 # whole-batch modeled energy
+    j_per_inference: float
+    power_w: float                  # busy power while the batch runs
+    weights_resident: bool
+
+    def row(self) -> str:
+        return (f"{self.backend:6s} b={self.batch:<3d} "
+                f"lat={self.latency_s*1e3:9.4f} ms  "
+                f"E/inf={self.j_per_inference*1e3:9.5f} mJ  "
+                f"P={self.power_w:5.2f} W  "
+                f"resident={self.weights_resident}")
+
+
+def cost_signature(graph: Graph, backend: str, batch: int,
+                   hw: Optional[HardwareModel] = None) -> CostSignature:
+    """The modeled cost of one ``batch``-sized dispatch of ``graph`` on
+    ``backend`` (hardware from BACKEND_HW unless overridden)."""
+    if hw is None:
+        hw = BACKEND_HW[backend]
+    compute_t, memory_t, bytes_moved, resident, n_nodes = _graph_cost(
+        graph, hw, backend, batch)
+    latency = _batch_latency(hw, compute_t, memory_t, batch, n_nodes)
+    energy = hw.power_busy * latency
+    return CostSignature(
+        backend=backend, batch=batch, hw=hw.name,
+        flops=float(graph.n_ops) * batch, bytes_moved=bytes_moved,
+        latency_s=latency, energy_j=energy,
+        j_per_inference=energy / batch, power_w=hw.power_busy,
+        weights_resident=resident)
+
+
+# ---------------------------------------------------------------------------
+# Orbital power envelope (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+_EPS_T = 1e-9
+_EPS_J = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Draw:
+    """One recorded power draw: a dispatched batch modeled as ``watts``
+    drawn over ``[start, end]`` (plan-time cost signature terms)."""
+    start: float
+    end: float
+    watts: float
+    tag: str = ""
+
+    @property
+    def energy_j(self) -> float:
+        return self.watts * (self.end - self.start)
+
+
+class PowerEnvelope:
+    """Mission power budget the dispatcher schedules against.
+
+    Two constraints, checked at admission time so they hold by
+    construction over the whole run:
+
+    * **sustained**: the energy drawn in ANY trailing window of
+      ``window_s`` seconds never exceeds the energy the power system
+      supplied over that window — the integral of the (possibly stepped)
+      ``sustained_w`` budget across it — plus the ``burst_j``
+      battery/capacitor margin. Integrating the budget (rather than
+      point-sampling it at the window end) makes phase transitions
+      physical: a window straddling eclipse entry still credits the
+      sunlight seconds it contains. Spreading a draw's energy over the
+      window is what duty-cycles a high-power backend (the DPU at 6.75 W
+      under a 3 W envelope runs at most ~44% duty).
+    * **peak**: total instantaneous power of overlapping draws never
+      exceeds ``peak_w(t)`` (None = uncapped). This is what excludes a
+      backend outright during eclipse and forces the cpu/flex fallback.
+
+    The budget is a step schedule over time (``set_budget``): orbital
+    phases (sunlight / penumbra / eclipse) are known in advance, so
+    admission sees future steps too — a draw whose trailing window would
+    cross into a tighter phase is refused *before* the phase starts,
+    exactly the pre-eclipse power-down a real operations plan requires.
+
+    ``admit`` is check+record; ``next_admit`` answers "when could this
+    draw fit" so a virtual-clock scheduler can advance time instead of
+    spinning. ``audit`` re-derives the invariant over the recorded ledger
+    (the machine-independent CI gate: zero violations, always).
+    """
+
+    def __init__(self, sustained_w: float = math.inf,
+                 peak_w: Optional[float] = None,
+                 burst_j: float = 0.0, window_s: float = 10.0):
+        if window_s <= 0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        self.window_s = float(window_s)
+        self.burst_j = float(burst_j)
+        # budget step schedule: (t, sustained_w, peak_w), t ascending
+        self._schedule: List[Tuple[float, float, float]] = [
+            (-math.inf, float(sustained_w),
+             math.inf if peak_w is None else float(peak_w))]
+        self.draws: List[Draw] = []
+
+    # -- budget schedule ----------------------------------------------------
+
+    def set_budget(self, t: float, sustained_w: Optional[float] = None,
+                   peak_w: Optional[float] = None) -> None:
+        """Step the budget at time ``t`` (>= the last scheduled step).
+        Omitted fields carry over. Pre-schedule orbit phases before
+        serving; admission accounts for future steps."""
+        last_t, last_s, last_p = self._schedule[-1]
+        if t < last_t:
+            raise ValueError(f"budget step at {t} precedes last step "
+                             f"at {last_t}")
+        self._schedule.append((
+            float(t),
+            last_s if sustained_w is None else float(sustained_w),
+            last_p if peak_w is None else float(peak_w)))
+
+    def budget_at(self, t: float) -> Tuple[float, float]:
+        """(sustained_w, peak_w) in effect at time ``t``."""
+        idx = bisect.bisect_right([s[0] for s in self._schedule], t) - 1
+        _, sus, peak = self._schedule[max(idx, 0)]
+        return sus, peak
+
+    # -- ledger accounting ---------------------------------------------------
+
+    def power_at(self, t: float, extra: Optional[Draw] = None) -> float:
+        p = sum(d.watts for d in self.draws if d.start <= t < d.end)
+        if extra is not None and extra.start <= t < extra.end:
+            p += extra.watts
+        return p
+
+    def window_energy(self, tau: float, extra: Optional[Draw] = None
+                      ) -> float:
+        """Energy drawn in the trailing window ``[tau - window_s, tau]``."""
+        lo = tau - self.window_s
+        e = 0.0
+        for d in self.draws + ([extra] if extra is not None else []):
+            ov = min(d.end, tau) - max(d.start, lo)
+            if ov > 0:
+                e += d.watts * ov
+        return e
+
+    def budget_energy(self, lo: float, hi: float) -> float:
+        """Energy the power system supplies over ``[lo, hi]`` — the
+        sustained-budget step schedule integrated across the interval."""
+        e = 0.0
+        steps = self._schedule
+        for i, (t0, sus, _) in enumerate(steps):
+            t1 = steps[i + 1][0] if i + 1 < len(steps) else math.inf
+            ov_lo, ov_hi = max(t0, lo), min(t1, hi)
+            if ov_hi > ov_lo:
+                if math.isinf(sus):
+                    return math.inf
+                e += sus * (ov_hi - ov_lo)
+        return e
+
+    def _window_ok(self, tau: float, extra: Optional[Draw]) -> bool:
+        supplied = self.budget_energy(tau - self.window_s, tau)
+        return (self.window_energy(tau, extra)
+                <= supplied + self.burst_j + _EPS_J)
+
+    def _peak_ok(self, t: float, extra: Optional[Draw]) -> bool:
+        _, peak = self.budget_at(t)
+        return self.power_at(t, extra) <= peak + _EPS_J
+
+    def _step_times(self, lo: float, hi: float) -> List[float]:
+        return [s[0] for s in self._schedule if lo < s[0] <= hi]
+
+    def admissible(self, t: float, watts: float, duration: float) -> bool:
+        """Would a draw of ``watts`` over ``[t, t + duration]`` keep both
+        constraints? Checked at the finitely many candidate times where a
+        violation can first appear: power steps up only at draw starts and
+        budget steps; trailing-window energy peaks only where power drops
+        (draw ends), where a start slides out of the window (start +
+        window), or where the budget steps down."""
+        d = Draw(t, t + duration, watts)
+        end = d.end
+        # instantaneous peak: at t, at later overlapping draw starts, and
+        # at budget steps inside the draw
+        peaks = [t] + [x.start for x in self.draws if t < x.start < end]
+        peaks += self._step_times(t, end - _EPS_T)
+        if not all(self._peak_ok(p, d) for p in peaks):
+            return False
+        # trailing-window energy: candidate maxima while this draw can
+        # still be inside a window
+        horizon = max([end] + [x.end for x in self.draws]) + self.window_s
+        taus = {end, t + self.window_s, end + self.window_s}
+        taus.update(x.end for x in self.draws if x.end > t)
+        taus.update(x.start + self.window_s for x in self.draws
+                    if x.start + self.window_s > t)
+        steps = self._step_times(t - self.window_s, horizon)
+        taus.update(s for s in steps if s > t)
+        taus.update(s + self.window_s for s in steps
+                    if s + self.window_s > t)
+        return all(self._window_ok(tau, d) for tau in taus if tau <= horizon)
+
+    def admit(self, t: float, watts: float, duration: float,
+              tag: str = "") -> Optional[Draw]:
+        """Record the draw if admissible; returns it (for rollback via
+        :meth:`remove`) or None if refused."""
+        if not self.admissible(t, watts, duration):
+            return None
+        d = Draw(t, t + duration, watts, tag)
+        bisect.insort(self.draws, d, key=lambda x: x.start)
+        return d
+
+    def remove(self, draw: Draw) -> None:
+        """Roll back a recorded draw (dispatch failed; batch re-queued)."""
+        self.draws.remove(draw)
+
+    def feasible_ever(self, watts: float, duration: float) -> bool:
+        """Could a bare draw (empty window) EVER fit some budget regime?
+        The register-time sanity gate: a model none of whose backends
+        passes this can never be dispatched under the envelope."""
+        for _, sus, peak in self._schedule:
+            if (watts <= peak + _EPS_J
+                    and watts * min(duration, self.window_s)
+                    <= sus * self.window_s + self.burst_j + _EPS_J):
+                return True
+        return False
+
+    def next_admit(self, t: float, watts: float, duration: float
+                   ) -> Optional[float]:
+        """Earliest time >= ``t`` at which the draw becomes admissible, or
+        None if it never does (even against the final budget with an
+        otherwise-empty window). Between envelope events feasibility is
+        monotone (old draws only age out, overlaps only end), so a
+        coarse event scan + bisection is exact."""
+        if self.admissible(t, watts, duration):
+            return t
+        last_step = max((s[0] for s in self._schedule
+                         if s[0] > -math.inf), default=t)
+        horizon = (max([t, last_step] + [d.end for d in self.draws])
+                   + self.window_s + duration)
+        steps = self._step_times(t - self.window_s, horizon)
+        events = sorted(
+            {e for d in self.draws
+             for e in (d.end, d.end + self.window_s,
+                       d.start + self.window_s) if e > t}
+            | {s for s in steps if s > t}
+            | {s + self.window_s for s in steps if s + self.window_s > t}
+            | {horizon})
+        prev = t
+        for c in events:
+            if self.admissible(c, watts, duration):
+                lo, hi = prev, c
+                for _ in range(60):             # bisect the flip point
+                    mid = 0.5 * (lo + hi)
+                    if self.admissible(mid, watts, duration):
+                        hi = mid
+                    else:
+                        lo = mid
+                return max(hi, t + _EPS_T)
+            prev = c
+        return None
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def total_j(self) -> float:
+        return sum(d.energy_j for d in self.draws)
+
+    def busy_s(self) -> float:
+        """Total time with at least one draw active (interval union)."""
+        busy, cur_s, cur_e = 0.0, None, None
+        for d in sorted(self.draws, key=lambda x: x.start):
+            if cur_e is None or d.start > cur_e:
+                if cur_e is not None:
+                    busy += cur_e - cur_s
+                cur_s, cur_e = d.start, d.end
+            else:
+                cur_e = max(cur_e, d.end)
+        if cur_e is not None:
+            busy += cur_e - cur_s
+        return busy
+
+    def audit(self) -> Dict:
+        """Re-derive both invariants over the whole recorded ledger.
+        ``n_violations`` must be 0 on every host: admission enforced the
+        same predicate, so this is the machine-independent CI gate."""
+        step_ts = [s[0] for s in self._schedule if s[0] > -math.inf]
+        taus = sorted(
+            {d.end for d in self.draws}
+            | {d.start + self.window_s for d in self.draws}
+            | set(step_ts) | {s + self.window_s for s in step_ts})
+        n_viol = 0
+        max_window_w = 0.0
+        for tau in taus:
+            e = self.window_energy(tau)
+            supplied = self.budget_energy(tau - self.window_s, tau)
+            max_window_w = max(max_window_w, e / self.window_s)
+            if e > supplied + self.burst_j + 1e-6:
+                n_viol += 1
+        peak_seen = 0.0
+        for d in self.draws:
+            p = self.power_at(d.start)
+            peak_seen = max(peak_seen, p)
+            _, peak = self.budget_at(d.start)
+            if p > peak + 1e-6:
+                n_viol += 1
+        span = (max(d.end for d in self.draws)
+                - min(d.start for d in self.draws)) if self.draws else 0.0
+        return {
+            "n_draws": len(self.draws),
+            "n_violations": n_viol,
+            "total_j": self.total_j,
+            "busy_s": self.busy_s(),
+            "span_s": span,
+            "duty_cycle": self.busy_s() / span if span > 0 else 0.0,
+            "max_window_w": max_window_w,
+            "peak_w_seen": peak_seen,
+            "window_s": self.window_s,
+            "burst_j": self.burst_j,
+        }
 
 
 # ---------------------------------------------------------------------------

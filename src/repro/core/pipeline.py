@@ -115,6 +115,13 @@ class ServingPipeline:
         self.keep_predicate = keep_predicate
         self._plan = engine.compile(backend, batch_size)
 
+    @property
+    def cost(self):
+        """The compiled plan's plan-time cost signature (energy/latency/W
+        of one full-batch dispatch) — what the scheduler ranks backends by
+        and charges the power envelope with."""
+        return self._plan.cost
+
     def _stage(self, reqs: List[Dict[str, np.ndarray]]) -> Dict[str, jax.Array]:
         return stage_batch(reqs, self.batch_size)
 

@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import energy as energy_mod
 from repro.core.opgraph import Graph, Node
 from repro.kernels import ops as kops
 
@@ -295,6 +296,15 @@ class ExecutionPlan:
         self._lowered[batch_size] = lp
         return lp
 
+    def cost_signature(self, batch_size: int,
+                       backend: Optional[str] = None
+                       ) -> energy_mod.CostSignature:
+        """Plan-time modeled cost of one ``batch_size`` dispatch on this
+        plan's backend (``backend`` overrides for the cpu/EagerPlan view,
+        which executes the flex plan on the eager baseline hardware)."""
+        return energy_mod.cost_signature(
+            self.graph, backend or self.backend, batch_size)
+
     def summary(self) -> str:
         lines = [f"ExecutionPlan[{self.graph.name}/{self.backend}]: "
                  f"{len(self.segments)} segment(s), "
@@ -350,12 +360,17 @@ class LoweredPlan:
 
 
 class CompiledPlan:
-    """**Compiled** stage: an XLA executable — calling it never re-traces."""
+    """**Compiled** stage: an XLA executable — calling it never re-traces.
+    Carries its plan-time :class:`~repro.core.energy.CostSignature`: the
+    modeled FLOPs / bytes / J-per-inference / W of one dispatch at this
+    batch size, so a dispatcher can rank and power-budget candidates
+    without ever measuring (DESIGN.md §9)."""
 
     def __init__(self, plan: ExecutionPlan, batch_size: int, executable):
         self.plan = plan
         self.batch_size = batch_size
         self._executable = executable
+        self.cost = plan.cost_signature(batch_size)
 
     @property
     def n_traces(self) -> int:
@@ -374,6 +389,7 @@ class EagerPlan:
         self.plan = plan
         self.batch_size = batch_size
         self._fn = plan.batched_fn()
+        self.cost = plan.cost_signature(batch_size, backend="cpu")
 
     @property
     def n_traces(self) -> int:

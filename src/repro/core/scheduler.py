@@ -20,9 +20,20 @@ real deployment needs on top of it:
   service time — batch-fill is traded for latency exactly when the
   deadline forces it,
 * **round-robin fairness** across concurrently registered models (the
-  on-board reality: one accelerator, several instruments), and
+  on-board reality: one accelerator, several instruments),
+* an optional orbital **power envelope** (``core/energy.py``): a model
+  may register SEVERAL backends (primary first); each (backend, rung)
+  carries its plan-time cost signature, and every dispatch must be
+  admitted by the envelope — the dispatcher picks the cheapest-energy
+  admissible backend, falls back (DPU -> CPU/HLS) when the budget
+  tightens, and *defers* (recording the deferral) when nothing fits,
+  advancing the virtual clock to the envelope's next-admit time. With no
+  envelope the dispatch sequence is exactly the PR-2 deadline policy on
+  the primary backend, and
 * per-model **telemetry**: p50/p99 latency, fps, batch-fill histogram
-  per rung, deadline misses, and the selective-downlink reduction ratio.
+  per rung, deadline misses, the selective-downlink reduction ratio,
+  and — per the envelope — modeled energy, J/inference, duty cycle,
+  backend mix, and deferral counts.
 
 Execution of one dispatched batch is delegated to
 ``ServingPipeline.execute_batch`` (core/pipeline.py) — the scheduler owns
@@ -50,9 +61,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.energy import CostSignature, Draw, PowerEnvelope
 from repro.core.pipeline import BatchResult, ServingPipeline
 
 DEFAULT_LADDER = (1, 4, 16, 32)
+BACKENDS = ("cpu", "flex", "accel")
 
 
 def capped_ladder(top: int, base: Sequence[int] = DEFAULT_LADDER
@@ -124,10 +137,27 @@ class DispatchRecord:
     started: float
     service_time: float
     mode: str                           # 'full' | 'flush'
+    backend: str = ""                   # backend the batch ran on
+    energy_j: float = 0.0               # modeled energy of the dispatch
+    power_w: float = 0.0                # modeled busy power while it ran
 
     @property
     def fill(self) -> float:
         return self.n_real / self.rung
+
+    @property
+    def modeled_latency_s(self) -> float:
+        return self.energy_j / self.power_w if self.power_w > 0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferralRecord:
+    """A dispatch opportunity the envelope refused: the model was due
+    (full batch or deadline flush) but no backend's draw was admissible."""
+    model: str
+    time: float
+    rung: int
+    n_real: int
 
 
 @dataclasses.dataclass
@@ -145,6 +175,12 @@ class ModelTelemetry:
     fill_hist: Dict[int, Dict[str, float]] = dataclasses.field(
         default_factory=dict)           # rung -> {dispatches, mean_fill}
     n_dispatches: int = 0
+    # -- energy accounting (modeled; populated from cost signatures) --------
+    energy_j: float = 0.0               # total modeled J across dispatches
+    j_per_inference: float = 0.0
+    duty_cycle: float = 0.0             # modeled busy time / serving span
+    n_deferrals: int = 0                # envelope-refused dispatch chances
+    backend_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def downlink_reduction(self) -> float:
@@ -193,17 +229,28 @@ def bursty_arrivals(n: int, burst_size: int, gap_s: float,
 
 
 class _ModelService:
-    def __init__(self, name: str, pipelines: Dict[int, ServingPipeline],
+    def __init__(self, name: str,
+                 pipelines: Dict[str, Dict[int, ServingPipeline]],
                  deadline_s: float, flush_safety: float):
         self.name = name
+        # backend -> rung -> pipeline; insertion order = preference order
+        # (primary first — what an unconstrained dispatch uses)
         self.pipelines = pipelines
-        self.ladder: Tuple[int, ...] = tuple(sorted(pipelines))
+        self.backends: Tuple[str, ...] = tuple(pipelines)
+        self.ladder: Tuple[int, ...] = tuple(
+            sorted(pipelines[self.backends[0]]))
+        self.costs: Dict[Tuple[str, int], CostSignature] = {
+            (b, r): p.cost
+            for b, rungs in pipelines.items() for r, p in rungs.items()}
         self.deadline_s = deadline_s
         self.flush_safety = flush_safety
         self.queue: Deque[Request] = deque()
         self.n_submitted = 0
-        # EWMA service-time estimate per rung (seeded by register warmup)
-        self.est_service: Dict[int, float] = {}
+        self.n_deferred = 0
+        self._last_deferred_rid: Optional[int] = None
+        # EWMA service-time estimate per (backend, rung), seeded by the
+        # register warmup (or by the cost signature under a modeled clock)
+        self.est_service: Dict[Tuple[str, int], float] = {}
         self._rng = jax.random.PRNGKey(
             int(np.frombuffer(name.encode()[:4].ljust(4, b"\0"),
                               np.uint32)[0]))
@@ -212,16 +259,21 @@ class _ModelService:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
-    def observe_service(self, rung: int, seconds: float) -> None:
-        old = self.est_service.get(rung)
-        self.est_service[rung] = (seconds if old is None
-                                  else 0.5 * old + 0.5 * seconds)
+    def observe_service(self, backend: str, rung: int,
+                        seconds: float) -> None:
+        old = self.est_service.get((backend, rung))
+        self.est_service[(backend, rung)] = (
+            seconds if old is None else 0.5 * old + 0.5 * seconds)
 
     def flush_margin(self) -> float:
         """How long before the oldest deadline we must start computing:
-        safety x the worst measured rung service time (0 until measured —
-        then the first dispatch itself seeds the estimate)."""
-        worst = max(self.est_service.values(), default=0.0)
+        safety x the worst measured rung service time on the PRIMARY
+        backend (fallback backends may be orders slower — budgeting for
+        them would flush everything immediately; 0 until measured — then
+        the first dispatch itself seeds the estimate)."""
+        primary = self.backends[0]
+        worst = max((t for (b, _), t in self.est_service.items()
+                     if b == primary), default=0.0)
         return self.flush_safety * worst
 
     def flush_time(self) -> Optional[float]:
@@ -262,10 +314,31 @@ class _ModelService:
 class ContinuousBatchingScheduler:
     """Co-serves several space models from one process: per-model queues,
     a precompiled batch ladder each, deadline-bounded batch filling, and
-    round-robin dispatch across models."""
+    round-robin dispatch across models.
 
-    def __init__(self, flush_safety: float = 2.0):
+    ``envelope`` (a :class:`~repro.core.energy.PowerEnvelope`) makes
+    dispatch energy-budget-aware: every dispatch charges the envelope
+    with the plan-time modeled (W, latency) of its cost signature, and a
+    model registered with several backends falls back to the cheapest
+    admissible one. With ``envelope=None`` the dispatch sequence is
+    byte-for-byte the PR-2 deadline policy on the primary backend.
+
+    ``clock`` selects what one dispatch *occupies* on the virtual clock:
+    ``"measured"`` (default) uses this host's wall time per batch —
+    honest for host benchmarking; ``"modeled"`` uses the cost signature's
+    analytic latency, making ``serve_trace`` a deterministic,
+    machine-independent simulation of the modeled deployment timeline
+    (what the energy benchmarks and CI gates drive).
+    """
+
+    def __init__(self, flush_safety: float = 2.0,
+                 envelope: Optional[PowerEnvelope] = None,
+                 clock: str = "measured"):
+        if clock not in ("measured", "modeled"):
+            raise ValueError(f"clock must be measured|modeled, got {clock}")
         self.flush_safety = flush_safety
+        self.envelope = envelope
+        self.clock = clock
         self._svcs: Dict[str, _ModelService] = {}
         self._order: List[str] = []     # round-robin rotation
         self._rr = 0
@@ -273,39 +346,72 @@ class ContinuousBatchingScheduler:
         self._lock = threading.RLock()
         self.completions: List[Completion] = []
         self.dispatches: List[DispatchRecord] = []
+        self.deferrals: List[DeferralRecord] = []
         self._thread: Optional[threading.Thread] = None
         self._thread_error: Optional[BaseException] = None
         self._stop = threading.Event()
 
     # -- setup --------------------------------------------------------------
 
-    def register(self, name: str, engine, backend: str = "flex",
+    def register(self, name: str, engine, backend="flex",
                  ladder: Sequence[int] = DEFAULT_LADDER,
                  deadline_s: Optional[float] = None,
                  keep_predicate: Optional[Callable] = None,
                  warmup_sample: Optional[Dict[str, np.ndarray]] = None
                  ) -> None:
-        """Precompile the batch ladder for ``(engine, backend)`` and open a
-        queue. ``warmup_sample`` (one request dict) additionally runs every
-        rung once, paying XLA first-call costs up front and seeding the
-        service-time estimates the deadline-flush margin uses."""
+        """Precompile the batch ladder for every backend and open a queue.
+
+        ``backend`` is one backend name or a preference-ordered sequence
+        (primary first); under an envelope the dispatcher may fall back
+        to any of them. ``warmup_sample`` (one request dict) additionally
+        runs every (backend, rung) once, paying XLA first-call costs up
+        front and seeding the service-time estimates the deadline-flush
+        margin uses."""
+        backends = ((backend,) if isinstance(backend, str)
+                    else tuple(backend))
+        if not backends or any(b not in BACKENDS for b in backends):
+            raise ValueError(f"bad backend(s) {backends}; "
+                             f"choose from {BACKENDS}")
+        if len(set(backends)) != len(backends):
+            raise ValueError(f"duplicate backends {backends}")
         ladder = tuple(sorted(set(int(r) for r in ladder)))
         if not ladder or ladder[0] < 1:
             raise ValueError(f"bad ladder {ladder}")
-        pipelines = {r: ServingPipeline(engine, backend=backend, batch_size=r,
-                                        keep_predicate=keep_predicate)
-                     for r in ladder}
+        pipelines = {
+            b: {r: ServingPipeline(engine, backend=b, batch_size=r,
+                                   keep_predicate=keep_predicate)
+                for r in ladder}
+            for b in backends}
         if deadline_s is None:
             deadline_s = DEFAULT_DEADLINES.get(name, FALLBACK_DEADLINE)
         svc = _ModelService(name, pipelines, deadline_s, self.flush_safety)
+        if self.envelope is not None:
+            # the envelope must be able to admit at least ONE backend's
+            # smallest-rung dispatch in some budget regime, or this model
+            # could never be served
+            bottom = ladder[0]
+            if not any(self.envelope.feasible_ever(
+                    svc.costs[(b, bottom)].power_w,
+                    svc.costs[(b, bottom)].latency_s) for b in backends):
+                raise ValueError(
+                    f"power envelope can never admit any backend of "
+                    f"{name!r} (smallest rung {bottom}); widen the budget "
+                    f"or register a lower-power backend")
         if warmup_sample is not None:
-            for rung in ladder:
-                # first call pays XLA first-run costs; the second is the
-                # steady-state service time the flush margin budgets for
-                pipelines[rung].execute_batch([warmup_sample] * rung)
-                t0 = time.perf_counter()
-                pipelines[rung].execute_batch([warmup_sample] * rung)
-                svc.observe_service(rung, time.perf_counter() - t0)
+            for b in backends:
+                for rung in ladder:
+                    # first call pays XLA first-run costs; the second is
+                    # the steady-state service time the flush margin
+                    # budgets for
+                    pipelines[b][rung].execute_batch([warmup_sample] * rung)
+                    t0 = time.perf_counter()
+                    pipelines[b][rung].execute_batch([warmup_sample] * rung)
+                    svc.observe_service(b, rung, time.perf_counter() - t0)
+        if self.clock == "modeled":
+            # the modeled clock serves on the cost signature's timeline —
+            # estimates come from the plan, not this host
+            for key, sig in svc.costs.items():
+                svc.est_service[key] = sig.latency_s
         with self._lock:
             if name in self._svcs:
                 raise ValueError(f"model {name!r} already registered")
@@ -334,49 +440,105 @@ class ContinuousBatchingScheduler:
 
     # -- dispatch core ------------------------------------------------------
 
+    @staticmethod
+    def _forced_pick(svc: _ModelService) -> Optional[Tuple[str, int, int]]:
+        if not svc.queue:
+            return None
+        depth = min(len(svc.queue), svc.ladder[-1])
+        rung = svc.ladder[bisect.bisect_left(svc.ladder, depth)]
+        return ("flush", rung, depth)
+
+    def _select_backend(self, svc: _ModelService, rung: int, now: float
+                        ) -> Tuple[Optional[str], Optional[Draw]]:
+        """The energy-aware backend decision for one picked dispatch:
+        no envelope -> the primary backend, unconditionally (PR-2
+        behavior). Under an envelope -> the admissible backend with the
+        lowest modeled dispatch energy (ties resolve to registration
+        order), charging the envelope; (None, None) means defer."""
+        if self.envelope is None:
+            return svc.backends[0], None
+        ranked = sorted(svc.backends,
+                        key=lambda b: svc.costs[(b, rung)].energy_j)
+        for b in ranked:
+            sig = svc.costs[(b, rung)]
+            draw = self.envelope.admit(now, sig.power_w, sig.latency_s,
+                                       tag=f"{svc.name}/{b}/b{rung}")
+            if draw is not None:
+                return b, draw
+        return None, None
+
     def step(self, now: float, force: bool = False
              ) -> Optional[DispatchRecord]:
         """Dispatch at most ONE batch: scan models round-robin from the
-        rotation pointer, serve the first one with a ready queue, advance
-        the pointer past it. ``force`` flushes regardless of deadlines
-        (used by drain). Returns the dispatch record, or None if every
-        queue is waiting."""
+        rotation pointer, serve the first one with a ready queue AND an
+        envelope-admissible backend, advance the pointer past it. A due
+        model whose every backend the envelope refuses is *deferred*
+        (recorded; retried on the next step). ``force`` flushes
+        regardless of deadlines (used by drain) but still respects the
+        envelope. Returns the dispatch record, or None if every queue is
+        waiting or deferred."""
         with self._lock:
             n = len(self._order)
             for k in range(n):
                 name = self._order[(self._rr + k) % n]
                 svc = self._svcs[name]
                 picked = svc.pick(now)
-                if picked is None and force and svc.queue:
-                    depth = min(len(svc.queue), svc.ladder[-1])
-                    rung = svc.ladder[bisect.bisect_left(svc.ladder, depth)]
-                    picked = ("flush", rung, depth)
+                if picked is None and force:
+                    picked = self._forced_pick(svc)
                 if picked is None:
                     continue
                 mode, rung, n_real = picked
+                # envelope refusals degrade the rung: a smaller batch is a
+                # shorter draw, so tight budgets serve smaller duty-cycled
+                # chunks instead of deadlocking behind one big dispatch
+                backend = draw = None
+                for r in [x for x in reversed(svc.ladder) if x <= rung]:
+                    backend, draw = self._select_backend(svc, r, now)
+                    if backend is not None:
+                        rung, n_real = r, min(n_real, r)
+                        break
+                if backend is None:
+                    # one deferral per blocked batch-head, not per poll:
+                    # the async dispatcher re-tries every poll_s and must
+                    # not grow the record list unboundedly
+                    head = svc.queue[0].rid
+                    if head != svc._last_deferred_rid:
+                        svc._last_deferred_rid = head
+                        svc.n_deferred += 1
+                        self.deferrals.append(
+                            DeferralRecord(name, now, rung, n_real))
+                    continue
+                svc._last_deferred_rid = None
                 reqs = [svc.queue.popleft() for _ in range(n_real)]
                 self._rr = (self._rr + k + 1) % n
                 break
             else:
                 return None
             rng = svc.next_rng()
+            sig = svc.costs[(backend, rung)]
 
         t0 = time.perf_counter()
         try:
-            result: BatchResult = svc.pipelines[rung].execute_batch(
+            result: BatchResult = svc.pipelines[backend][rung].execute_batch(
                 [r.inputs for r in reqs], rng=rng)
         except BaseException:
             # no silent loss: put the popped batch back at the queue head
-            # (original order) before surfacing the error
+            # (original order) and refund the envelope draw before
+            # surfacing the error
             with self._lock:
                 svc.queue.extendleft(reversed(reqs))
+                if draw is not None:
+                    self.envelope.remove(draw)
             raise
-        service = time.perf_counter() - t0
+        measured = time.perf_counter() - t0
+        service = sig.latency_s if self.clock == "modeled" else measured
 
         with self._lock:
-            svc.observe_service(rung, service)
+            svc.observe_service(backend, rung, service)
             finished = now + service
-            rec = DispatchRecord(svc.name, rung, n_real, now, service, mode)
+            rec = DispatchRecord(svc.name, rung, n_real, now, service, mode,
+                                 backend=backend, energy_j=sig.energy_j,
+                                 power_w=sig.power_w)
             self.dispatches.append(rec)
             for i, req in enumerate(reqs):
                 self.completions.append(Completion(
@@ -386,11 +548,39 @@ class ContinuousBatchingScheduler:
                     req.deadline))
             return rec
 
-    def next_event_time(self) -> Optional[float]:
-        """Earliest deadline-flush instant across nonempty queues."""
+    def _earliest_admit(self, svc: _ModelService, rung: int, now: float
+                        ) -> Optional[float]:
+        """Earliest time the envelope could admit SOME (backend, rung <=
+        picked rung) of a due dispatch — how far a blocked virtual clock
+        advances (step degrades rungs the same way)."""
+        times = []
+        for b in svc.backends:
+            for r in svc.ladder:
+                if r > rung:
+                    break
+                sig = svc.costs[(b, r)]
+                t = self.envelope.next_admit(now, sig.power_w, sig.latency_s)
+                if t is not None:
+                    times.append(t)
+        return min(times) if times else None
+
+    def next_event_time(self, now: Optional[float] = None
+                        ) -> Optional[float]:
+        """Earliest instant the dispatch decision can change: the next
+        deadline flush — or, for a queue that is due *now* but
+        envelope-blocked, the envelope's next-admit time."""
         with self._lock:
-            times = [svc.flush_time() for svc in self._svcs.values()]
-            times = [t for t in times if t is not None]
+            times = []
+            for svc in self._svcs.values():
+                picked = svc.pick(now) if now is not None else None
+                if picked is not None and self.envelope is not None:
+                    t = self._earliest_admit(svc, picked[1], now)
+                    if t is not None:
+                        times.append(max(t, now + 1e-9))
+                    continue
+                ft = svc.flush_time()
+                if ft is not None:
+                    times.append(ft)
             return min(times) if times else None
 
     def pending(self) -> int:
@@ -399,11 +589,29 @@ class ContinuousBatchingScheduler:
 
     def drain(self, now: float) -> float:
         """Flush every queue to empty (end of stream); returns the final
-        virtual time."""
+        virtual time. Under an envelope a blocked drain advances the
+        clock to the next admissible instant instead of spinning."""
         while self.pending():
             rec = self.step(now, force=True)
             if rec is not None:
                 now += rec.service_time
+                continue
+            if self.envelope is None:       # unreachable without envelope
+                raise RuntimeError("drain stalled with requests pending")
+            admits = []
+            with self._lock:
+                for svc in self._svcs.values():
+                    picked = self._forced_pick(svc)
+                    if picked is None:
+                        continue
+                    t = self._earliest_admit(svc, picked[1], now)
+                    if t is not None:
+                        admits.append(t)
+            if not admits:
+                raise RuntimeError(
+                    "power envelope can never admit the remaining queued "
+                    "dispatches; widen the budget")
+            now = max(min(admits), now + 1e-9)
         return now
 
     # -- virtual-clock trace serving ----------------------------------------
@@ -425,12 +633,21 @@ class ContinuousBatchingScheduler:
                 now += rec.service_time         # server busy while computing
                 continue
             nxt = ev[i][0] if i < n else None
-            ft = self.next_event_time()
+            ft = self.next_event_time(now)
             if ft is not None:
                 nxt = ft if nxt is None else min(nxt, ft)
             if nxt is None:
+                if self.pending():
+                    # only reachable under an envelope whose remaining
+                    # schedule can never admit the queued dispatches —
+                    # surface it, never strand requests silently
+                    raise RuntimeError(
+                        "power envelope can never admit the remaining "
+                        "queued dispatches; widen the budget")
                 break
-            now = max(now, nxt)
+            # guarantee progress: a blocked queue's next event must move
+            # the clock strictly forward
+            now = max(now + 1e-9, nxt) if nxt <= now else nxt
         return now
 
     # -- asynchronous (wall-clock) mode -------------------------------------
@@ -486,12 +703,12 @@ class ContinuousBatchingScheduler:
                 tel.n_kept = sum(c.kept for c in comps)
                 tel.deadline_misses = sum(c.missed_deadline for c in comps)
                 tel.n_dispatches = len(disps)
+                span = ((max(c.finished for c in comps)
+                         - min(c.arrival for c in comps)) if comps else 0.0)
                 if comps:
                     lat = np.array([c.latency for c in comps])
                     tel.p50_latency_ms = float(np.percentile(lat, 50) * 1e3)
                     tel.p99_latency_ms = float(np.percentile(lat, 99) * 1e3)
-                    span = (max(c.finished for c in comps)
-                            - min(c.arrival for c in comps))
                     tel.fps = len(comps) / max(span, 1e-12)
                 if disps:
                     tel.mean_batch_fill = float(
@@ -502,8 +719,23 @@ class ContinuousBatchingScheduler:
                             tel.fill_hist[rung] = {
                                 "dispatches": len(at),
                                 "mean_fill": float(np.mean(at))}
+                    tel.energy_j = float(sum(d.energy_j for d in disps))
+                    tel.j_per_inference = tel.energy_j / max(tel.n_completed,
+                                                             1)
+                    for d in disps:
+                        tel.backend_counts[d.backend] = (
+                            tel.backend_counts.get(d.backend, 0) + 1)
+                    busy = sum(d.modeled_latency_s for d in disps)
+                    tel.duty_cycle = busy / span if span > 0 else 0.0
+                tel.n_deferrals = svc.n_deferred
                 out[name] = tel
             return out
+
+    def envelope_report(self) -> Optional[Dict]:
+        """The envelope's ledger audit (None when serving unbudgeted):
+        total J, duty cycle, max trailing-window W, and the violation
+        count — which admission-time checking keeps at zero."""
+        return None if self.envelope is None else self.envelope.audit()
 
     def summary(self) -> str:
         lines = []
@@ -517,4 +749,19 @@ class ContinuousBatchingScheduler:
                 f"fill={tel.mean_batch_fill:.0%} over {tel.n_dispatches} "
                 f"dispatches  kept={tel.n_kept} "
                 f"(downlink -{tel.downlink_reduction:.0%})")
+            if tel.energy_j > 0:
+                mix = " ".join(f"{b}:{c}" for b, c in
+                               sorted(tel.backend_counts.items()))
+                lines.append(
+                    f"    energy={tel.energy_j:.4f} J "
+                    f"({tel.j_per_inference*1e3:.4f} mJ/inf)  "
+                    f"duty={tel.duty_cycle:.1%}  "
+                    f"deferrals={tel.n_deferrals}  backends[{mix}]")
+        rep = self.envelope_report()
+        if rep is not None:
+            lines.append(
+                f"[envelope] {rep['total_j']:.4f} J over "
+                f"{rep['n_draws']} draws  duty={rep['duty_cycle']:.1%}  "
+                f"max-window={rep['max_window_w']:.2f} W  "
+                f"violations={rep['n_violations']}")
         return "\n".join(lines)

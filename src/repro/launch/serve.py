@@ -8,6 +8,12 @@ Two modes:
   downlink predicate (the paper's motivating workload). ``--model``
   takes a comma list to co-serve several models from one process;
   requests arrive on a per-model Poisson trace at ``--rate`` req/s.
+  ``--backend`` also takes a comma list (primary first) — under
+  ``--power-budget WATTS`` dispatch becomes energy-aware: every batch
+  must be admitted by the orbital power envelope (sustained watts over a
+  sliding ``--window-s`` window, ``--burst-j`` allowance, optional
+  ``--peak-w`` instantaneous cap) and falls back to the cheaper-power
+  backends when the budget refuses the primary.
 * ``lm``: prefill + decode loop for an assigned LM architecture (reduced
   config on CPU; production configs go through the dry-run/pod path).
 
@@ -15,6 +21,9 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.serve \
         --model baseline_net,vae_encoder --backend flex --requests 64
+    PYTHONPATH=src python -m repro.launch.serve \
+        --model logistic_net --backend accel,cpu \
+        --power-budget 3 --window-s 1 --clock modeled
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
         --arch tinyllama-1.1b --smoke --tokens 32
 """
@@ -28,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.core.energy import PowerEnvelope
 from repro.core.engine import Engine
-from repro.core.scheduler import (ContinuousBatchingScheduler,
+from repro.core.scheduler import (BACKENDS, ContinuousBatchingScheduler,
                                   capped_ladder, poisson_arrivals)
 from repro.core import inspector
 from repro.launch.steps import make_decode_step, make_prefill_step
@@ -59,9 +69,28 @@ def serve_space(args) -> int:
     if unknown or not names:
         raise SystemExit(f"unknown model(s) {unknown}; choose from "
                          f"{', '.join(sorted(SPACE_MODELS))}")
+    backends = tuple(b.strip() for b in args.backend.split(",") if b.strip())
+    bad = [b for b in backends if b not in BACKENDS]
+    if bad or not backends:
+        raise SystemExit(f"unknown backend(s) {bad}; choose from "
+                         f"{', '.join(BACKENDS)}")
     ladder = capped_ladder(args.batch)
 
-    sched = ContinuousBatchingScheduler()
+    envelope = None
+    if args.power_budget is not None or args.peak_w is not None:
+        envelope = PowerEnvelope(
+            sustained_w=(float("inf") if args.power_budget is None
+                         else args.power_budget),
+            peak_w=args.peak_w, burst_j=args.burst_j,
+            window_s=args.window_s)
+        print(f"[envelope] sustained={args.power_budget} W  "
+              f"peak={args.peak_w} W  burst={args.burst_j} J  "
+              f"window={args.window_s} s  clock={args.clock}")
+    elif args.burst_j != 0.0 or args.window_s != 10.0:
+        raise SystemExit("--burst-j/--window-s configure the power "
+                         "envelope; pass --power-budget and/or --peak-w "
+                         "to enable it")
+    sched = ContinuousBatchingScheduler(envelope=envelope, clock=args.clock)
     trace = []
     for mi, name in enumerate(names):
         m = SPACE_MODELS[name]
@@ -70,11 +99,11 @@ def serve_space(args) -> int:
         print(inspector.inspect(graph).summary())
 
         reqs = synthetic_requests(m, args.requests, seed=mi)
-        if args.backend == "accel":
+        if "accel" in backends:
             print(f"[ptq] {name}: calibrating on 4 samples")
             engine.calibrate(reqs[:4])
 
-        sched.register(name, engine, backend=args.backend, ladder=ladder,
+        sched.register(name, engine, backend=backends, ladder=ladder,
                        keep_predicate=KEEP_PREDICATES.get(name),
                        warmup_sample=reqs[0] if reqs else None)
         trace += [(t, name, r) for t, r in
@@ -150,13 +179,29 @@ def main(argv=None) -> int:
                     help="comma list of space models to co-serve "
                          f"({', '.join(sorted(SPACE_MODELS))})")
     ap.add_argument("--backend", default="flex",
-                    choices=["cpu", "flex", "accel"])
+                    help="comma list of backends, primary first "
+                         "(cpu, flex, accel); later entries are the "
+                         "power-envelope fallbacks")
     ap.add_argument("--requests", type=int, default=64,
                     help="requests per model")
     ap.add_argument("--batch", type=int, default=16,
                     help="top batch-ladder rung")
     ap.add_argument("--rate", type=float, default=256.0,
                     help="per-model Poisson arrival rate (req/s)")
+    # orbital power envelope (space mode)
+    ap.add_argument("--power-budget", type=float, default=None,
+                    help="sustained power budget in W (enables "
+                         "energy-aware dispatch)")
+    ap.add_argument("--peak-w", type=float, default=None,
+                    help="instantaneous power cap in W")
+    ap.add_argument("--burst-j", type=float, default=0.0,
+                    help="burst energy allowance in J per window")
+    ap.add_argument("--window-s", type=float, default=10.0,
+                    help="sliding accounting window in s")
+    ap.add_argument("--clock", default="measured",
+                    choices=["measured", "modeled"],
+                    help="virtual-clock source: host wall time per batch "
+                         "or the plan's modeled latency (deterministic)")
     # lm mode
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

@@ -16,6 +16,11 @@ stream, and the continuous-batching scheduler.
 * Scheduler: co-serves two models round-robin, drops/duplicates nothing,
   dispatches only ladder rungs, precompiles the ladder (serving never
   re-traces), and the async wall-clock mode completes every request.
+* Power envelope: tightening the budget mid-trace degrades dispatch
+  (smaller rungs, cpu/flex fallback, recorded deferrals) without ever
+  dropping or duplicating a request and with a clean envelope audit; a
+  peak cap below the DPU's power excludes it outright; a model no
+  backend of which can ever fit is rejected at register time.
 """
 import time
 
@@ -23,6 +28,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core.energy import PowerEnvelope
 from repro.core.engine import Engine
 from repro.core.pipeline import ServeStats, ServingPipeline, stage_batch
 from repro.core.scheduler import (ContinuousBatchingScheduler,
@@ -285,6 +291,122 @@ def test_scheduler_async_error_requeues_and_reraises(engines):
     with pytest.raises(Exception):
         sched.stop(drain=False)
     assert sched.pending() == 1                         # poison re-queued
+
+
+# ---------------------------------------------------------------------------
+# power-envelope degradation
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_tightening_mid_trace_no_loss_and_deferrals(engines):
+    """The budget collapses mid-trace (sunlight -> eclipse step scheduled
+    on the envelope): dispatch must degrade — smaller rungs, fallback
+    backend, recorded deferrals — but NEVER drop or duplicate a request,
+    and the envelope ledger must audit clean."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 48)
+    env = PowerEnvelope(6.0, window_s=0.001)
+    env.set_budget(0.005, sustained_w=0.5)      # the mid-trace tightening
+    sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
+    sched.register("logistic_net", e, backend=("accel", "cpu"),
+                   ladder=(1, 4, 16), warmup_sample=reqs[0])
+    trace = [(0.0002 * i, "logistic_net", r) for i, r in enumerate(reqs)]
+    sched.serve_trace(trace)
+
+    rids = [c.rid for c in sched.completions]
+    assert len(rids) == len(trace)                   # nothing dropped
+    assert len(set(rids)) == len(rids)               # nothing duplicated
+    tel = sched.telemetry()["logistic_net"]
+    assert tel.n_deferrals > 0                       # degradation recorded
+    assert tel.n_deferrals == len(sched.deferrals)
+    assert tel.backend_counts.get("cpu", 0) > 0      # fell back off the DPU
+    assert tel.energy_j > 0 and tel.j_per_inference > 0
+    audit = sched.envelope_report()
+    assert audit["n_violations"] == 0, audit
+    # post-tightening, only the admissible low-power backend dispatches
+    late = [d for d in sched.dispatches if d.started > 0.01]
+    assert late and all(d.backend == "cpu" for d in late)
+
+
+def test_envelope_peak_cap_excludes_primary_backend(engines):
+    """A peak cap below the DPU's busy power forces every dispatch onto
+    the fallback backend, with identical results integrity."""
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 12)
+    env = PowerEnvelope(10.0, peak_w=3.0, window_s=0.01)
+    sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
+    sched.register("multi_esperta", e, backend=("accel", "flex"),
+                   ladder=(1, 4), warmup_sample=reqs[0])
+    sched.serve_trace([(0.0005 * i, "multi_esperta", r)
+                       for i, r in enumerate(reqs)])
+    assert len(sched.completions) == len(reqs)
+    assert sched.dispatches
+    assert all(d.backend == "flex" for d in sched.dispatches)
+    assert sched.envelope_report()["n_violations"] == 0
+
+
+def test_envelope_infeasible_model_rejected_at_register(engines):
+    """An envelope that could never admit any backend of a model fails
+    loudly at register time, not by starving the queue later."""
+    m, e = engines["logistic_net"]
+    env = PowerEnvelope(1e-6, peak_w=1e-3, window_s=0.01)
+    sched = ContinuousBatchingScheduler(envelope=env)
+    with pytest.raises(ValueError, match="envelope"):
+        sched.register("logistic_net", e, backend=("accel", "cpu"),
+                       ladder=(1, 4))
+
+
+def test_envelope_never_admissible_mid_schedule_raises(engines):
+    """A schedule that passes register-time feasibility (via its early
+    regime) but can never admit once the budget collapses must surface a
+    RuntimeError from serve_trace — not return with requests stranded."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 8)
+    env = PowerEnvelope(6.0, window_s=0.001)
+    env.set_budget(0.005, sustained_w=1e-9, peak_w=1e-6)
+    sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
+    sched.register("logistic_net", e, backend=("flex", "cpu"),
+                   ladder=(1, 4), warmup_sample=reqs[0])
+    trace = [(0.006 + 0.0002 * i, "logistic_net", r)
+             for i, r in enumerate(reqs)]        # all after the collapse
+    with pytest.raises(RuntimeError, match="envelope"):
+        sched.serve_trace(trace)
+    assert sched.pending() == len(reqs)          # queued, not dropped
+
+
+def test_envelope_deferrals_deduped_per_blocked_head(engines):
+    """Re-polling a blocked queue must not grow the deferral ledger: one
+    record per blocked batch-head, however often step() is called."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 4)
+    env = PowerEnvelope(6.0, window_s=0.001)
+    env.set_budget(0.005, sustained_w=1e-9, peak_w=1e-6)
+    sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
+    sched.register("logistic_net", e, backend=("flex", "cpu"),
+                   ladder=(1, 4), warmup_sample=reqs[0])
+    for i, r in enumerate(reqs):
+        sched.submit("logistic_net", r, arrival=0.006 + 0.0001 * i)
+    for k in range(50):                          # async-style re-polling
+        assert sched.step(0.01 + 1e-5 * k) is None
+    assert len(sched.deferrals) == 1
+    assert sched.telemetry()["logistic_net"].n_deferrals == 1
+
+
+def test_envelope_dispatch_records_energy_fields(engines):
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 6)
+    sched = ContinuousBatchingScheduler(envelope=PowerEnvelope(6.0),
+                                        clock="modeled")
+    sched.register("multi_esperta", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    sched.serve_trace([(0.0005 * i, "multi_esperta", r)
+                       for i, r in enumerate(reqs)])
+    for d in sched.dispatches:
+        assert d.backend == "flex"
+        assert d.energy_j > 0 and d.power_w > 0
+        assert d.energy_j == pytest.approx(d.power_w * d.modeled_latency_s)
+    # the envelope ledger saw exactly one draw per dispatch
+    assert sched.envelope_report()["n_draws"] == len(sched.dispatches)
 
 
 def test_scheduler_async_mode_completes_everything(engines):
