@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+    PYTHONPATH=src python -m benchmarks.run --list     # what exists
 
 Unknown section names and missing benchmark modules fail with a clear
 one-line message and a non-zero exit, never a raw traceback.
@@ -13,25 +14,37 @@ import importlib
 import sys
 import time
 
-# section name -> (module, needs_dryrun_ledger, gate) — `gate` sections
-# return an exit code that fails the driver at the end instead of
-# aborting the remaining sections.
+# section name -> (module, needs_dryrun_ledger, gate, description) —
+# `gate` sections return an exit code that fails the driver at the end
+# instead of aborting the remaining sections.
 SECTIONS = {
-    "table1": ("benchmarks.table1_model_stats", False, False),
-    "table2": ("benchmarks.table2_footprint", False, False),
-    "table3": ("benchmarks.table3_performance", False, False),
-    "throughput": ("benchmarks.throughput", False, False),
-    "serving": ("benchmarks.serving_load", False, True),
-    "energy": ("benchmarks.energy_dispatch", False, True),
-    "table45": ("benchmarks.table45_context", False, False),
-    "fig_power": ("benchmarks.fig_power_phases", False, False),
-    "roofline": ("benchmarks.roofline", True, False),
-    "lm_energy": ("benchmarks.lm_energy", True, False),
+    "table1": ("benchmarks.table1_model_stats", False, False,
+               "Table I model stats: params/ops vs the paper's counts"),
+    "table2": ("benchmarks.table2_footprint", False, False,
+               "Table II memory footprint: fp32 vs int8 deployments"),
+    "table3": ("benchmarks.table3_performance", False, False,
+               "Table III latency/energy: measured host + modeled ZCU104"),
+    "throughput": ("benchmarks.throughput", False, False,
+                   "batched-vs-per-sample throughput per backend/rung"),
+    "serving": ("benchmarks.serving_load", False, True,
+                "continuous-batching serving under Poisson/burst traces"),
+    "energy": ("benchmarks.energy_dispatch", False, True,
+               "modeled J/inference table + envelope-constrained serving"),
+    "fusion": ("benchmarks.fusion", False, True,
+               "pass-pipeline gates: fused DDR bytes / J/inf vs op-by-op"),
+    "table45": ("benchmarks.table45_context", False, False,
+                "Tables IV/V context: device/toolchain comparison"),
+    "fig_power": ("benchmarks.fig_power_phases", False, False,
+                  "Figs 9-13 power-over-time serving phases"),
+    "roofline": ("benchmarks.roofline", True, False,
+                 "LM roofline sweep (needs the dryrun ledger)"),
+    "lm_energy": ("benchmarks.lm_energy", True, False,
+                  "LM energy model (needs the dryrun ledger)"),
 }
 
 
 def _load(name: str):
-    module, _, _ = SECTIONS[name]
+    module = SECTIONS[name][0]
     try:
         return importlib.import_module(module)
     except ImportError as ex:
@@ -41,7 +54,7 @@ def _load(name: str):
 
 def _run_section(name: str, failures: list) -> None:
     mod = _load(name)
-    _, needs_ledger, gate = SECTIONS[name]
+    _, needs_ledger, gate, _ = SECTIONS[name]
     entry = mod.run if name == "roofline" else mod.main
     if name == "roofline":
         print("== Roofline (3 terms per arch x shape, single-pod 256 "
@@ -65,7 +78,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma-list of {sorted(SECTIONS)}")
+    ap.add_argument("--list", action="store_true",
+                    help="print available sections and exit")
     args = ap.parse_args()
+    if args.list:
+        width = max(len(n) for n in SECTIONS)
+        for name, (_, needs_ledger, gate, desc) in SECTIONS.items():
+            tags = "".join([" [gate]" if gate else "",
+                            " [needs-ledger]" if needs_ledger else ""])
+            print(f"{name:{width}s}  {desc}{tags}")
+        return
     wanted = (list(SECTIONS) if not args.only
               else [w.strip() for w in args.only.split(",") if w.strip()])
     unknown = [w for w in wanted if w not in SECTIONS]

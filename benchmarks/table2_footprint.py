@@ -11,7 +11,7 @@ per inference.
 """
 from __future__ import annotations
 
-from repro.core.energy import TPU_V5E, ZCU104_DPU
+from repro.core.energy import TPU_V5E, ZCU104_DPU, weight_bytes
 from repro.core.inspector import inspect
 from repro.models import SPACE_MODELS
 
@@ -21,8 +21,12 @@ def rows():
     for name, m in SPACE_MODELS.items():
         g = m.build_graph()
         rep = inspect(g)
-        int8_bytes = g.n_params           # 1 B/param + scales (negligible)
-        fp32_bytes = g.n_params * 4
+        # actual post-PTQ widths: int8 weights + fp32 biases on the
+        # quantizable (conv2d/dense) nodes, fp32 for flex-only ops — the
+        # per-node dtype accounting BRAM residency uses (no more flat
+        # 1 B or 4 B per param)
+        int8_bytes = weight_bytes(g, "accel")
+        fp32_bytes = weight_bytes(g, "flex")
         out.append({
             "model": name,
             "paper_toolchain": m.paper_toolchain,

@@ -46,6 +46,11 @@ def main() -> None:
     engine.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
                       for i in range(4)])
 
+    # 3b. the plan the graph compiler built (DESIGN.md §10): fusion
+    # groups, int8 requant chains, and the BRAM/DDR activation arena
+    # (Engine(..., fuse=False) is the op-by-op escape hatch)
+    print(f"[plan]\n{engine.planned('accel').summary()}")
+
     outs, lat = {}, {}
     for backend in ("cpu", "flex", "accel"):
         rng = jax.random.PRNGKey(0)

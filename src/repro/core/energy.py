@@ -22,9 +22,9 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.opgraph import Graph
+from repro.core.opgraph import Graph, Node, base_op, node_param_bytes
 
 # ---------------------------------------------------------------------------
 # Hardware models
@@ -49,6 +49,10 @@ class HardwareModel:
     dispatch_s: float = 0.0        # per-node, per-SAMPLE framework dispatch
                                    # overhead (the eager per-layer baseline;
                                    # 0 for compiled/streaming backends)
+    ddr_pj_per_byte: float = 0.0   # off-chip access energy (J/byte): what
+                                   # makes DDR traffic cost JOULES even
+                                   # when the roofline is compute-bound —
+                                   # the lever operator fusion pulls
 
 
 # Public TPU v5e figures: 197 TFLOP/s bf16 / 394 TOP/s int8, 819 GB/s HBM,
@@ -71,11 +75,16 @@ TPU_V5E = HardwareModel(
 # The paper's ZCU104 (for cross-checking our model against their CPU/DPU
 # measurements): A53 CPU ~ 6 GFLOP/s fp32; DPU B4096 @300 MHz = 1.2 TOP/s
 # int8; DDR4 ~19.2 GB/s; BRAM+URAM ~ 4.75 MB; PS ~2-2.75 W, DPU adds ~4 W.
+# DDR4 system-level access energy ≈ 20 pJ/bit device+PHY+controller →
+# ~150 pJ/B, shared by every ZCU104 path (one memory subsystem).
+_ZCU104_DDR_PJ = 150e-12
+
 ZCU104_CPU = HardwareModel(
     name="zcu104_arm_a53",
     peak_flops_f32=6e9, peak_flops_bf16=6e9, peak_ops_int8=12e9,
     hbm_bw=19.2e9, onchip_bytes=1 * 2**20,
     power_busy=2.75, power_idle=2.0,
+    ddr_pj_per_byte=_ZCU104_DDR_PJ,
     # The paper's CPU baseline runs PyTorch per-sample in the instrument
     # loop; its small-model Table III rows are dispatch-bound, not
     # FLOP-bound (LogisticNet: 3.13 ms measured vs ~5 us roofline). The
@@ -88,6 +97,7 @@ ZCU104_DPU = HardwareModel(
     peak_flops_f32=0.1e12, peak_flops_bf16=0.1e12, peak_ops_int8=1.2e12,
     hbm_bw=19.2e9, onchip_bytes=4.75 * 2**20,
     power_busy=6.75, power_idle=5.0,
+    ddr_pj_per_byte=_ZCU104_DDR_PJ,
     # Paper Table III implies the DPU sustains 4-13% of its 1.2 TOP/s peak
     # on these small CNNs (50.6 / 150.1 GOP/s measured); 0.125 calibrated
     # to CNetPlusScalar, the DPU-friendliest workload.
@@ -102,6 +112,7 @@ ZCU104_HLS_NAIVE = HardwareModel(
     peak_flops_f32=20e6, peak_flops_bf16=20e6, peak_ops_int8=20e6,
     hbm_bw=19.2e9, onchip_bytes=4.75 * 2**20,
     power_busy=1.75, power_idle=1.5,
+    ddr_pj_per_byte=_ZCU104_DDR_PJ,
     util=1.0, overhead_s=27e-6)
 
 
@@ -129,17 +140,68 @@ class EnergyReport:
                 f"bound={self.bound}")
 
 
-def _dtype_bytes(backend: str) -> int:
-    return 1 if backend == "accel" else 4
-
-
 def _peak(hw: HardwareModel, backend: str) -> float:
     if backend == "accel":
         return hw.peak_ops_int8
     return hw.peak_flops_f32
 
 
-def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int
+def _quantized_set(graph: Graph, backend: str,
+                   quantized: Optional[Set[str]]) -> Set[str]:
+    """Which nodes carry int8 weights. Without an explicit set, the
+    accel backend assumes its quantizable ops (conv2d/dense) do — the
+    graph-only approximation the benchmarks use."""
+    if quantized is not None:
+        return quantized
+    if backend != "accel":
+        return set()
+    return {n.name for n in graph.nodes.values()
+            if base_op(n) in ("conv2d", "dense")}
+
+
+def _node_weight_bytes(node: Node, quantized: Set[str]) -> int:
+    """Per-node parameter footprint at actual post-PTQ widths: int8
+    weights + fp32 biases for quantized nodes, fp32 everywhere else
+    (the `opgraph.node_param_bytes` split — one definition)."""
+    return node_param_bytes(node, 1 if node.name in quantized else 4)
+
+
+def weight_bytes(graph: Graph, backend: str,
+                 quantized: Optional[Set[str]] = None) -> int:
+    """Whole-graph parameter footprint at per-node dtype widths (what
+    BRAM residency and the cost signatures charge) — delegates to
+    `Graph.param_bytes` with a per-node weight-width map."""
+    q = _quantized_set(graph, backend, quantized)
+    return graph.param_bytes(4, node_dtype_bytes={n: 1 for n in q})
+
+
+def _act_bytes(graph: Graph, name: str) -> int:
+    """fp32 wire footprint of one node's value (per sample)."""
+    shape = graph.nodes[name].out_shape or ()
+    n = 1
+    for d in shape:
+        n *= d
+    return n * 4
+
+
+def _compute_cost(graph: Graph, hw: HardwareModel, backend: str,
+                  batch: int) -> Tuple[float, int]:
+    """(compute_t, n_compute_nodes) — the one definition of per-op
+    arithmetic time both the op-by-op and the arena cost paths share
+    (fusion moves bytes, never FLOPs)."""
+    compute_t = 0.0
+    n_compute_nodes = 0
+    peak = _peak(hw, backend)
+    for node in graph.nodes.values():
+        if node.op in ("input", "const"):
+            continue
+        n_compute_nodes += 1
+        compute_t += node.ops * batch / peak
+    return compute_t / hw.util, n_compute_nodes
+
+
+def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int,
+                quantized: Optional[Set[str]] = None
                 ) -> Tuple[float, float, float, bool, int]:
     """Shared roofline core for one dispatched batch.
 
@@ -150,30 +212,30 @@ def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int
     Weight residency mirrors the paper's BRAM policy: params that fit the
     on-chip budget are charged DDR traffic once (the first load, amortized
     away in steady-state serving); spilled params stream per inference
-    (the BaselineNet effect in the paper's Table III).
+    (the BaselineNet effect in the paper's Table III). Parameter bytes use
+    ACTUAL per-node widths (int8 weights + fp32 bias on quantized nodes).
+
+    This is the pre-pass op-by-op bytes model: every value round-trips
+    DDR — written once by its producer and read back by each consuming
+    node (graph inputs are read too). Same units as the arena model in
+    `plan_cost_signature` (which fused plans use instead), so the two are
+    directly comparable: the fused delta is the traffic the arena keeps
+    on-chip.
     """
-    db = _dtype_bytes(backend)
-    param_bytes = graph.n_params * db
+    q = _quantized_set(graph, backend, quantized)
+    param_bytes = weight_bytes(graph, backend, q)
     resident = param_bytes <= hw.onchip_bytes
 
-    compute_t = 0.0
+    compute_t, n_compute_nodes = _compute_cost(graph, hw, backend, batch)
     bytes_moved = 0.0
-    peak = _peak(hw, backend)
-    n_compute_nodes = 0
-    for node in graph.nodes.values():
-        if node.op == "input":
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op in ("input", "const"):
             continue
-        n_compute_nodes += 1
-        compute_t += node.ops * batch / peak
-        act_bytes = 1
-        if node.out_shape:
-            n = 1
-            for d in node.out_shape:
-                n *= d
-            act_bytes = n * 4  # activations stay fp32 on the wire
-        w_bytes = 0 if resident else node.param_count * db
-        bytes_moved += act_bytes * batch + w_bytes * batch
-    compute_t /= hw.util
+        reads = sum(_act_bytes(graph, i) for i in node.inputs
+                    if graph.nodes[i].op != "const")   # consts are plan
+        w_bytes = 0 if resident else _node_weight_bytes(node, q)
+        bytes_moved += (_act_bytes(graph, name) + reads + w_bytes) * batch
     memory_t = bytes_moved / hw.hbm_bw
     return compute_t, memory_t, bytes_moved, resident, n_compute_nodes
 
@@ -195,7 +257,7 @@ def model_graph(graph: Graph, hw: HardwareModel, backend: str = "flex",
         graph, hw, backend, batch)
     latency = _batch_latency(hw, compute_t, memory_t, batch, n_nodes)
     bound = "compute" if compute_t >= memory_t else "memory"
-    energy = hw.power_busy * latency
+    energy = hw.power_busy * latency + bytes_moved * hw.ddr_pj_per_byte
     return EnergyReport(
         hw=hw.name, backend=backend,
         latency_s=latency / batch,
@@ -228,7 +290,12 @@ BACKEND_HW: Dict[str, HardwareModel] = {
 class CostSignature:
     """Plan-time cost of ONE dispatched batch of a compiled plan: what the
     dispatcher needs to rank (backend, rung) candidates and to charge the
-    power envelope — no serving-time measurement involved."""
+    power envelope — no serving-time measurement involved.
+
+    ``energy_j = power_w * latency_s + ddr_energy_j``: off-chip traffic
+    costs joules even when the roofline is compute-bound, so a fused plan
+    that keeps intermediates on-chip is measurably cheaper per inference
+    than the op-by-op plan of the same graph."""
     backend: str
     batch: int
     hw: str
@@ -239,6 +306,7 @@ class CostSignature:
     j_per_inference: float
     power_w: float                  # busy power while the batch runs
     weights_resident: bool
+    ddr_energy_j: float = 0.0       # the off-chip-access share of energy_j
 
     def row(self) -> str:
         return (f"{self.backend:6s} b={self.batch:<3d} "
@@ -248,22 +316,57 @@ class CostSignature:
                 f"resident={self.weights_resident}")
 
 
-def cost_signature(graph: Graph, backend: str, batch: int,
-                   hw: Optional[HardwareModel] = None) -> CostSignature:
-    """The modeled cost of one ``batch``-sized dispatch of ``graph`` on
-    ``backend`` (hardware from BACKEND_HW unless overridden)."""
-    if hw is None:
-        hw = BACKEND_HW[backend]
-    compute_t, memory_t, bytes_moved, resident, n_nodes = _graph_cost(
-        graph, hw, backend, batch)
+def _make_signature(graph: Graph, backend: str, batch: int,
+                    hw: HardwareModel, compute_t: float, memory_t: float,
+                    bytes_moved: float, resident: bool,
+                    n_nodes: int) -> CostSignature:
     latency = _batch_latency(hw, compute_t, memory_t, batch, n_nodes)
-    energy = hw.power_busy * latency
+    ddr_j = bytes_moved * hw.ddr_pj_per_byte
+    energy = hw.power_busy * latency + ddr_j
     return CostSignature(
         backend=backend, batch=batch, hw=hw.name,
         flops=float(graph.n_ops) * batch, bytes_moved=bytes_moved,
         latency_s=latency, energy_j=energy,
         j_per_inference=energy / batch, power_w=hw.power_busy,
-        weights_resident=resident)
+        weights_resident=resident, ddr_energy_j=ddr_j)
+
+
+def cost_signature(graph: Graph, backend: str, batch: int,
+                   hw: Optional[HardwareModel] = None,
+                   quantized: Optional[Set[str]] = None) -> CostSignature:
+    """The modeled cost of one ``batch``-sized dispatch of ``graph`` on
+    ``backend`` (hardware from BACKEND_HW unless overridden), under the
+    pre-pass op-by-op bytes model: every activation round-trips DDR."""
+    if hw is None:
+        hw = BACKEND_HW[backend]
+    compute_t, memory_t, bytes_moved, resident, n_nodes = _graph_cost(
+        graph, hw, backend, batch, quantized)
+    return _make_signature(graph, backend, batch, hw, compute_t, memory_t,
+                           bytes_moved, resident, n_nodes)
+
+
+def plan_cost_signature(graph: Graph, backend: str, batch: int, arena,
+                        hw: Optional[HardwareModel] = None,
+                        quantized: Optional[Set[str]] = None
+                        ) -> CostSignature:
+    """The modeled cost of a FUSED plan's dispatch: DDR bytes come from
+    the static arena plan (`core/memory.py`) — graph inputs/outputs,
+    arena spills, and segment-boundary round-trips only; BRAM-resident
+    intermediates are free. Spilled weights still stream per inference.
+    Compute time is shared with `_graph_cost` (fusion moves bytes, not
+    FLOPs), so the energy delta vs `cost_signature` is the off-chip
+    traffic the fusion+arena pipeline keeps on-chip."""
+    if hw is None:
+        hw = BACKEND_HW[backend]
+    w_bytes = weight_bytes(graph, backend, quantized)
+    resident = w_bytes <= hw.onchip_bytes
+    compute_t, n_nodes = _compute_cost(graph, hw, backend, batch)
+    bytes_moved = float(arena.ddr_bytes_per_sample) * batch
+    if not resident:
+        bytes_moved += w_bytes * batch
+    memory_t = bytes_moved / hw.hbm_bw
+    return _make_signature(graph, backend, batch, hw, compute_t, memory_t,
+                           bytes_moved, resident, n_nodes)
 
 
 # ---------------------------------------------------------------------------

@@ -16,15 +16,18 @@ Three execution backends for an op graph (DESIGN.md §2):
               the paper's partial-offload arrangement.
 
 Execution is staged (core/plan.py, DESIGN.md §7): ``compile(backend,
-batch_size)`` runs the inspector once, partitions the graph into
-contiguous accel/flex segments, folds PTQ weight/activation scales and
-fused epilogues into per-node constants, and emits ONE jitted batched
-callable — inputs carry a leading batch dim end-to-end. Compiled plans
-are cached per instance keyed by (backend, batch size), so steady-state
-serving never re-traces; ``run``/``run_batch`` are thin wrappers over the
-cache. Weight residency mirrors the paper's BRAM policy: quantized
-weights are device-resident plan constants (VMEM residency on real TPU is
-the kernels' block lifetime).
+batch_size)`` runs the inspector once, rewrites the graph through the
+graph-compiler pass pipeline (core/passes.py, DESIGN.md §10: constant
+folding, DCE, epilogue fusion, int8 requant chains — disable with
+``Engine(..., fuse=False)``), partitions it into contiguous accel/flex
+segments, folds PTQ weight/activation scales into per-node constants,
+plans the static BRAM/DDR activation arena (core/memory.py), and emits
+ONE jitted batched callable — inputs carry a leading batch dim
+end-to-end. Compiled plans are cached per instance keyed by (backend,
+batch size), so steady-state serving never re-traces; ``run``/
+``run_batch`` are thin wrappers over the cache. Weight residency mirrors
+the paper's BRAM policy: quantized weights are device-resident plan
+constants (VMEM residency on real TPU is the kernels' block lifetime).
 """
 from __future__ import annotations
 
@@ -75,10 +78,13 @@ class Engine:
     """Executes an op graph on a chosen backend (or a partitioned mix)."""
 
     def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]],
-                 ptq_demote_threshold: float = 0.2):
+                 ptq_demote_threshold: float = 0.2, fuse: bool = True):
         self.graph = graph
         self.params = params
         self.ptq_demote_threshold = ptq_demote_threshold
+        # fuse=False is the escape hatch: skip the graph-compiler pass
+        # pipeline (DESIGN.md §10) and build the pre-pass per-node plans
+        self.fuse = fuse
         self._quant: Optional[Dict[str, QuantizedLayer]] = None
         self._calib: Dict[str, float] = {}
         self._ptq_err: Dict[str, float] = {}
@@ -125,7 +131,8 @@ class Engine:
                 self.graph, self.params, key,
                 quant=self._quant, act_absmax=self._calib,
                 ptq_err=self._ptq_err,
-                ptq_demote_threshold=self.ptq_demote_threshold)
+                ptq_demote_threshold=self.ptq_demote_threshold,
+                fuse=self.fuse)
         return self._planned[key]
 
     def compile(self, backend: str = "flex", batch_size: int = 1):

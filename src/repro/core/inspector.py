@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.core.opgraph import Graph
+from repro.core.opgraph import Graph, base_op
 
 # The DPU-analog op table. Deliberately restrictive, mirroring DPUCZDX8G:
 # CNN ops + ReLU only — no sigmoid/tanh/softplus, no comparators, no 3-D
@@ -54,10 +54,13 @@ def assign_backends(graph: Graph) -> Dict[str, str]:
     out = {}
     for name in graph.order:
         node = graph.nodes[name]
-        if node.op == "input":
+        if node.op in ("input", "const"):       # structural, no compute
             out[name] = "accel"
             continue
-        out[name] = "accel" if node.op in ACCEL_SUPPORTED else "flex"
+        # a fused node goes where its base compute op goes (its epilogue
+        # runs inside the kernel — DESIGN.md §10)
+        out[name] = ("accel" if base_op(node) in ACCEL_SUPPORTED
+                     else "flex")
     return out
 
 

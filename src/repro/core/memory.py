@@ -1,0 +1,182 @@
+"""Static activation-buffer planner — the BRAM/DDR two-tier arena
+(DESIGN.md §10).
+
+The paper's HLS designs owe their energy win to *buffer planning*: each
+layer's output streams into an on-chip buffer sized at synthesis time,
+and DDR is touched only at the design's boundary. This module does the
+same planning for an execution plan, at plan time:
+
+* **liveness** — every non-input node's value is live from its
+  definition to its last use (graph outputs stay live to the end: they
+  are the downlink payload).
+* **arena assignment** — buffers are packed into a single BRAM arena
+  (first-fit over live intervals, the classic static allocator) whose
+  budget is the backend's on-chip memory minus resident weights. What
+  does not fit *spills* to DDR.
+* **tier rules** — a value consumed outside its producing segment
+  crosses a backend boundary and must round-trip DDR regardless of
+  size; graph inputs arrive from DDR; graph outputs leave to DDR.
+
+The resulting :class:`ArenaPlan` is what `energy.plan_cost_signature`
+charges: DDR bytes for spills and boundaries only — on-chip traffic is
+free, which is precisely why operator fusion (fewer, narrower
+intermediates: int8 instead of fp32) measurably lowers the modeled
+J/inference.
+
+Buffers are sized per *sample*: the accelerator streams one sample's
+intermediates at a time (batch amortizes staging, not buffer size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.opgraph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferAssignment:
+    name: str                       # producing node
+    nbytes: int                     # per-sample bytes
+    tier: str                       # 'bram' | 'ddr'
+    offset: int                     # arena offset (bram) or -1 (ddr)
+    first: int                      # def position in topo order
+    last: int                       # last-use position
+    reason: str = ""                # 'spill' | 'boundary' | '' (bram)
+
+
+@dataclasses.dataclass
+class ArenaPlan:
+    """The static buffer plan for one execution plan (one backend)."""
+    graph_name: str
+    backend: str
+    bram_budget: int                # bytes available to activations
+    buffers: Dict[str, BufferAssignment]
+    bram_peak: int                  # high-water mark of the arena
+    input_bytes: int                # graph inputs read from DDR, /sample
+    output_bytes: int               # graph outputs written to DDR, /sample
+    spill_bytes: int                # DDR round-trip traffic from spills
+    boundary_bytes: int             # DDR round-trips at segment crossings
+
+    @property
+    def n_spilled(self) -> int:
+        return sum(1 for b in self.buffers.values()
+                   if b.tier == "ddr" and b.reason == "spill")
+
+    @property
+    def ddr_bytes_per_sample(self) -> int:
+        """Modeled DDR traffic one sample causes through activations."""
+        return (self.input_bytes + self.output_bytes
+                + self.spill_bytes + self.boundary_bytes)
+
+    def summary(self) -> str:
+        lines = [f"arena[{self.graph_name}/{self.backend}]: "
+                 f"peak {self.bram_peak:,} / {self.bram_budget:,} B BRAM, "
+                 f"{self.n_spilled} spill(s), "
+                 f"{self.ddr_bytes_per_sample:,} DDR B/sample"]
+        for b in self.buffers.values():
+            where = (f"bram@{b.offset}" if b.tier == "bram"
+                     else f"ddr({b.reason})")
+            lines.append(f"    {b.name:24s} {b.nbytes:10,d} B  "
+                         f"[{b.first:3d},{b.last:3d}]  {where}")
+        return "\n".join(lines)
+
+
+def _nbytes(graph: Graph, name: str,
+            act_dtype_bytes: Dict[str, int]) -> int:
+    shape = graph.nodes[name].out_shape or ()
+    return int(np.prod(shape, dtype=np.int64)) * act_dtype_bytes.get(name, 4)
+
+
+def plan_arena(graph: Graph,
+               segments: Sequence,          # plan.Segment sequence
+               bram_budget: int,
+               act_dtype_bytes: Optional[Dict[str, int]] = None,
+               backend: str = "flex") -> ArenaPlan:
+    """Assign every activation a tier (+ BRAM offset) via liveness-aware
+    first-fit. ``act_dtype_bytes`` maps node name -> bytes/element (1 for
+    int8-domain values, default 4); ``bram_budget`` is the on-chip bytes
+    left after resident weights."""
+    from repro.core.opgraph import consumers as _consumers
+
+    act_dtype_bytes = act_dtype_bytes or {}
+    cons = _consumers(graph)
+    seg_of: Dict[str, int] = {}
+    for si, seg in enumerate(segments):
+        for n in seg.nodes:
+            seg_of[n] = si
+
+    pos = {name: i for i, name in enumerate(graph.order)}
+    end = len(graph.order)
+    last_use: Dict[str, int] = {
+        name: max([pos[c] for c in cs] or [pos[name]])
+        for name, cs in cons.items() if name in pos}
+    for o in graph.outputs:
+        last_use[o] = end                       # downlink payload
+
+    buffers: Dict[str, BufferAssignment] = {}
+    live: List[Tuple[int, int, int]] = []       # (offset, nbytes, last)
+    bram_peak = 0
+    spill_bytes = boundary_bytes = 0
+
+    def _first_fit(nbytes: int) -> Optional[int]:
+        taken = sorted((o, o + s) for o, s, _ in live)
+        cursor = 0
+        for lo, hi in taken:
+            if lo - cursor >= nbytes:
+                break
+            cursor = max(cursor, hi)
+        if cursor + nbytes > bram_budget:
+            return None
+        return cursor
+
+    for name in graph.order:
+        node = graph.nodes[name]
+        if node.op in ("input", "const"):
+            continue
+        t = pos[name]
+        # expire buffers whose last use is strictly past (a node may not
+        # overwrite a value still being read at t)
+        live[:] = [e for e in live if e[2] >= t]
+        nbytes = _nbytes(graph, name, act_dtype_bytes)
+        last = last_use.get(name, t)
+        # write always; read back only if somebody actually reads it (a
+        # consumer-less output is written once for downlink, never read)
+        traffic = nbytes * (2 if cons.get(name) else 1)
+        crosses = any(seg_of.get(c) != seg_of.get(name)
+                      for c in cons.get(name, ()))
+        if crosses:
+            # a backend boundary forces a DDR round-trip regardless of size
+            buffers[name] = BufferAssignment(name, nbytes, "ddr", -1, t,
+                                             last, "boundary")
+            boundary_bytes += traffic
+            continue
+        off = _first_fit(nbytes)
+        if off is None:
+            buffers[name] = BufferAssignment(name, nbytes, "ddr", -1, t,
+                                             last, "spill")
+            spill_bytes += traffic
+            continue
+        live.append((off, nbytes, last))
+        bram_peak = max(bram_peak, off + nbytes)
+        buffers[name] = BufferAssignment(name, nbytes, "bram", off, t, last)
+
+    input_bytes = sum(_nbytes(graph, n, act_dtype_bytes)
+                      for n in graph.graph_inputs)
+    # DDR-tier outputs already paid their write in spill/boundary traffic
+    output_bytes = sum(
+        _nbytes(graph, o, act_dtype_bytes) for o in set(graph.outputs)
+        if o in buffers and buffers[o].tier == "bram")
+    return ArenaPlan(
+        graph_name=graph.name,
+        backend=backend,
+        bram_budget=bram_budget,
+        buffers=buffers,
+        bram_peak=bram_peak,
+        input_bytes=input_bytes,
+        output_bytes=output_bytes,
+        spill_bytes=spill_bytes,
+        boundary_bytes=boundary_bytes,
+    )

@@ -11,6 +11,17 @@ dense, activations (relu / leaky_relu / sigmoid / softplus / tanh),
 flatten / concat / add / mul / exp, comparator (`greater`) and gaussian
 sampling — the last two being exactly the ops the paper calls out as
 DPU-unsupported.
+
+Two structural kinds support the pass pipeline (core/passes.py,
+DESIGN.md §10):
+
+* ``const`` — a compile-time value (``attrs["value"]``), produced by
+  constant folding; carries no runtime cost.
+* ``fused`` — a compute node (``attrs["base_op"]`` in conv2d/dense) with
+  an element-wise epilogue (``attrs["epilogue"]`` in relu/sigmoid) and an
+  optional int8 requantize step folded in. Parameters live under the
+  original producer's name (``attrs["param_of"]``); shape inference
+  delegates to the base op (epilogues are shape-preserving).
 """
 from __future__ import annotations
 
@@ -20,6 +31,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 Shape = Tuple[int, ...]
+
+# fused-node epilogue ops must be shape-preserving element-wise ops
+FUSABLE_EPILOGUES = ("relu", "sigmoid")
+
+# ops that consume the per-sample RNG stream: their EXECUTION ORDER is
+# part of the numerics contract (each one splits the key chain), so no
+# pass may add, remove, or reorder them
+RANDOM_OPS = frozenset({"sample_normal"})
 
 
 @dataclasses.dataclass
@@ -31,8 +50,29 @@ class Node:
     # filled by the graph builder
     out_shape: Optional[Shape] = None
     param_count: int = 0
+    bias_params: int = 0             # the fp32-resident share of param_count
     macs: int = 0                    # multiply-accumulates
     ops: int = 0                     # total arithmetic ops (paper's metric)
+
+
+def base_op(node: Node) -> str:
+    """The compute op of a node — the wrapped op for ``fused`` nodes."""
+    return node.attrs["base_op"] if node.op == "fused" else node.op
+
+
+def param_node(node: Node) -> str:
+    """The name parameters are keyed under (the original producer for a
+    fused node, the node itself otherwise)."""
+    return node.attrs.get("param_of", node.name)
+
+
+def node_param_bytes(node: Node, weight_dtype_bytes: int = 4) -> int:
+    """One node's parameter footprint with weights at
+    ``weight_dtype_bytes`` and biases at fp32 (the Vitis-AI int8 layout
+    keeps biases fp32) — the single definition `Graph.param_bytes` and
+    the energy model's weight accounting share."""
+    return ((node.param_count - node.bias_params) * weight_dtype_bytes
+            + node.bias_params * 4)
 
 
 class Graph:
@@ -82,17 +122,60 @@ class Graph:
     def n_macs(self) -> int:
         return sum(n.macs for n in self.nodes.values())
 
-    def param_bytes(self, dtype_bytes: int = 4) -> int:
-        return self.n_params * dtype_bytes
+    def param_bytes(self, dtype_bytes: int = 4,
+                    node_dtype_bytes: Optional[Dict[str, int]] = None) -> int:
+        """Total parameter footprint. ``node_dtype_bytes`` maps a node
+        name to its *weight* width in bytes (e.g. 1 for a PTQ int8 node);
+        biases stay fp32 (4 B) — the Vitis-AI layout. Nodes absent from
+        the map are charged at ``dtype_bytes``. This is what BRAM
+        residency and the `CostSignature` weight-bytes use, so quantized
+        models are no longer over-counted at 4 B/param."""
+        if not node_dtype_bytes:
+            return self.n_params * dtype_bytes
+        total = 0
+        for n in self.nodes.values():
+            wb = node_dtype_bytes.get(n.name)
+            if wb is None:
+                total += n.param_count * dtype_bytes
+            else:
+                total += node_param_bytes(n, wb)
+        return total
+
+    def clone(self) -> "Graph":
+        """Deep-enough copy for pass rewriting: nodes and ordering are
+        fresh objects; attrs dicts are copied one level deep."""
+        g = Graph(self.name)
+        g.graph_inputs = dict(self.graph_inputs)
+        g.outputs = list(self.outputs)
+        g.order = list(self.order)
+        for name, n in self.nodes.items():
+            g.nodes[name] = dataclasses.replace(
+                n, inputs=list(n.inputs), attrs=dict(n.attrs))
+        return g
 
     def summary(self) -> str:
         lines = [f"Graph {self.name}: {self.n_params:,} params, "
                  f"{self.n_ops:,} ops"]
         for name in self.order:
             n = self.nodes[name]
-            lines.append(f"  {name:24s} {n.op:12s} -> {n.out_shape} "
+            label = n.op
+            if n.op == "fused":
+                label = "+".join([n.attrs["base_op"]]
+                                 + list(n.attrs.get("epilogue", ())))
+                if n.attrs.get("requant_scale") is not None:
+                    label += "+requant"
+            lines.append(f"  {name:24s} {label:20s} -> {n.out_shape} "
                          f"params={n.param_count:,} ops={n.ops:,}")
         return "\n".join(lines)
+
+
+def consumers(graph: Graph) -> Dict[str, List[str]]:
+    """node name -> names of the nodes that read it, in graph order."""
+    out: Dict[str, List[str]] = {n: [] for n in graph.nodes}
+    for name in graph.order:
+        for i in graph.nodes[name].inputs:
+            out[i].append(name)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -106,17 +189,35 @@ def _conv_out(size: int, k: int, stride: int, pad: str) -> int:
     return (size - k) // stride + 1
 
 
+def _pool_out(size: int, k: int, stride: int) -> int:
+    """VALID-window pooling output size — matches `lax.reduce_window`
+    execution exactly (including odd spatial dims and stride != kernel;
+    the old ``size // stride`` formula diverged whenever k != stride)."""
+    if size < k:
+        raise ValueError(f"pool kernel {k} exceeds input dim {size}")
+    return (size - k) // stride + 1
+
+
 def _infer(node: Node, ins: List[Node]) -> None:
     op, a = node.op, node.attrs
     shapes = [i.out_shape for i in ins]
 
     if op == "conv2d":
+        if len(shapes[0]) != 3:
+            raise ValueError(
+                f"conv2d {node.name!r} needs a rank-3 HWC input, got "
+                f"{shapes[0]}")
         (h, w, cin) = shapes[0]
         kh, kw = a["kernel"]
         cout, stride, pad = a["features"], a.get("stride", 1), a.get("padding", "SAME")
         ho, wo = _conv_out(h, kh, stride, pad), _conv_out(w, kw, stride, pad)
+        if ho <= 0 or wo <= 0:
+            raise ValueError(f"conv2d {node.name!r}: kernel ({kh},{kw}) "
+                             f"with padding {pad} over {shapes[0]} leaves "
+                             "no output")
         node.out_shape = (ho, wo, cout)
         node.param_count = kh * kw * cin * cout + cout
+        node.bias_params = cout
         node.macs = ho * wo * cout * kh * kw * cin
         node.ops = 2 * node.macs + ho * wo * cout
     elif op == "conv3d":
@@ -127,23 +228,26 @@ def _infer(node: Node, ins: List[Node]) -> None:
                       _conv_out(w, kw, stride, pad))
         node.out_shape = (do, ho, wo, cout)
         node.param_count = kd * kh * kw * cin * cout + cout
+        node.bias_params = cout
         node.macs = do * ho * wo * cout * kd * kh * kw * cin
         node.ops = 2 * node.macs + do * ho * wo * cout
     elif op in ("maxpool2d", "avgpool2d"):
         (h, w, c) = shapes[0]
         k, stride = a["kernel"], a.get("stride", a["kernel"])
-        node.out_shape = (h // stride, w // stride, c)
+        node.out_shape = (_pool_out(h, k, stride), _pool_out(w, k, stride), c)
         node.ops = int(np.prod(node.out_shape)) * k * k
     elif op in ("maxpool3d", "avgpool3d"):
         (d, h, w, c) = shapes[0]
         k, stride = a["kernel"], a.get("stride", a["kernel"])
-        node.out_shape = (d // stride, h // stride, w // stride, c)
+        node.out_shape = (_pool_out(d, k, stride), _pool_out(h, k, stride),
+                          _pool_out(w, k, stride), c)
         node.ops = int(np.prod(node.out_shape)) * k ** 3
     elif op == "dense":
         fin = int(np.prod(shapes[0]))
         fout = a["features"]
         node.out_shape = (fout,)
         node.param_count = fin * fout + (fout if a.get("bias", True) else 0)
+        node.bias_params = fout if a.get("bias", True) else 0
         node.macs = fin * fout
         node.ops = 2 * node.macs + fout
     elif op == "flatten":
@@ -154,8 +258,24 @@ def _infer(node: Node, ins: List[Node]) -> None:
                                                           "softplus") else 1)
     elif op == "concat":
         ax = a.get("axis", -1)
+        rank = len(shapes[0])
+        if any(len(s) != rank for s in shapes):
+            raise ValueError(
+                f"concat {node.name!r}: input ranks differ "
+                f"({[len(s) for s in shapes]})")
+        if not -rank <= ax < rank:
+            raise ValueError(f"concat {node.name!r}: axis {ax} out of "
+                             f"range for rank-{rank} inputs")
+        pos = ax + rank if ax < 0 else ax
+        for s in shapes[1:]:
+            mismatched = [d for d in range(rank)
+                          if d != pos and s[d] != shapes[0][d]]
+            if mismatched:
+                raise ValueError(
+                    f"concat {node.name!r}: non-axis dims differ between "
+                    f"{shapes[0]} and {s} (axis={ax})")
         base = list(shapes[0])
-        base[ax] = sum(s[ax] for s in shapes)
+        base[pos] = sum(s[pos] for s in shapes)
         node.out_shape = tuple(base)
     elif op in ("add", "mul", "sub"):
         node.out_shape = shapes[0]
@@ -178,5 +298,26 @@ def _infer(node: Node, ins: List[Node]) -> None:
     elif op == "argmax":
         node.out_shape = ()
         node.ops = int(np.prod(shapes[0]))
+    elif op == "const":
+        node.out_shape = tuple(np.shape(a["value"]))
+        node.ops = 0
+    elif op == "fused":
+        # delegate to the base compute op, then account the epilogue as
+        # element-wise ops on the output (requantize is one more op/elt)
+        proxy = Node(node.name, a["base_op"], list(node.inputs),
+                     {k: v for k, v in a.items()
+                      if k not in ("base_op", "epilogue", "param_of",
+                                   "requant_scale", "int8_input")})
+        _infer(proxy, ins)
+        node.out_shape = proxy.out_shape
+        node.param_count = proxy.param_count
+        node.bias_params = proxy.bias_params
+        node.macs = proxy.macs
+        n_out = int(np.prod(node.out_shape)) if node.out_shape else 1
+        epi_ops = sum(4 if e in ("sigmoid", "tanh", "softplus") else 1
+                      for e in a.get("epilogue", ()))
+        node.ops = proxy.ops + n_out * epi_ops
+        if a.get("requant_scale") is not None:
+            node.ops += n_out
     else:
         raise ValueError(f"unknown op {op!r}")

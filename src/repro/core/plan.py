@@ -1,4 +1,5 @@
-"""Staged execution plans: Planned -> Lowered -> Compiled (DESIGN.md §7).
+"""Staged execution plans: Planned -> Lowered -> Compiled (DESIGN.md §7,
+§10).
 
 The paper's deployment flow is ahead-of-time by construction: the
 inspector partitions the model, the quantizer folds scales, the compiler
@@ -7,11 +8,17 @@ re-derived all of that per call. This module is the JaCe-style staged
 chain that moves every decision to plan time:
 
 * :class:`ExecutionPlan` (**Planned**) — built once per (engine, backend):
-  the inspector's backend assignment, the contiguous accel/flex
-  *segments*, PTQ weight/activation scales and fused ReLU epilogues all
-  folded into per-node constants, plus the PTQ fidelity gate (nodes whose
+  the inspector's backend assignment, the PTQ fidelity gate (nodes whose
   calibration-time quantization error is too large are demoted to the
-  flex path — the mixed-precision analog of the paper's partial offload).
+  flex path), then the graph-compiler **pass pipeline**
+  (`core/passes.py`: constant folding, dead-node elimination, epilogue
+  fusion, int8 producer->consumer requant fusion), the contiguous
+  accel/flex *segments* over the REWRITTEN graph, PTQ weight/activation
+  scales folded into per-node constants, and the static BRAM/DDR
+  activation arena (`core/memory.py`) that prices the plan's
+  :class:`~repro.core.energy.CostSignature`. ``fuse=False`` skips the
+  pass pipeline entirely and reproduces the pre-pass plans node-for-node
+  (the escape hatch the conformance suite pins).
 * :class:`LoweredPlan` (**Lowered**) — the plan traced for one concrete
   batch size: a single jitted callable over ``[B, ...]`` inputs; every op
   implementation is natively batched (no per-sample ``x[None]``).
@@ -32,10 +39,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import energy as energy_mod
-from repro.core.opgraph import Graph, Node
+from repro.core import memory as memory_mod
+from repro.core.opgraph import (RANDOM_OPS, Graph, Node, base_op,
+                                consumers, param_node)
+from repro.core.passes import PassContext, PassManager, PassReport
 from repro.kernels import ops as kops
-
-RANDOM_OPS = frozenset({"sample_normal"})
 
 
 # ---------------------------------------------------------------------------
@@ -66,8 +74,12 @@ def _pool_b(x, a, ndim, op):
     window = (1,) + (k,) * ndim + (1,)
     strides = (1,) + (s,) * ndim + (1,)
     if op == "max":
-        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window,
-                                     strides, "VALID")
+        # dtype-aware identity: the int8-domain chain pools int8 exactly
+        # (max commutes with the monotone quantizer — DESIGN.md §10)
+        init = (jnp.iinfo(x.dtype).min
+                if jnp.issubdtype(x.dtype, jnp.integer) else -jnp.inf)
+        return jax.lax.reduce_window(x, jnp.asarray(init, x.dtype),
+                                     jax.lax.max, window, strides, "VALID")
     out = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, strides, "VALID")
     return out / (k ** ndim)
 
@@ -118,6 +130,18 @@ BATCHED_OP_IMPLS: Dict[str, Callable] = {
 }
 
 
+def _run_fused_f32(node: Node, xs, params) -> jax.Array:
+    """An fp32 ``fused`` node: the base op, then its element-wise
+    epilogue(s) — identical math to the unfused node pair, one plan node
+    (what XLA fuses anyway; here it also fuses the *plan*, so the arena
+    never allocates the intermediate)."""
+    y = BATCHED_OP_IMPLS[node.attrs["base_op"]](
+        xs, params.get(param_node(node), {}), node.attrs, None)
+    for e in node.attrs.get("epilogue", ()):
+        y = BATCHED_OP_IMPLS[e]([y], {}, {}, None)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # Plan-time folding
 # ---------------------------------------------------------------------------
@@ -134,24 +158,29 @@ class Segment:
 @dataclasses.dataclass
 class QuantNodePlan:
     """PTQ constants folded into a quantized node at plan time."""
-    op: str                         # 'conv2d' | 'dense'
+    op: str                         # 'conv2d' | 'dense' (base compute op)
     w_q: jax.Array                  # dense: [K, N]; conv: [KH, KW, Cin, Cout]
     w_scale: jax.Array              # [N] per-output-channel
     bias: Optional[jax.Array]
     act_scale: float                # static per-tensor input scale
-    fused_relu: bool                # ReLU epilogue folded in
+    act: Optional[str] = None       # fused activation epilogue
+    requant_scale: Optional[float] = None   # int8 output at this scale
+    int8_input: bool = False        # producer already delivered int8
     stride: int = 1
     padding: str = "SAME"
 
 
 def partition_segments(graph: Graph, assignment: Dict[str, str]
                        ) -> List[Segment]:
-    """Group ``graph.order`` into contiguous same-backend runs."""
+    """Group ``graph.order`` into contiguous same-backend runs. Inputs
+    and plan-time constants are structural — they move no data at run
+    time, so they must never split a contiguous backend run (the arena
+    charges real DDR round-trips at segment boundaries)."""
     segs: List[Segment] = []
     run: List[str] = []
     cur: Optional[str] = None
     for name in graph.order:
-        if graph.nodes[name].op == "input":
+        if graph.nodes[name].op in ("input", "const"):
             continue
         b = assignment[name]
         if b != cur and run:
@@ -164,14 +193,6 @@ def partition_segments(graph: Graph, assignment: Dict[str, str]
     return segs
 
 
-def _consumers(graph: Graph) -> Dict[str, List[str]]:
-    out: Dict[str, List[str]] = {n: [] for n in graph.nodes}
-    for name in graph.order:
-        for i in graph.nodes[name].inputs:
-            out[i].append(name)
-    return out
-
-
 class ExecutionPlan:
     """**Planned** stage: everything derivable without a batch size.
 
@@ -179,6 +200,11 @@ class ExecutionPlan:
     traces, :meth:`compile` (on the lowered stage) produces the reusable
     executable. ``n_traces`` counts lowerings — steady-state serving must
     not grow it.
+
+    With ``fuse=True`` (the default) the op graph is rewritten by the
+    pass pipeline before partitioning, and a static activation arena
+    prices the plan's cost signature. ``fuse=False`` reproduces the
+    pre-pass per-node plans exactly.
     """
 
     def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]],
@@ -186,67 +212,153 @@ class ExecutionPlan:
                  quant: Optional[Dict[str, Any]] = None,
                  act_absmax: Optional[Dict[str, float]] = None,
                  ptq_err: Optional[Dict[str, float]] = None,
-                 ptq_demote_threshold: float = 0.2):
+                 ptq_demote_threshold: float = 0.2,
+                 fuse: bool = True,
+                 pass_manager: Optional[PassManager] = None):
         from repro.core import inspector as inspector_mod
-        self.graph = graph
+        self.source_graph = graph
         self.params = params
         self.backend = backend
+        self.fuse = fuse
         self.n_traces = 0
 
         assignment = inspector_mod.assign_backends(graph)
         self.demoted: List[str] = []
         self.qplans: Dict[str, QuantNodePlan] = {}
-        self.fused_into: Dict[str, str] = {}    # relu node -> producer
+        self.fused_into: Dict[str, str] = {}    # legacy: relu node -> producer
+        self.pass_report: Optional[PassReport] = None
+        self.arena: Optional[memory_mod.ArenaPlan] = None
 
         if backend == "accel":
             if quant is None:
                 raise RuntimeError(
                     "accel backend needs calibrate() first (PTQ)")
-            consumers = _consumers(graph)
+            # PTQ fidelity gate first, on the source graph: calibration-
+            # time quantization error too large -> run fp32 on the flex
+            # path (the engine-level analog of the paper's QAT remark).
             for name in graph.order:
                 node = graph.nodes[name]
                 if (assignment[name] != "accel"
                         or node.op not in ("conv2d", "dense")
                         or name not in quant):
                     continue
-                # PTQ fidelity gate: calibration-time quantization error too
-                # large -> run this node fp32 on the flex path instead
-                # (the engine-level analog of the paper's QAT remark).
                 err = (ptq_err or {}).get(name, 0.0)
                 if err > ptq_demote_threshold:
                     assignment[name] = "flex"
                     self.demoted.append(name)
-                    continue
-                q = quant[name]
-                inp = node.inputs[0]
-                absmax = (act_absmax or {}).get(inp)
-                if absmax is None:
-                    raise RuntimeError(
-                        f"no calibration absmax for {inp!r} (accel plan)")
-                act_scale = float(absmax) / 127.0 + 1e-12
-                # fuse a sole-consumer ReLU into the kernel epilogue
-                fused = False
-                cons = consumers[name]
-                if (len(cons) == 1 and graph.nodes[cons[0]].op == "relu"
-                        and name not in graph.outputs
-                        and assignment.get(cons[0]) == "accel"):
-                    fused = True
-                    self.fused_into[cons[0]] = name
-                if node.op == "conv2d":
-                    w4 = q.w_q.reshape(params[name]["w"].shape)
-                    self.qplans[name] = QuantNodePlan(
-                        "conv2d", w4, q.w_scale, q.bias, act_scale, fused,
-                        stride=node.attrs.get("stride", 1),
-                        padding=node.attrs.get("padding", "SAME"))
-                else:
-                    self.qplans[name] = QuantNodePlan(
-                        "dense", q.w_q, q.w_scale, q.bias, act_scale, fused)
         else:
             assignment = {n: "flex" for n in assignment}
 
+        if fuse:
+            ctx = PassContext(
+                params=params, assignment=assignment,
+                quant=quant if backend == "accel" else None,
+                act_absmax=act_absmax if backend == "accel" else None)
+            self.graph, self.pass_report = (
+                pass_manager or PassManager()).run(graph, ctx)
+            assignment = ctx.assignment
+            if backend == "accel":
+                self._fold_quant_fused(quant, act_absmax, assignment)
+        else:
+            self.graph = graph
+            if backend == "accel":
+                self._fold_quant_legacy(quant, act_absmax, assignment)
+
         self.assignment = assignment
-        self.segments = partition_segments(graph, assignment)
+        self.segments = partition_segments(self.graph, assignment)
+        if fuse:
+            self.arena = self._plan_arena()
         self._lowered: Dict[int, "LoweredPlan"] = {}
+
+    # -- PTQ folding ---------------------------------------------------------
+
+    def _act_scale(self, act_absmax: Optional[Dict[str, float]],
+                   inp: str) -> float:
+        from repro.core.quantize import act_scale
+        absmax = (act_absmax or {}).get(inp)
+        if absmax is None:
+            raise RuntimeError(
+                f"no calibration absmax for {inp!r} (accel plan)")
+        return act_scale(absmax)
+
+    def _fold_quant_fused(self, quant, act_absmax, assignment) -> None:
+        """Quantized-node constants over the pass-rewritten graph: the
+        fusion decisions arrive as node attrs (epilogue / requant_scale /
+        int8_input) and fold straight into the QuantNodePlan."""
+        for name in self.graph.order:
+            node = self.graph.nodes[name]
+            bop = base_op(node)
+            if (assignment.get(name) != "accel"
+                    or bop not in ("conv2d", "dense")):
+                continue
+            pkey = param_node(node)
+            if pkey not in quant:
+                continue
+            q = quant[pkey]
+            s = self._act_scale(act_absmax, node.inputs[0])
+            epi = node.attrs.get("epilogue", ())
+            common = dict(
+                w_scale=q.w_scale, bias=q.bias, act_scale=s,
+                act=epi[0] if epi else None,
+                requant_scale=node.attrs.get("requant_scale"),
+                int8_input=bool(node.attrs.get("int8_input")))
+            if bop == "conv2d":
+                w4 = q.w_q.reshape(self.params[pkey]["w"].shape)
+                self.qplans[name] = QuantNodePlan(
+                    "conv2d", w4, stride=node.attrs.get("stride", 1),
+                    padding=node.attrs.get("padding", "SAME"), **common)
+            else:
+                self.qplans[name] = QuantNodePlan("dense", q.w_q, **common)
+
+    def _fold_quant_legacy(self, quant, act_absmax, assignment) -> None:
+        """The pre-pass (fuse=False) folding: per-node quantization with
+        sole-consumer ReLU epilogues recorded as node aliases
+        (``fused_into``) — node-for-node what the seed planner built."""
+        cons = consumers(self.graph)
+        for name in self.graph.order:
+            node = self.graph.nodes[name]
+            if (assignment[name] != "accel"
+                    or node.op not in ("conv2d", "dense")
+                    or name not in quant):
+                continue
+            q = quant[name]
+            s = self._act_scale(act_absmax, node.inputs[0])
+            fused = False
+            cs = cons[name]
+            if (len(cs) == 1 and self.graph.nodes[cs[0]].op == "relu"
+                    and name not in self.graph.outputs
+                    and assignment.get(cs[0]) == "accel"):
+                fused = True
+                self.fused_into[cs[0]] = name
+            act = "relu" if fused else None
+            if node.op == "conv2d":
+                w4 = q.w_q.reshape(self.params[name]["w"].shape)
+                self.qplans[name] = QuantNodePlan(
+                    "conv2d", w4, q.w_scale, q.bias, s, act=act,
+                    stride=node.attrs.get("stride", 1),
+                    padding=node.attrs.get("padding", "SAME"))
+            else:
+                self.qplans[name] = QuantNodePlan(
+                    "dense", q.w_q, q.w_scale, q.bias, s, act=act)
+
+    # -- arena ---------------------------------------------------------------
+
+    def _quantized_names(self) -> set:
+        return set(self.qplans)
+
+    def _plan_arena(self) -> memory_mod.ArenaPlan:
+        hw = energy_mod.BACKEND_HW[self.backend]
+        w_bytes = energy_mod.weight_bytes(self.graph, self.backend,
+                                          self._quantized_names())
+        budget = max(int(hw.onchip_bytes) - w_bytes, 0) \
+            if w_bytes <= hw.onchip_bytes else int(hw.onchip_bytes)
+        act_dtype = {}
+        for name, node in self.graph.nodes.items():
+            if (node.attrs.get("int8")
+                    or node.attrs.get("requant_scale") is not None):
+                act_dtype[name] = 1     # int8-domain value
+        return memory_mod.plan_arena(self.graph, self.segments, budget,
+                                     act_dtype, backend=self.backend)
 
     # -- the batched program -------------------------------------------------
 
@@ -258,8 +370,18 @@ class ExecutionPlan:
         def f(inputs: Dict[str, jax.Array], rngs: jax.Array
               ) -> Dict[str, jax.Array]:
             vals: Dict[str, jax.Array] = {}
+            batch = rngs.shape[0]
             for name in graph.graph_inputs:
                 vals[name] = inputs[name].astype(jnp.float32)
+            # plan-time constants are structural (outside the segments,
+            # like inputs): materialize them up front, keeping the dtype
+            # the folded op produced (a folded bool/int result must not
+            # silently become float32 — fuse=False would return its own)
+            for name in graph.order:
+                node = graph.nodes[name]
+                if node.op == "const":
+                    v = jnp.asarray(node.attrs["value"])
+                    vals[name] = jnp.broadcast_to(v, (batch,) + v.shape)
             for seg in self.segments:
                 for name in seg.nodes:
                     node = graph.nodes[name]
@@ -270,10 +392,14 @@ class ExecutionPlan:
                     if name in qplans:
                         vals[name] = _run_quantized(qplans[name], xs[0])
                         continue
+                    if node.op == "fused":      # fp32 fused (flex path)
+                        vals[name] = _run_fused_f32(node, xs, params)
+                        continue
                     sub = None
                     if node.op in RANDOM_OPS:
                         nxt = jax.vmap(jax.random.split)(rngs)  # [B, 2, 2]
-                        rngs, sub = nxt[:, 0], nxt[:, 1]
+                        rngs_, sub = nxt[:, 0], nxt[:, 1]
+                        rngs = rngs_
                     vals[name] = BATCHED_OP_IMPLS[node.op](
                         xs, params.get(name, {}), node.attrs, sub)
             return {o: vals[o] for o in graph.outputs}
@@ -301,43 +427,97 @@ class ExecutionPlan:
                        ) -> energy_mod.CostSignature:
         """Plan-time modeled cost of one ``batch_size`` dispatch on this
         plan's backend (``backend`` overrides for the cpu/EagerPlan view,
-        which executes the flex plan on the eager baseline hardware)."""
+        which executes the flex plan on the eager baseline hardware).
+
+        Fused plans price DDR traffic from the static arena; the eager
+        cpu view and unfused plans keep the op-by-op bytes model — every
+        activation round-trips DDR, exactly what per-node dispatch does.
+        """
+        # always pass the exact quantized set — an accel plan whose nodes
+        # were ALL PTQ-demoted runs fp32 and must be priced at fp32
+        # widths, not the assume-int8 graph-only approximation
+        if self.arena is not None and backend is None:
+            return energy_mod.plan_cost_signature(
+                self.graph, self.backend, batch_size, self.arena,
+                quantized=self._quantized_names())
         return energy_mod.cost_signature(
-            self.graph, backend or self.backend, batch_size)
+            self.graph, backend or self.backend, batch_size,
+            quantized=self._quantized_names())
+
+    # -- reporting -----------------------------------------------------------
 
     def summary(self) -> str:
+        n_fused = sum(1 for n in self.graph.nodes.values()
+                      if n.op == "fused")
         lines = [f"ExecutionPlan[{self.graph.name}/{self.backend}]: "
                  f"{len(self.segments)} segment(s), "
                  f"{len(self.qplans)} quantized node(s), "
-                 f"{len(self.fused_into)} fused epilogue(s)"]
+                 f"{n_fused + len(self.fused_into)} fused epilogue(s), "
+                 f"fuse={'on' if self.fuse else 'off'}"]
         for seg in self.segments:
             lines.append(f"  [{seg.backend:5s}] {seg.nodes[0]} .. "
                          f"{seg.nodes[-1]} ({len(seg.nodes)} nodes)")
+        if self.pass_report is not None and self.pass_report.n_rewrites:
+            lines.append("  passes:")
+            lines.append(self.pass_report.summary())
         if self.demoted:
             lines.append(f"  PTQ-demoted to flex: {self.demoted}")
+        if self.arena is not None:
+            a = self.arena
+            lines.append(
+                f"  arena: peak {a.bram_peak:,}/{a.bram_budget:,} B BRAM, "
+                f"{a.n_spilled} spill(s), "
+                f"{a.ddr_bytes_per_sample:,} DDR B/sample")
+        return "\n".join(lines)
+
+    def as_text(self) -> str:
+        """Full textual plan dump: the rewritten graph, per-node backend
+        and quantization state, fusion groups, and the arena table."""
+        lines = [self.summary(), "", self.graph.summary()]
+        if self.qplans:
+            lines.append("")
+            for name, qp in self.qplans.items():
+                bits = [f"s_in={qp.act_scale:.3g}"]
+                if qp.act:
+                    bits.append(f"act={qp.act}")
+                if qp.requant_scale is not None:
+                    bits.append(f"requant={qp.requant_scale:.3g}")
+                if qp.int8_input:
+                    bits.append("int8-in")
+                lines.append(f"  int8 {name:24s} {qp.op:7s} "
+                             + " ".join(bits))
+        if self.arena is not None:
+            lines.append("")
+            lines.append(self.arena.summary())
         return "\n".join(lines)
 
 
 def _run_quantized(qp: QuantNodePlan, x: jax.Array) -> jax.Array:
     """One fused kernel per quantized layer: static-scale requantize ->
-    int8 MXU matmul/conv -> dequant (+bias, +ReLU) epilogue.
+    int8 MXU matmul/conv -> dequant (+bias, +act, +requantize) epilogue.
 
     Static scales are the DPU contract (and what makes the plan a fixed
     program): activations beyond the calibration-set absmax SATURATE at
     +-127, exactly as on the real accelerator — serve-time inputs must be
-    covered by a representative calibration set (DESIGN.md §7)."""
+    covered by a representative calibration set (DESIGN.md §7). When the
+    producer already requantized (``int8_input``), the incoming int8
+    values are consumed directly — the fp32 intermediate never existed.
+    """
     s = qp.act_scale
     if qp.op == "dense":
         b = x.shape[0]
-        x_q = jnp.clip(jnp.round(x.reshape(b, -1) / s), -127, 127
-                       ).astype(jnp.int8)
+        x2 = x.reshape(b, -1)
+        x_q = x2 if qp.int8_input else jnp.clip(
+            jnp.round(x2 / s), -127, 127).astype(jnp.int8)
         return kops.int8_matmul(
             x_q, qp.w_q, jnp.full((b,), s, jnp.float32), qp.w_scale,
-            qp.bias, relu=qp.fused_relu)
-    x_q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+            qp.bias, act=qp.act, requant_scale=qp.requant_scale)
+    x_q = x if qp.int8_input else jnp.clip(
+        jnp.round(x / s), -127, 127).astype(jnp.int8)
     return kops.conv2d_int8(
         x_q, qp.w_q, qp.w_scale, qp.bias, x_scale=s,
-        stride=qp.stride, padding=qp.padding, relu=qp.fused_relu)
+        stride=qp.stride, padding=qp.padding, act=qp.act,
+        requant_scale=qp.requant_scale)
 
 
 class LoweredPlan:
@@ -364,7 +544,9 @@ class CompiledPlan:
     Carries its plan-time :class:`~repro.core.energy.CostSignature`: the
     modeled FLOPs / bytes / J-per-inference / W of one dispatch at this
     batch size, so a dispatcher can rank and power-budget candidates
-    without ever measuring (DESIGN.md §9)."""
+    without ever measuring (DESIGN.md §9). Fused plans price their DDR
+    bytes from the static arena (§10), so fusion shifts the dispatcher's
+    energy ranking."""
 
     def __init__(self, plan: ExecutionPlan, batch_size: int, executable):
         self.plan = plan

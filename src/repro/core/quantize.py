@@ -29,6 +29,15 @@ class QuantizedLayer:
     bias: Optional[jax.Array]       # f32 [N]
 
 
+def act_scale(absmax: float) -> float:
+    """THE static per-tensor activation scale: calibration absmax / 127
+    (+eps against zero tensors). One definition on purpose — the requant
+    fusion's bit-exactness guarantee (DESIGN.md §10) requires the fused
+    producer's requantize scale and the unfused consumer's quantize scale
+    to be the same float."""
+    return float(absmax) / 127.0 + 1e-12
+
+
 def quantize_weights(graph: Graph,
                      params: Dict[str, Dict[str, jax.Array]]
                      ) -> Dict[str, QuantizedLayer]:
@@ -88,7 +97,7 @@ def ptq_error_ratios(engine, sample_inputs: List[Dict[str, np.ndarray]],
     for name, q in quant.items():           # node-constant setup once
         node = g.nodes[name]
         inp = node.inputs[0]
-        s = absmax.get(inp, 0.0) / 127.0 + 1e-12
+        s = act_scale(absmax.get(inp, 0.0))
         w = engine.params[name]["w"]
         w_hat = (q.w_q.astype(jnp.float32)
                  * q.w_scale[None, :]).reshape(w.shape)

@@ -22,6 +22,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.epilogue import (apply_epilogue, normalize_act,
+                                    out_dtype_for)
 
 
 def _conv_geometry(x: jax.Array, kh: int, kw: int, stride: int,
@@ -132,9 +134,10 @@ def conv2d(
 
 def _kernel_int8(x_ref, w_ref, ws_ref, b_ref, o_ref, *, kh: int, kw: int,
                  w_out: int, stride: int, rows: int, x_scale: float,
-                 relu: bool, has_bias: bool):
+                 act, requant_scale, has_bias: bool):
     # x_ref block: [1, H_pad, W_pad, Cin] int8 (whole image in VMEM);
-    # o_ref block: [1, rows, W_out, Cout] f32.
+    # o_ref block: [1, rows, W_out, Cout] f32 — or int8 when the fused
+    # epilogue re-quantizes for the next layer (requant_scale set).
     cout = o_ref.shape[-1]
     cin = x_ref.shape[-1]
     base = pl.program_id(1) * rows * stride
@@ -156,13 +159,13 @@ def _kernel_int8(x_ref, w_ref, ws_ref, b_ref, o_ref, *, kh: int, kw: int,
         out = acc.astype(jnp.float32) * dequant[None, :]
         if has_bias:
             out = out + b_ref[...][None, :]
-        if relu:
-            out = jnp.maximum(out, 0.0)
+        out = apply_epilogue(out, act, requant_scale)
         o_ref[0, rr] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "x_scale", "stride", "padding", "relu", "rows_per_block", "interpret"))
+    "x_scale", "stride", "padding", "relu", "act", "requant_scale",
+    "rows_per_block", "interpret"))
 def conv2d_int8(
     x_q: jax.Array,                 # [B, H, W, Cin] int8
     w_q: jax.Array,                 # [KH, KW, Cin, Cout] int8
@@ -173,6 +176,8 @@ def conv2d_int8(
     stride: int = 1,
     padding: str = "SAME",
     relu: bool = False,
+    act: Optional[str] = None,      # 'relu' | 'sigmoid' epilogue
+    requant_scale: Optional[float] = None,  # int8 output at this scale
     rows_per_block: int = 8,
     interpret: bool = True,
 ) -> jax.Array:
@@ -180,8 +185,12 @@ def conv2d_int8(
 
     ``x_scale`` is folded at plan time (PTQ calibration absmax / 127), so
     the whole layer is one kernel launch — no per-sample HBM im2col and no
-    dynamic scale reduction on the critical path.
+    dynamic scale reduction on the critical path. With ``requant_scale``
+    the epilogue re-quantizes the result to int8 for the next quantized
+    layer (the graph compiler's producer->consumer fusion): the fp32
+    activation never leaves the kernel.
     """
+    act = normalize_act(relu, act)
     b, _, _, cin = x_q.shape
     kh, kw, _, cout = w_q.shape
     x_q, h_out, w_out, rows, n_row_blocks = _conv_geometry(
@@ -194,7 +203,8 @@ def conv2d_int8(
     out = pl.pallas_call(
         functools.partial(_kernel_int8, kh=kh, kw=kw, w_out=w_out,
                           stride=stride, rows=rows, x_scale=float(x_scale),
-                          relu=relu, has_bias=has_bias),
+                          act=act, requant_scale=requant_scale,
+                          has_bias=has_bias),
         grid=(b, n_row_blocks),
         in_specs=[
             pl.BlockSpec((1, x_q.shape[1], x_q.shape[2], cin),
@@ -206,7 +216,7 @@ def conv2d_int8(
         out_specs=pl.BlockSpec((1, rows, w_out, cout),
                                lambda bi, ri: (bi, ri, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h_out_pad, w_out, cout),
-                                       jnp.float32),
+                                       out_dtype_for(requant_scale)),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,55 @@
+"""Shared fused-epilogue math for the int8 kernels (DESIGN.md §10).
+
+One definition of the post-accumulator tail both `int8_matmul` and
+`conv2d_int8` apply inside their kernels, so the fused graph-compiler
+path and the legacy per-node path can never drift numerically:
+
+    int32 acc -> fp32 dequant -> (+bias) -> act -> (requantize to int8)
+
+* ``act`` — 'relu' or 'sigmoid', computed on the fp32 dequantized value
+  (the HLS idiom: the activation streams right after the MAC array).
+* ``requant_scale`` — when set, the fp32 result is re-quantized to int8
+  at this *static* scale in-register and the kernel's output dtype is
+  int8: the next quantized layer consumes it directly, and the fp32
+  intermediate never exists in HBM/DDR. The expression is bit-identical
+  to the unfused consumer's ``clip(round(x / s))`` quantize step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ACTS = ("relu", "sigmoid")
+
+
+def normalize_act(relu: bool, act: Optional[str]) -> Optional[str]:
+    """Back-compat: the pre-pass kernels took ``relu: bool``; new call
+    sites pass ``act``. Both set is an API misuse."""
+    if act is not None:
+        if relu:
+            raise ValueError("pass either relu=True or act=..., not both")
+        if act not in ACTS:
+            raise ValueError(f"unsupported epilogue act {act!r}")
+        return act
+    return "relu" if relu else None
+
+
+def out_dtype_for(requant_scale: Optional[float], default=jnp.float32):
+    return jnp.int8 if requant_scale is not None else default
+
+
+def apply_epilogue(out: jax.Array, act: Optional[str],
+                   requant_scale: Optional[float]) -> jax.Array:
+    """The fp32 tail after dequant+bias. ``out`` is fp32; returns fp32,
+    or the int8-ranged fp32 values ready for an int8 cast when
+    ``requant_scale`` is set (callers cast via their out ref dtype)."""
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    if requant_scale is not None:
+        out = jnp.clip(jnp.round(out / jnp.float32(requant_scale)),
+                       -127, 127)
+    return out

@@ -28,10 +28,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.epilogue import (apply_epilogue, normalize_act,
+                                    out_dtype_for)
 
 
 def _kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
-            n_k: int, relu: bool, has_bias: bool):
+            n_k: int, act, requant_scale, has_bias: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -48,8 +50,7 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
         out = out * xs_ref[...][:, None] * ws_ref[...][None, :]
         if has_bias:
             out = out + b_ref[...][None, :]
-        if relu:
-            out = jnp.maximum(out, 0.0)
+        out = apply_epilogue(out, act, requant_scale)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -65,7 +66,8 @@ def _aligned_block(dim: int, target: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "relu", "out_dtype", "interpret"))
+    static_argnames=("bm", "bn", "bk", "relu", "act", "requant_scale",
+                     "out_dtype", "interpret"))
 def int8_matmul(
     x_q: jax.Array,                 # [M, K] int8
     w_q: jax.Array,                 # [K, N] int8
@@ -77,9 +79,13 @@ def int8_matmul(
     bn: int = 128,
     bk: int = 128,
     relu: bool = False,
+    act: Optional[str] = None,      # 'relu' | 'sigmoid' epilogue
+    requant_scale: Optional[float] = None,  # int8 output at this scale
     out_dtype=jnp.float32,
     interpret: bool = True,
 ) -> jax.Array:
+    act = normalize_act(relu, act)
+    out_dtype = out_dtype_for(requant_scale, out_dtype)
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (k, k2)
@@ -102,7 +108,8 @@ def int8_matmul(
         bias = jnp.zeros((np_,), jnp.float32)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, relu=relu, has_bias=has_bias),
+        functools.partial(_kernel, n_k=n_k, act=act,
+                          requant_scale=requant_scale, has_bias=has_bias),
         grid=(mp // bm, np_ // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),

@@ -29,8 +29,10 @@ def _interp() -> bool:
 
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, bias=None, *, relu=False,
-                out_dtype=jnp.float32, **tiles):
+                act=None, requant_scale=None, out_dtype=jnp.float32,
+                **tiles):
     return _int8mm.int8_matmul(x_q, w_q, x_scale, w_scale, bias, relu=relu,
+                               act=act, requant_scale=requant_scale,
                                out_dtype=out_dtype, interpret=_interp(),
                                **tiles)
 
@@ -41,9 +43,11 @@ def conv2d(x, w, bias=None, *, stride=1, padding="SAME", relu=False):
 
 
 def conv2d_int8(x_q, w_q, w_scale, bias=None, *, x_scale=1.0, stride=1,
-                padding="SAME", relu=False, rows_per_block=8):
+                padding="SAME", relu=False, act=None, requant_scale=None,
+                rows_per_block=8):
     return _conv2d.conv2d_int8(x_q, w_q, w_scale, bias, x_scale=x_scale,
                                stride=stride, padding=padding, relu=relu,
+                               act=act, requant_scale=requant_scale,
                                rows_per_block=rows_per_block,
                                interpret=_interp())
 

@@ -95,7 +95,8 @@ def serve_space(args) -> int:
     for mi, name in enumerate(names):
         m = SPACE_MODELS[name]
         graph = m.build_graph()
-        engine = Engine(graph, m.init_params(jax.random.PRNGKey(1)))
+        engine = Engine(graph, m.init_params(jax.random.PRNGKey(1)),
+                        fuse=not args.no_fuse)
         print(inspector.inspect(graph).summary())
 
         reqs = synthetic_requests(m, args.requests, seed=mi)
@@ -202,6 +203,9 @@ def main(argv=None) -> int:
                     choices=["measured", "modeled"],
                     help="virtual-clock source: host wall time per batch "
                          "or the plan's modeled latency (deterministic)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="skip the graph-compiler pass pipeline "
+                         "(DESIGN.md §10) and serve the op-by-op plans")
     # lm mode
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

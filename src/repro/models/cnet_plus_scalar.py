@@ -33,8 +33,7 @@ def build_graph(dpu_compatible: bool = True) -> Graph:
     s = g.input("background_flux", (1,))
     for i, c in enumerate(CHANNELS):
         x = g.add("conv2d", [x], name=f"conv{i}", kernel=(3, 3), features=c,
-                  stride=1, padding="SAME",
-                  fused_relu=(act == "relu"))
+                  stride=1, padding="SAME")
         x = g.add(act, [x], name=f"act{i}")
         x = g.add("maxpool2d", [x], name=f"pool{i}", kernel=2)
     x = g.add("flatten", [x], name="flatten")

@@ -27,7 +27,7 @@ def build_graph() -> Graph:
     x = g.input("image", INPUT_SHAPE)
     for i, c in enumerate(CHANNELS):
         x = g.add("conv2d", [x], name=f"conv{i}", kernel=(3, 3), features=c,
-                  stride=2, padding="SAME", fused_relu=True)
+                  stride=2, padding="SAME")
         x = g.add("relu", [x], name=f"relu{i}")
     x = g.add("flatten", [x], name="flatten")
     mu = g.add("dense", [x], name="mu", features=LATENT)

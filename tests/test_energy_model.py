@@ -61,10 +61,16 @@ def _graph(name):
 @pytest.mark.parametrize("backend", sorted(BACKEND_HW))
 @pytest.mark.parametrize("name", MODEL_NAMES)
 def test_cost_signature_e_equals_p_times_t(name, backend):
+    """E = P x t plus the off-chip access energy of the moved bytes (the
+    DDR term is what makes fusion's byte savings show up in joules even
+    for compute-bound graphs)."""
     for rung in RUNGS:
         sig = cost_signature(_graph(name), backend, rung)
-        assert sig.energy_j == pytest.approx(sig.power_w * sig.latency_s,
-                                             rel=1e-12)
+        hw = BACKEND_HW[backend]
+        assert sig.ddr_energy_j == pytest.approx(
+            sig.bytes_moved * hw.ddr_pj_per_byte, rel=1e-12)
+        assert sig.energy_j == pytest.approx(
+            sig.power_w * sig.latency_s + sig.ddr_energy_j, rel=1e-12)
         assert sig.j_per_inference == pytest.approx(sig.energy_j / rung,
                                                     rel=1e-12)
         assert sig.flops == pytest.approx(_graph(name).n_ops * rung)

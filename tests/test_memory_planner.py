@@ -1,0 +1,117 @@
+"""Static arena planner tests (core/memory.py, DESIGN.md §10): liveness
+correctness (no two live buffers overlap in the arena), budget respect,
+spill + segment-boundary accounting, and the end-to-end property the
+tentpole claims: fusion lowers a plan's modeled DDR bytes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.memory import plan_arena
+from repro.core.opgraph import Graph
+from repro.core.plan import Segment, partition_segments
+from repro.models import SPACE_MODELS
+from repro.models.common import init_graph_params
+
+
+def _chain_graph(n=5, width=64):
+    g = Graph("chain")
+    x = g.input("x", (width,))
+    for i in range(n):
+        x = g.add("relu", [x], name=f"n{i}")
+    g.mark_output(x)
+    return g
+
+
+def _segments(g, backend="flex"):
+    return partition_segments(g, {n: backend for n in g.order})
+
+
+def test_no_live_buffers_overlap():
+    g = _chain_graph(6)
+    arena = plan_arena(g, _segments(g), bram_budget=10 ** 6)
+    bufs = [b for b in arena.buffers.values() if b.tier == "bram"]
+    for i, a in enumerate(bufs):
+        for b in bufs[i + 1:]:
+            lives_overlap = a.first <= b.last and b.first <= a.last
+            mem_overlap = (a.offset < b.offset + b.nbytes
+                           and b.offset < a.offset + a.nbytes)
+            assert not (lives_overlap and mem_overlap), (a, b)
+
+
+def test_chain_reuses_arena_space():
+    """A pure chain only ever needs two live buffers — the arena peak
+    must stay at 2 buffers, not grow with depth."""
+    g = _chain_graph(8, width=32)
+    arena = plan_arena(g, _segments(g), bram_budget=10 ** 6)
+    assert arena.bram_peak <= 2 * 32 * 4
+    assert arena.n_spilled == 0
+    assert arena.spill_bytes == 0
+
+
+def test_peak_never_exceeds_budget_and_spills_when_tight():
+    from repro.core.opgraph import consumers
+    g = _chain_graph(6, width=64)         # 256 B per buffer
+    cons = consumers(g)
+    tight = plan_arena(g, _segments(g), bram_budget=300)
+    assert tight.bram_peak <= 300
+    assert tight.n_spilled > 0
+    # a consumed spilled value is charged write + read back; a
+    # consumer-less spilled output is written once (downlink only)
+    assert tight.spill_bytes == sum(
+        b.nbytes * (2 if cons[b.name] else 1)
+        for b in tight.buffers.values()
+        if b.tier == "ddr" and b.reason == "spill")
+    zero = plan_arena(g, _segments(g), bram_budget=0)
+    assert all(b.tier == "ddr" for b in zero.buffers.values())
+
+
+def test_segment_boundary_forces_ddr_roundtrip():
+    g = _chain_graph(4, width=16)
+    segs = [Segment("accel", ("n0", "n1")), Segment("flex", ("n2", "n3"))]
+    arena = plan_arena(g, segs, bram_budget=10 ** 6)
+    assert arena.buffers["n1"].tier == "ddr"
+    assert arena.buffers["n1"].reason == "boundary"
+    assert arena.boundary_bytes == 2 * 16 * 4
+    # same graph, one segment: no boundary traffic at all
+    one = plan_arena(g, _segments(g), bram_budget=10 ** 6)
+    assert one.boundary_bytes == 0
+
+
+def test_int8_dtype_halves_nothing_but_quarters_bytes():
+    g = _chain_graph(3, width=128)
+    f32 = plan_arena(g, _segments(g), 10 ** 6)
+    i8 = plan_arena(g, _segments(g), 10 ** 6,
+                    act_dtype_bytes={n: 1 for n in g.nodes})
+    assert i8.bram_peak * 4 == f32.bram_peak
+    assert i8.input_bytes * 4 == f32.input_bytes
+
+
+def test_ddr_bytes_accounting_is_consistent():
+    g = _chain_graph(5, width=64)
+    arena = plan_arena(g, _segments(g), bram_budget=10 ** 6)
+    assert arena.ddr_bytes_per_sample == (
+        arena.input_bytes + arena.output_bytes
+        + arena.spill_bytes + arena.boundary_bytes)
+    # output (marked) is BRAM-resident, so its downlink write is charged
+    assert arena.output_bytes == 64 * 4
+
+
+@pytest.mark.parametrize("name", ["vae_encoder", "cnet_plus_scalar"])
+def test_fused_plan_moves_fewer_ddr_bytes_than_opbyop(name):
+    """The tentpole claim at plan level: for the conv-heavy models the
+    fused plan's arena DDR bytes are well below the op-by-op model's
+    every-activation-round-trips bytes (the paper's HLS-vs-DPU lever)."""
+    m = SPACE_MODELS[name]
+    e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+    e.calibrate([m.synthetic_input(jax.random.PRNGKey(i)) for i in range(2)])
+    plan = e.planned("accel")
+    fused_sig = plan.cost_signature(32)
+    # compare against the op-by-op bytes model on the SAME fused graph
+    from repro.core.energy import cost_signature
+    opbyop = cost_signature(plan.graph, "accel", 32,
+                            quantized=set(plan.qplans))
+    assert fused_sig.bytes_moved < 0.7 * opbyop.bytes_moved, (
+        fused_sig.bytes_moved, opbyop.bytes_moved)
+    assert fused_sig.j_per_inference < opbyop.j_per_inference

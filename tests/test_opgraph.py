@@ -1,0 +1,185 @@
+"""Shape-inference edge cases for the op-graph IR — previously only
+exercised indirectly through the model builders: strided SAME conv, pools
+on odd spatial dims (and stride != kernel), concat-axis validation, and
+the accounting invariants the fused node kind must preserve.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.opgraph import Graph, Node, base_op, consumers, param_node
+
+
+def _shape_of_exec(g, out, feed):
+    """Execute the graph on the flex path and return out's shape — the
+    ground truth the shape inference must match."""
+    from repro.core.engine import Engine
+    e = Engine(g, _params(g))
+    res = e.run(feed, "flex")
+    return tuple(np.asarray(res[out]).shape)
+
+
+def _params(g):
+    from repro.models.common import init_graph_params
+    return init_graph_params(g, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("h,w,stride", [
+    (13, 17, 2), (16, 16, 2), (7, 9, 3), (8, 8, 1),
+])
+def test_conv2d_same_stride_shape_matches_execution(h, w, stride):
+    g = Graph("conv_same")
+    x = g.input("x", (h, w, 3))
+    c = g.add("conv2d", [x], name="c", kernel=(3, 3), features=4,
+              stride=stride, padding="SAME")
+    g.mark_output(c)
+    want = (-(-h // stride), -(-w // stride), 4)
+    assert g.nodes["c"].out_shape == want
+    feed = {"x": np.zeros((h, w, 3), np.float32)}
+    assert _shape_of_exec(g, c, feed) == want
+
+
+@pytest.mark.parametrize("h,w,stride", [(13, 17, 2), (7, 7, 3)])
+def test_conv2d_valid_stride_shape_matches_execution(h, w, stride):
+    g = Graph("conv_valid")
+    x = g.input("x", (h, w, 2))
+    c = g.add("conv2d", [x], name="c", kernel=(3, 3), features=4,
+              stride=stride, padding="VALID")
+    g.mark_output(c)
+    feed = {"x": np.zeros((h, w, 2), np.float32)}
+    assert _shape_of_exec(g, c, feed) == g.nodes["c"].out_shape
+
+
+@pytest.mark.parametrize("h,w,k,stride", [
+    (7, 9, 2, 2),      # odd dims, kernel == stride
+    (9, 7, 3, 2),      # stride != kernel (the old //stride formula broke)
+    (8, 8, 3, 3),
+    (5, 5, 2, 1),
+])
+def test_pool2d_shape_matches_execution(h, w, k, stride):
+    g = Graph("pool")
+    x = g.input("x", (h, w, 2))
+    p = g.add("maxpool2d", [x], name="p", kernel=k, stride=stride)
+    g.mark_output(p)
+    want = ((h - k) // stride + 1, (w - k) // stride + 1, 2)
+    assert g.nodes["p"].out_shape == want
+    feed = {"x": np.zeros((h, w, 2), np.float32)}
+    assert _shape_of_exec(g, p, feed) == want
+
+
+def test_pool3d_odd_dims_shape_matches_execution():
+    g = Graph("pool3")
+    x = g.input("x", (7, 5, 9, 1))
+    p = g.add("maxpool3d", [x], name="p", kernel=2)
+    g.mark_output(p)
+    assert g.nodes["p"].out_shape == (3, 2, 4, 1)
+    feed = {"x": np.zeros((7, 5, 9, 1), np.float32)}
+    assert _shape_of_exec(g, p, feed) == (3, 2, 4, 1)
+
+
+def test_pool_kernel_larger_than_input_raises():
+    g = Graph("pool_bad")
+    x = g.input("x", (3, 3, 1))
+    with pytest.raises(ValueError, match="pool kernel"):
+        g.add("maxpool2d", [x], name="p", kernel=4)
+
+
+def test_conv2d_wrong_rank_raises():
+    g = Graph("conv_bad")
+    x = g.input("x", (16, 16))
+    with pytest.raises(ValueError, match="rank-3"):
+        g.add("conv2d", [x], name="c", kernel=(3, 3), features=4)
+
+
+# ---------------------------------------------------------------------------
+# concat validation
+# ---------------------------------------------------------------------------
+
+
+def test_concat_axis_out_of_range_raises():
+    g = Graph("cat")
+    a = g.input("a", (4, 3))
+    b = g.input("b", (4, 3))
+    with pytest.raises(ValueError, match="axis 2 out of range"):
+        g.add("concat", [a, b], name="c", axis=2)
+
+
+def test_concat_rank_mismatch_raises():
+    g = Graph("cat2")
+    a = g.input("a", (4, 3))
+    b = g.input("b", (12,))
+    with pytest.raises(ValueError, match="ranks differ"):
+        g.add("concat", [a, b], name="c", axis=0)
+
+
+def test_concat_non_axis_dim_mismatch_raises():
+    g = Graph("cat3")
+    a = g.input("a", (4, 3))
+    b = g.input("b", (5, 3))
+    with pytest.raises(ValueError, match="non-axis dims differ"):
+        g.add("concat", [a, b], name="c", axis=1)
+
+
+def test_concat_negative_axis_infers_shape():
+    g = Graph("cat4")
+    a = g.input("a", (4, 3))
+    b = g.input("b", (4, 5))
+    c = g.add("concat", [a, b], name="c", axis=-1)
+    assert g.nodes["c"].out_shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# fused / const node kinds + helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fused_node_inference_delegates_to_base():
+    g = Graph("fused_infer")
+    x = g.input("x", (8, 8, 2))
+    c = g.add("conv2d", [x], name="c", kernel=(3, 3), features=4)
+    fused = Node("f", "fused", ["x"],
+                 {"base_op": "conv2d", "kernel": (3, 3), "features": 4,
+                  "epilogue": ("relu",), "param_of": "c"})
+    from repro.core.opgraph import _infer
+    _infer(fused, [g.nodes["x"]])
+    ref = g.nodes["c"]
+    assert fused.out_shape == ref.out_shape
+    assert fused.param_count == ref.param_count
+    assert fused.bias_params == ref.bias_params
+    assert fused.macs == ref.macs
+    assert fused.ops == ref.ops + int(np.prod(ref.out_shape))  # + relu
+    assert base_op(fused) == "conv2d"
+    assert param_node(fused) == "c"
+
+
+def test_const_node_shape_and_accounting():
+    g = Graph("const")
+    c = g.add("const", [], name="k",
+              value=np.zeros((3, 2), np.float32))
+    assert g.nodes["k"].out_shape == (3, 2)
+    assert g.nodes["k"].ops == 0 and g.nodes["k"].param_count == 0
+
+
+def test_param_bytes_per_node_dtype():
+    g = Graph("pb")
+    x = g.input("x", (10,))
+    d = g.add("dense", [x], name="d", features=4)      # 10*4 w + 4 b
+    g.mark_output(d)
+    assert g.param_bytes() == 44 * 4
+    # int8 weights + fp32 bias
+    assert g.param_bytes(node_dtype_bytes={"d": 1}) == 40 + 4 * 4
+    # nodes absent from the map stay at the default width
+    assert g.param_bytes(node_dtype_bytes={}) == 44 * 4
+
+
+def test_consumers_helper():
+    g = Graph("cons")
+    x = g.input("x", (4,))
+    a = g.add("relu", [x], name="a")
+    b = g.add("exp", [a], name="b")
+    c = g.add("add", [a, b], name="c")
+    g.mark_output(c)
+    cons = consumers(g)
+    assert cons["a"] == ["b", "c"]
+    assert cons["c"] == []

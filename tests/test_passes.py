@@ -1,0 +1,267 @@
+"""Graph-compiler pass pipeline unit tests (core/passes.py, DESIGN.md
+§10): constant folding, dead-node elimination, epilogue fusion, requant
+fusion — structure AND numerics, on synthetic graphs small enough to run
+the int8 interpret-mode kernels fast.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.opgraph import Graph, base_op, param_node
+from repro.core.passes import (PassContext, PassManager, constant_fold,
+                               eliminate_dead_nodes)
+from repro.models.common import init_graph_params
+
+
+def _engine(g, fuse=True, demote=1e9, n_calib=2, seed=1):
+    e = Engine(g, init_graph_params(g, jax.random.PRNGKey(seed)),
+               ptq_demote_threshold=demote, fuse=fuse)
+    rng = np.random.default_rng(0)
+    shape = next(iter(g.graph_inputs.values()))
+    calib = [{next(iter(g.graph_inputs)): rng.standard_normal(shape)
+              .astype(np.float32)} for _ in range(n_calib)]
+    e.calibrate(calib)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# constant folding + DCE
+# ---------------------------------------------------------------------------
+
+
+def test_constant_fold_evaluates_input_free_subgraph():
+    g = Graph("fold")
+    x = g.input("x", (4,))
+    c = g.add("const", [], name="c", value=np.arange(4, dtype=np.float32))
+    c2 = g.add("relu", [c], name="c_relu")       # foldable: no input dep
+    y = g.add("add", [x, c2], name="y")
+    g.mark_output(y)
+    ctx = PassContext(params={}, assignment={n: "flex" for n in g.order})
+    out, report = PassManager().run(g, ctx)
+    assert out.nodes["c_relu"].op == "const"
+    assert "c_relu" in report.folded
+    np.testing.assert_array_equal(out.nodes["c_relu"].attrs["value"],
+                                  np.arange(4, dtype=np.float32))
+    assert out.nodes["y"].op == "add"            # depends on x: not folded
+
+
+def test_constant_fold_executes_correctly_end_to_end():
+    g = Graph("fold_exec")
+    x = g.input("x", (4,))
+    c = g.add("const", [], name="c",
+              value=np.asarray([1.0, -2.0, 3.0, -4.0], np.float32))
+    cr = g.add("relu", [c], name="cr")
+    y = g.add("add", [x, cr], name="y")
+    g.mark_output(y)
+    e = Engine(g, {})
+    xs = np.asarray([[0.5, 0.5, 0.5, 0.5]], np.float32)
+    out = e.run_batch({"x": xs}, "flex")
+    np.testing.assert_allclose(np.asarray(out["y"]),
+                               [[1.5, 0.5, 3.5, 0.5]])
+
+
+def test_dead_node_elimination_drops_unreachable():
+    g = Graph("dce")
+    x = g.input("x", (8,))
+    live = g.add("relu", [x], name="live")
+    dead = g.add("sigmoid", [x], name="dead")
+    g.add("exp", [dead], name="dead2")
+    g.mark_output(live)
+    ctx = PassContext(params={}, assignment={n: "flex" for n in g.order})
+    report_graph, report = PassManager().run(g, ctx)
+    assert set(report.eliminated) == {"dead", "dead2"}
+    assert "dead" not in report_graph.nodes
+    assert "dead" not in report_graph.order
+    assert "x" in report_graph.nodes            # inputs always survive
+    # source graph untouched (the engine's graph is never mutated)
+    assert "dead" in g.nodes
+
+
+def test_dce_keeps_dead_random_nodes():
+    """A dead sample_normal must survive DCE: it advances the per-sample
+    RNG split chain, so removing it would shift every later random
+    node's keys vs the fuse=False plan (bit-exactness contract)."""
+    g = Graph("rng")
+    mu = g.input("mu", (4,))
+    lv = g.input("lv", (4,))
+    g.add("sample_normal", [mu, lv], name="dead_sample")
+    live = g.add("sample_normal", [mu, lv], name="live_sample")
+    g.mark_output(live)
+    ctx = PassContext(params={}, assignment={n: "flex" for n in g.order})
+    out, report = PassManager().run(g, ctx)
+    assert "dead_sample" in out.nodes
+    assert "dead_sample" not in report.eliminated
+    # numerics: fused and unfused plans draw identical samples
+    from repro.models.common import init_graph_params
+    e1 = Engine(g, {})
+    e0 = Engine(g, {}, fuse=False)
+    import jax
+    feed = {"mu": np.zeros((2, 4), np.float32),
+            "lv": np.zeros((2, 4), np.float32)}
+    rngs = jax.random.split(jax.random.PRNGKey(0), 2)
+    np.testing.assert_array_equal(
+        np.asarray(e1.run_batch(feed, "flex", rngs)["live_sample"]),
+        np.asarray(e0.run_batch(feed, "flex", rngs)["live_sample"]))
+
+
+def test_all_demoted_accel_plan_prices_fp32_weights():
+    """An accel plan whose every quantizable node was PTQ-demoted runs
+    fp32 — its cost signature must charge fp32 weight widths, not the
+    assume-int8 graph approximation."""
+    g = _conv_relu_dense_graph()
+    e = _engine(g, demote=-1.0)                 # demote everything
+    plan = e.planned("accel")
+    assert not plan.qplans and plan.demoted
+    from repro.core import energy as energy_mod
+    # the plan prices with the exact (empty) quantized set — identical
+    # to an explicit fp32-widths signature, NOT the assume-int8 default
+    assert plan.cost_signature(4) == energy_mod.plan_cost_signature(
+        plan.graph, "accel", 4, plan.arena, quantized=set())
+    assert energy_mod.weight_bytes(plan.graph, "accel", set()) \
+        == energy_mod.weight_bytes(plan.graph, "flex")
+
+
+def test_dce_keeps_everything_reachable():
+    g = Graph("dce_live")
+    x = g.input("x", (4,))
+    a = g.add("relu", [x], name="a")
+    b = g.add("exp", [a], name="b")
+    g.mark_output(b)
+    ctx = PassContext(params={}, assignment={n: "flex" for n in g.order})
+    out, report = PassManager().run(g, ctx)
+    assert not report.eliminated
+    assert list(out.order) == list(g.order)
+
+
+# ---------------------------------------------------------------------------
+# epilogue fusion
+# ---------------------------------------------------------------------------
+
+
+def _conv_relu_dense_graph():
+    g = Graph("fusion")
+    x = g.input("x", (12, 12, 4))
+    c = g.add("conv2d", [x], name="conv", kernel=(3, 3), features=8)
+    r = g.add("relu", [c], name="act")
+    p = g.add("maxpool2d", [r], name="pool", kernel=2)
+    f = g.add("flatten", [p], name="flat")
+    d = g.add("dense", [f], name="head", features=5)
+    g.mark_output(d)
+    return g
+
+
+def test_epilogue_fusion_structure_and_params():
+    e = _engine(_conv_relu_dense_graph())
+    plan = e.planned("accel")
+    act = plan.graph.nodes["act"]
+    assert act.op == "fused"
+    assert base_op(act) == "conv2d"
+    assert param_node(act) == "conv"
+    assert act.attrs["epilogue"] == ("relu",)
+    assert "conv" not in plan.graph.nodes       # producer slot absorbed
+    assert [fg.name for fg in plan.pass_report.fusion_groups] == ["act"]
+    # ops accounting survives fusion (fused node carries conv + relu ops)
+    assert act.macs > 0 and act.ops > act.macs * 2
+
+
+def test_requant_fusion_through_pool_and_flatten():
+    """conv+relu -> maxpool -> flatten -> dense: the producer requantizes
+    in-kernel, the chain runs int8, the dense consumes int8 — bit-exact
+    vs the unfused plan (monotone quantizer commutes with max/reshape)."""
+    g = _conv_relu_dense_graph()
+    e = _engine(g)
+    plan = e.planned("accel")
+    qp = plan.qplans["act"]
+    assert qp.requant_scale is not None
+    assert plan.qplans["head"].int8_input
+    assert plan.graph.nodes["pool"].attrs.get("int8")
+    assert plan.graph.nodes["flat"].attrs.get("int8")
+    (rq,) = plan.pass_report.requant_groups
+    assert rq.producer == "act" and rq.consumers == ("head",)
+    assert rq.chain == ("pool", "flat")
+
+    e0 = _engine(_conv_relu_dense_graph(), fuse=False)
+    B = 3
+    rng = np.random.default_rng(7)
+    xs = rng.standard_normal((B, 12, 12, 4)).astype(np.float32)
+    a = e.run_batch({"x": xs}, "accel")
+    b = e0.run_batch({"x": xs}, "accel")
+    np.testing.assert_array_equal(np.asarray(a["head"]),
+                                  np.asarray(b["head"]))
+
+
+def test_sigmoid_epilogue_fuses_onto_accel_dense():
+    g = Graph("sig")
+    x = g.input("x", (6,))
+    d = g.add("dense", [x], name="logit", features=3)
+    s = g.add("sigmoid", [d], name="prob")
+    g.mark_output(s)
+    e = _engine(g)
+    plan = e.planned("accel")
+    prob = plan.graph.nodes["prob"]
+    assert prob.op == "fused" and prob.attrs["epilogue"] == ("sigmoid",)
+    # sigmoid moved ONTO the accel segment (it was flex-assigned)
+    assert plan.assignment["prob"] == "accel"
+    e0 = _engine(_sig_graph_copy(), fuse=False)
+    xs = np.random.default_rng(3).standard_normal((4, 6)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(e.run_batch({"x": xs}, "accel")["prob"]),
+        np.asarray(e0.run_batch({"x": xs}, "accel")["prob"]))
+
+
+def _sig_graph_copy():
+    g = Graph("sig")
+    x = g.input("x", (6,))
+    d = g.add("dense", [x], name="logit", features=3)
+    g.add("sigmoid", [d], name="prob")
+    g.mark_output("prob")
+    return g
+
+
+def test_no_fusion_when_producer_is_output_or_shared():
+    g = Graph("shared")
+    x = g.input("x", (6,))
+    d = g.add("dense", [x], name="d", features=4)
+    r = g.add("relu", [d], name="r")
+    g.add("exp", [d], name="e2")                # second consumer of d
+    g.mark_output(r, "e2")
+    e = _engine(g)
+    plan = e.planned("accel")
+    assert plan.graph.nodes["d"].op == "dense"  # not fused: two consumers
+    assert plan.graph.nodes["r"].op == "relu"
+
+
+def test_no_requant_across_graph_output():
+    """A producer whose value is a graph output must keep its fp32
+    result — the downlink payload cannot be int8."""
+    g = Graph("outp")
+    x = g.input("x", (8,))
+    d1 = g.add("dense", [x], name="d1", features=8)
+    d2 = g.add("dense", [d1], name="d2", features=4)
+    g.mark_output(d1, d2)                       # d1 is both output + input
+    e = _engine(g)
+    plan = e.planned("accel")
+    assert plan.qplans["d1"].requant_scale is None
+    assert not plan.qplans["d2"].int8_input
+
+
+def test_fuse_false_runs_no_passes():
+    e = _engine(_conv_relu_dense_graph(), fuse=False)
+    plan = e.planned("accel")
+    assert plan.pass_report is None
+    assert plan.arena is None
+    assert plan.graph is e.graph
+    assert plan.fused_into == {"act": "conv"}   # legacy alias fusion
+
+
+def test_plan_summary_and_as_text_show_pipeline():
+    e = _engine(_conv_relu_dense_graph())
+    plan = e.planned("accel")
+    s = plan.summary()
+    assert "fused [accel] conv + relu -> act" in s
+    assert "int8-chain" in s
+    assert "arena:" in s
+    t = plan.as_text()
+    assert "conv2d+relu+requant" in t
+    assert "bram@" in t or "ddr(" in t

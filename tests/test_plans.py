@@ -73,12 +73,27 @@ def test_int8_path_bit_exact_across_batch():
     rngs = jax.random.split(jax.random.PRNGKey(0), B)
     batched = e.run_batch({"x": xs}, "accel", rngs)
     plan = e.planned("accel")
-    assert set(plan.qplans) == {"conv", "head"}
-    assert plan.fused_into == {"act": "conv"}       # epilogue fusion
+    # pass-pipeline structure: conv+relu fused under the act node's name,
+    # then requant-chained straight into the dense head (int8 in-flight)
+    assert set(plan.qplans) == {"act", "head"}
+    assert plan.graph.nodes["act"].op == "fused"
+    assert plan.graph.nodes["act"].attrs["param_of"] == "conv"
+    assert plan.qplans["act"].requant_scale is not None
+    assert plan.qplans["head"].int8_input
     for i in range(B):
         single = e.run({"x": xs[i]}, "accel", rngs[i])
         np.testing.assert_array_equal(np.asarray(batched["head"][i]),
                                       np.asarray(single["head"]))
+    # the fuse=False escape hatch keeps the legacy per-node structure and
+    # the exact same int8 outputs
+    e0 = Engine(g, _graph_params(g), ptq_demote_threshold=1e9, fuse=False)
+    e0.calibrate(calib)
+    plan0 = e0.planned("accel")
+    assert set(plan0.qplans) == {"conv", "head"}
+    assert plan0.fused_into == {"act": "conv"}      # legacy epilogue alias
+    legacy = e0.run_batch({"x": xs}, "accel", rngs)
+    np.testing.assert_array_equal(np.asarray(batched["head"]),
+                                  np.asarray(legacy["head"]))
 
 
 def _graph_params(g):
@@ -132,11 +147,13 @@ def test_calibrate_invalidates_accel_plans():
 
 
 def test_segments_cover_graph_in_order(engines):
+    """Segments cover the (pass-rewritten) plan graph exactly, in order,
+    as maximal same-backend runs."""
     for name, (m, e) in engines.items():
         plan = e.planned("accel")
         flat = [n for seg in plan.segments for n in seg.nodes]
-        want = [n for n in e.graph.order
-                if e.graph.nodes[n].op != "input"]
+        want = [n for n in plan.graph.order
+                if plan.graph.nodes[n].op != "input"]
         assert flat == want, name
         for a, b in zip(plan.segments, plan.segments[1:]):
             assert a.backend != b.backend, name     # maximal runs
