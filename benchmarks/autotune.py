@@ -1,0 +1,205 @@
+"""Autotuner benchmark — plan-time tile search + prepacked weight arenas
+(DESIGN.md §11), gated -> BENCH_autotune.json.
+
+Three parts:
+
+1. **Plan table** (machine-independent): for every space model x backend
+   {flex, accel} x rung {1, 32}, the autotuned plan's modeled latency and
+   J/inference against `ExecutionPlan.default_cost_signature` — the
+   heuristic-default configs priced by the SAME kernel-level pricer
+   (comparing against the coarse roofline would mix two models).
+   Gates: tuned is never worse in any cell, and at least two
+   model x rung cells improve >= 1.3x.
+2. **Conformance** (machine-independent): tuned plans are bit-exact to
+   untuned on flex AND accel for all six models (int8 cells exactly
+   equal) — every candidate config is exact by construction (integer
+   accumulation + zero padding), this pins it end-to-end.
+3. **Wall-clock** (host-dependent, skipped in --smoke): tuned flex
+   throughput at batch 32 must not regress vs ``autotune=False`` (the
+   flex schedule configs change the MODEL only; XLA's execution is
+   identical, so this must be free).
+
+    PYTHONPATH=src python -m benchmarks.autotune            # full
+    PYTHONPATH=src python -m benchmarks.autotune --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.models import SPACE_MODELS
+
+OUT_PATH = "BENCH_autotune.json"
+BACKENDS = ("flex", "accel")
+RUNGS = (1, 32)
+N_CALIB = 4
+IMPROVE_X = 1.3               # required on >= MIN_IMPROVED cells
+MIN_IMPROVED = 2
+WALL_BATCH = 32
+WALL_REPEATS = 5              # alternating best-of blocks (_wall_pair)
+WALL_BLOCK_CALLS = 8          # plan calls aggregated per timed block
+WALL_TOLERANCE = 0.85         # identical jitted program; timer headroom
+CONFORM_N = {"flex": 4, "accel": 2}   # accel is interpret-mode on hosts
+
+
+_ENGINES = {}
+
+
+def _engines(name: str):
+    """(model, default engine, autotuned engine) — memoized; the tuned
+    engine reuses the default engine's PTQ calibration (same graph, same
+    params seed) so the interpret-mode calibration cost is paid once."""
+    if name not in _ENGINES:
+        m = SPACE_MODELS[name]
+        e0 = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        e0.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                      for i in range(N_CALIB)])
+        e1 = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)),
+                    autotune=True)
+        e1.share_calibration(e0)
+        _ENGINES[name] = (m, e0, e1)
+    return _ENGINES[name]
+
+
+def plan_table() -> List[Dict]:
+    rows = []
+    for name in SPACE_MODELS:
+        _, _, e1 = _engines(name)
+        for backend in BACKENDS:
+            plan = e1.planned(backend)
+            for rung in RUNGS:
+                tuned = plan.cost_signature(rung)
+                default = plan.default_cost_signature(rung)
+                rows.append({
+                    "model": name, "backend": backend, "rung": rung,
+                    "tuned_latency_ms": tuned.latency_s * 1e3,
+                    "default_latency_ms": default.latency_s * 1e3,
+                    "latency_speedup_x": (default.latency_s
+                                          / max(tuned.latency_s, 1e-30)),
+                    "tuned_mj_per_inf": tuned.j_per_inference * 1e3,
+                    "default_mj_per_inf": default.j_per_inference * 1e3,
+                    "packed_weight_bytes": sum(
+                        p.packed_bytes for p in plan.packed.values()),
+                })
+    return rows
+
+
+def check_table(rows: List[Dict]) -> Dict[str, bool]:
+    print(f"\n{'model':18s} {'bkend':6s} {'rung':>4s} {'tuned ms':>11s} "
+          f"{'default ms':>11s} {'x':>7s}")
+    never_worse = True
+    n_improved = 0
+    for r in rows:
+        print(f"{r['model']:18s} {r['backend']:6s} {r['rung']:4d} "
+              f"{r['tuned_latency_ms']:11.4f} "
+              f"{r['default_latency_ms']:11.4f} "
+              f"{r['latency_speedup_x']:7.2f}")
+        if r["tuned_latency_ms"] > r["default_latency_ms"] * (1 + 1e-9):
+            never_worse = False
+    # the >=1.3x requirement counts model x rung cells (best backend)
+    cells = {}
+    for r in rows:
+        key = (r["model"], r["rung"])
+        cells[key] = max(cells.get(key, 0.0), r["latency_speedup_x"])
+    n_improved = sum(1 for v in cells.values() if v >= IMPROVE_X)
+    print(f"\n[gate] tuned never worse than default: {never_worse}")
+    print(f"[gate] cells >= {IMPROVE_X}x: {n_improved} "
+          f"(need >= {MIN_IMPROVED})")
+    return {"tuned_never_worse_than_default": never_worse,
+            "min_cells_improved": n_improved >= MIN_IMPROVED}
+
+
+def conformance_check() -> bool:
+    ok = True
+    for name in SPACE_MODELS:
+        m, e0, e1 = _engines(name)
+        for backend in BACKENDS:
+            n = CONFORM_N[backend]
+            inputs = m.synthetic_batch(jax.random.PRNGKey(99), n)
+            rngs = jax.random.split(jax.random.PRNGKey(7), n)
+            a = e0.run_batch(inputs, backend, rngs)
+            b = e1.run_batch(inputs, backend, rngs)
+            for k in a:
+                same = np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                ok = ok and same
+                if not same:
+                    print(f"  CONFORMANCE FAIL {name}/{backend}/{k}")
+    print(f"\n[conformance] tuned == untuned (flex+accel, bit-exact): {ok}")
+    return ok
+
+
+def _wall_pair(e0: Engine, e1: Engine, m, batch: int):
+    """Wall clock for the default and tuned engines, measured as
+    ALTERNATING timed blocks of raw compiled-plan calls: the flex
+    programs are identical (pinned: the tuned plan lowers to the same
+    HLO), so any honest ratio is ~1.0 — alternating blocks make
+    host-load drift (this is a busy shared box) hit both columns
+    equally, and per-block aggregation keeps millisecond-scale calls
+    out of the single-call timer-noise regime."""
+    inputs = m.synthetic_batch(jax.random.PRNGKey(1), batch)
+    rngs = jax.random.split(jax.random.PRNGKey(2), batch)
+    staged = {k: jax.device_put(np.asarray(v, np.float32))
+              for k, v in inputs.items()}
+    plans = [e0.compile("flex", batch), e1.compile("flex", batch)]
+    for p in plans:                             # compile + warm both
+        jax.block_until_ready(p(staged, rngs))
+    best = [float("inf"), float("inf")]
+    for _ in range(WALL_REPEATS):
+        for i, p in enumerate(plans):
+            t0 = time.perf_counter()
+            for _ in range(WALL_BLOCK_CALLS):
+                out = p(staged, rngs)
+            jax.block_until_ready(out)
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return (batch * WALL_BLOCK_CALLS / best[0],
+            batch * WALL_BLOCK_CALLS / best[1])
+
+
+def wall_clock() -> Dict:
+    res = {}
+    for name in ("logistic_net", "vae_encoder"):
+        m, e0, e1 = _engines(name)
+        default_fps, tuned_fps = _wall_pair(e0, e1, m, WALL_BATCH)
+        ratio = tuned_fps / default_fps
+        res[name] = {"tuned_fps": tuned_fps, "default_fps": default_fps,
+                     "ratio": ratio, "ok": ratio >= WALL_TOLERANCE}
+        print(f"[wall] {name:18s} flex b{WALL_BATCH}: tuned "
+              f"{tuned_fps:9.2f} fps vs default {default_fps:9.2f} fps "
+              f"(x{ratio:.3f})")
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="machine-independent gates only (skip wall-clock)")
+    args = ap.parse_args(argv)
+
+    print("== autotuned vs heuristic-default plans "
+          f"(backends {BACKENDS}, rungs {RUNGS}) ==")
+    rows = plan_table()
+    gates = check_table(rows)
+    gates["tuned_bit_exact_flex_accel"] = conformance_check()
+    wall = {} if args.smoke else wall_clock()
+    if wall:
+        gates["no_flex_batch32_wallclock_regression"] = all(
+            w["ok"] for w in wall.values())
+
+    stats = {name: dict(e1.tuner.stats)
+             for name, (_, _, e1) in _ENGINES.items()}
+    with open(OUT_PATH, "w") as f:
+        json.dump({"plan_table": rows, "wall_clock": wall,
+                   "tuner_stats": stats, "gates": gates}, f, indent=1)
+    print(f"\n[autotune] wrote {len(rows)} plan rows -> {OUT_PATH}")
+    print("[gates] " + "  ".join(f"{k}={v}" for k, v in gates.items()))
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

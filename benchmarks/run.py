@@ -32,6 +32,9 @@ SECTIONS = {
                "modeled J/inference table + envelope-constrained serving"),
     "fusion": ("benchmarks.fusion", False, True,
                "pass-pipeline gates: fused DDR bytes / J/inf vs op-by-op"),
+    "autotune": ("benchmarks.autotune", False, True,
+                 "autotuner gates: tuned vs heuristic tile configs, "
+                 "prepacked arenas, bit-exactness"),
     "table45": ("benchmarks.table45_context", False, False,
                 "Tables IV/V context: device/toolchain comparison"),
     "fig_power": ("benchmarks.fig_power_phases", False, False,

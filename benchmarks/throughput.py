@@ -14,8 +14,11 @@ reference columns anchor each cell:
                               (the seed engine's serving pattern).
 
 J/inference comes from core/energy.py's measured-host accounting
-(HOST_POWER_BUSY x latency). Results land in BENCH_throughput.json so
-the perf trajectory is tracked across PRs. NB: on this host the accel
+(HOST_POWER_BUSY x latency). A ``tuned`` column (wall-clock + modeled
+latency of the autotuned twin engine, DESIGN.md §11) sits next to every
+flex/accel cell so the perf trajectory records default-vs-autotuned side
+by side. Results land in BENCH_throughput.json so the trajectory is
+tracked across PRs. NB: on this host the accel
 backend runs Pallas in interpret mode — its absolute numbers measure the
 emulation, not the MXU; the batched-vs-per-sample ratio is still the
 honest staging-overhead signal.
@@ -62,6 +65,13 @@ def bench_model(name: str, batches=BATCHES, backends=BACKENDS) -> List[Dict]:
     engine = Engine(g, m.init_params(jax.random.PRNGKey(42)))
     engine.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
                       for i in range(4)])
+    # the autotuned twin (same params + calibration): its wall clock and
+    # modeled latency land in the `tuned` columns so the perf trajectory
+    # records default-vs-autotuned side by side across PRs
+    tuned_engine = Engine(m.build_graph(),
+                          m.init_params(jax.random.PRNGKey(42)),
+                          autotune=True)
+    tuned_engine.share_calibration(engine)
     rows: List[Dict] = []
 
     per_sample_fps: Dict[str, float] = {}
@@ -85,6 +95,21 @@ def bench_model(name: str, batches=BATCHES, backends=BACKENDS) -> List[Dict]:
                            max_reps=2 if backend == "cpu" else MAX_REPEATS,
                            warmup=backend != "cpu")
             fps = batch / t
+            tuned_fps = None
+            tuned_modeled_ms = None
+            modeled_ms = None
+            if backend != "cpu":        # cpu = the eager baseline, untuned
+                tplan = tuned_engine.compile(backend, batch)
+                tt = _time_call(lambda: tplan(staged, rngs))
+                tuned_fps = batch / tt
+                tuned_modeled_ms = tplan.cost.latency_s * 1e3
+                # the default baseline goes through the SAME kernel-level
+                # pricer as the tuned number — the coarse roofline has
+                # no tile notion, and mixing the two models would
+                # corrupt any default-vs-tuned ratio off this trajectory
+                ep = tuned_engine.planned(backend)
+                modeled_ms = ep.default_cost_signature(
+                    batch).latency_s * 1e3
             rows.append({
                 "model": name,
                 "backend": backend,
@@ -95,10 +120,15 @@ def bench_model(name: str, batches=BATCHES, backends=BACKENDS) -> List[Dict]:
                 "speedup_vs_per_sample": fps / per_sample_fps[backend],
                 "j_per_inference": HOST_POWER_BUSY / fps,
                 "plan_traces": getattr(plan, "n_traces", 0),
+                "tuned_samples_per_s": tuned_fps,
+                "modeled_latency_ms": modeled_ms,
+                "tuned_modeled_latency_ms": tuned_modeled_ms,
             })
             r = rows[-1]
+            tuned_col = (f"tuned={tuned_fps:10.1f}" if tuned_fps
+                         else " " * 16)
             print(f"  {name:18s} {backend:5s} B={batch:<3d} "
-                  f"{fps:10.1f} samp/s  "
+                  f"{fps:10.1f} samp/s  {tuned_col}  "
                   f"x_cpu={r['speedup_vs_cpu']:8.2f}  "
                   f"x_seed={r['speedup_vs_per_sample']:6.2f}  "
                   f"J/inf={r['j_per_inference']:.3e}")

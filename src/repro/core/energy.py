@@ -53,6 +53,13 @@ class HardwareModel:
                                    # makes DDR traffic cost JOULES even
                                    # when the roofline is compute-bound —
                                    # the lever operator fusion pulls
+    grid_step_s: float = 0.0       # per-tile sequencer overhead (s): one
+                                   # instruction fetch / DMA descriptor per
+                                   # kernel grid step. Only the autotuner's
+                                   # kernel-level pricer charges it (the
+                                   # coarse roofline has no tile notion),
+                                   # so default cost signatures are
+                                   # unchanged by this field.
 
 
 # Public TPU v5e figures: 197 TFLOP/s bf16 / 394 TOP/s int8, 819 GB/s HBM,
@@ -100,8 +107,11 @@ ZCU104_DPU = HardwareModel(
     ddr_pj_per_byte=_ZCU104_DDR_PJ,
     # Paper Table III implies the DPU sustains 4-13% of its 1.2 TOP/s peak
     # on these small CNNs (50.6 / 150.1 GOP/s measured); 0.125 calibrated
-    # to CNetPlusScalar, the DPU-friendliest workload.
-    util=0.125, overhead_s=2e-4)
+    # to CNetPlusScalar, the DPU-friendliest workload. Each tile op costs
+    # one DPU instruction fetch + DMA descriptor (~10 us at 300 MHz with
+    # the AXI round-trip) — the term the tile autotuner trades against
+    # padding waste (DESIGN.md §11).
+    util=0.125, overhead_s=2e-4, grid_step_s=1e-5)
 
 # The paper's *naive* HLS designs (no perf pragmas): each layer maps to a
 # sequential 100 MHz dataflow stage; Table III's HLS rows imply ~15-25
@@ -159,20 +169,31 @@ def _quantized_set(graph: Graph, backend: str,
             if base_op(n) in ("conv2d", "dense")}
 
 
-def _node_weight_bytes(node: Node, quantized: Set[str]) -> int:
+def _node_weight_bytes(node: Node, quantized: Set[str],
+                       packed_bytes: Optional[Dict[str, int]] = None) -> int:
     """Per-node parameter footprint at actual post-PTQ widths: int8
     weights + fp32 biases for quantized nodes, fp32 everywhere else
-    (the `opgraph.node_param_bytes` split — one definition)."""
+    (the `opgraph.node_param_bytes` split — one definition). A node in
+    ``packed_bytes`` is charged its prepacked (tile-padded) footprint
+    instead — the bytes the weight arena actually keeps resident."""
+    if packed_bytes and node.name in packed_bytes:
+        return packed_bytes[node.name]
     return node_param_bytes(node, 1 if node.name in quantized else 4)
 
 
 def weight_bytes(graph: Graph, backend: str,
-                 quantized: Optional[Set[str]] = None) -> int:
+                 quantized: Optional[Set[str]] = None,
+                 packed_bytes: Optional[Dict[str, int]] = None) -> int:
     """Whole-graph parameter footprint at per-node dtype widths (what
     BRAM residency and the cost signatures charge) — delegates to
-    `Graph.param_bytes` with a per-node weight-width map."""
+    `Graph.param_bytes` with a per-node weight-width map. Nodes with a
+    prepacked weight arena entry (``packed_bytes``: node -> bytes) are
+    charged the packed tile-padded footprint instead."""
     q = _quantized_set(graph, backend, quantized)
-    return graph.param_bytes(4, node_dtype_bytes={n: 1 for n in q})
+    if not packed_bytes:
+        return graph.param_bytes(4, node_dtype_bytes={n: 1 for n in q})
+    return sum(_node_weight_bytes(n, q, packed_bytes)
+               for n in graph.nodes.values())
 
 
 def _act_bytes(graph: Graph, name: str) -> int:
@@ -185,23 +206,35 @@ def _act_bytes(graph: Graph, name: str) -> int:
 
 
 def _compute_cost(graph: Graph, hw: HardwareModel, backend: str,
-                  batch: int) -> Tuple[float, int]:
+                  batch: int,
+                  node_times: Optional[Dict[str, float]] = None
+                  ) -> Tuple[float, int]:
     """(compute_t, n_compute_nodes) — the one definition of per-op
     arithmetic time both the op-by-op and the arena cost paths share
-    (fusion moves bytes, never FLOPs)."""
+    (fusion moves bytes, never FLOPs). ``node_times`` (node -> seconds,
+    whole batch) replaces the coarse roofline term for nodes the
+    autotuner priced with its kernel-level model — those times already
+    include util, padding waste, and per-tile sequencer overhead."""
     compute_t = 0.0
+    tuned_t = 0.0
     n_compute_nodes = 0
     peak = _peak(hw, backend)
     for node in graph.nodes.values():
         if node.op in ("input", "const"):
             continue
         n_compute_nodes += 1
-        compute_t += node.ops * batch / peak
-    return compute_t / hw.util, n_compute_nodes
+        if node_times and node.name in node_times:
+            tuned_t += node_times[node.name]
+        else:
+            compute_t += node.ops * batch / peak
+    return compute_t / hw.util + tuned_t, n_compute_nodes
 
 
 def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int,
-                quantized: Optional[Set[str]] = None
+                quantized: Optional[Set[str]] = None,
+                node_times: Optional[Dict[str, float]] = None,
+                extra_bytes: float = 0.0,
+                packed_bytes: Optional[Dict[str, int]] = None
                 ) -> Tuple[float, float, float, bool, int]:
     """Shared roofline core for one dispatched batch.
 
@@ -223,18 +256,20 @@ def _graph_cost(graph: Graph, hw: HardwareModel, backend: str, batch: int,
     on-chip.
     """
     q = _quantized_set(graph, backend, quantized)
-    param_bytes = weight_bytes(graph, backend, q)
+    param_bytes = weight_bytes(graph, backend, q, packed_bytes)
     resident = param_bytes <= hw.onchip_bytes
 
-    compute_t, n_compute_nodes = _compute_cost(graph, hw, backend, batch)
-    bytes_moved = 0.0
+    compute_t, n_compute_nodes = _compute_cost(graph, hw, backend, batch,
+                                               node_times)
+    bytes_moved = float(extra_bytes)
     for name in graph.order:
         node = graph.nodes[name]
         if node.op in ("input", "const"):
             continue
         reads = sum(_act_bytes(graph, i) for i in node.inputs
                     if graph.nodes[i].op != "const")   # consts are plan
-        w_bytes = 0 if resident else _node_weight_bytes(node, q)
+        w_bytes = 0 if resident else _node_weight_bytes(node, q,
+                                                        packed_bytes)
         bytes_moved += (_act_bytes(graph, name) + reads + w_bytes) * batch
     memory_t = bytes_moved / hw.hbm_bw
     return compute_t, memory_t, bytes_moved, resident, n_compute_nodes
@@ -333,21 +368,34 @@ def _make_signature(graph: Graph, backend: str, batch: int,
 
 def cost_signature(graph: Graph, backend: str, batch: int,
                    hw: Optional[HardwareModel] = None,
-                   quantized: Optional[Set[str]] = None) -> CostSignature:
+                   quantized: Optional[Set[str]] = None,
+                   node_times: Optional[Dict[str, float]] = None,
+                   extra_bytes: float = 0.0,
+                   packed_bytes: Optional[Dict[str, int]] = None
+                   ) -> CostSignature:
     """The modeled cost of one ``batch``-sized dispatch of ``graph`` on
     ``backend`` (hardware from BACKEND_HW unless overridden), under the
-    pre-pass op-by-op bytes model: every activation round-trips DDR."""
+    pre-pass op-by-op bytes model: every activation round-trips DDR.
+
+    ``node_times``/``extra_bytes``/``packed_bytes`` are the autotuner's
+    kernel-level refinements (per-node tuned kernel times, weight
+    restream traffic, prepacked footprints — DESIGN.md §11); absent, the
+    signature is byte-for-byte the pre-autotune model."""
     if hw is None:
         hw = BACKEND_HW[backend]
     compute_t, memory_t, bytes_moved, resident, n_nodes = _graph_cost(
-        graph, hw, backend, batch, quantized)
+        graph, hw, backend, batch, quantized, node_times, extra_bytes,
+        packed_bytes)
     return _make_signature(graph, backend, batch, hw, compute_t, memory_t,
                            bytes_moved, resident, n_nodes)
 
 
 def plan_cost_signature(graph: Graph, backend: str, batch: int, arena,
                         hw: Optional[HardwareModel] = None,
-                        quantized: Optional[Set[str]] = None
+                        quantized: Optional[Set[str]] = None,
+                        node_times: Optional[Dict[str, float]] = None,
+                        extra_bytes: float = 0.0,
+                        packed_bytes: Optional[Dict[str, int]] = None
                         ) -> CostSignature:
     """The modeled cost of a FUSED plan's dispatch: DDR bytes come from
     the static arena plan (`core/memory.py`) — graph inputs/outputs,
@@ -355,13 +403,17 @@ def plan_cost_signature(graph: Graph, backend: str, batch: int, arena,
     intermediates are free. Spilled weights still stream per inference.
     Compute time is shared with `_graph_cost` (fusion moves bytes, not
     FLOPs), so the energy delta vs `cost_signature` is the off-chip
-    traffic the fusion+arena pipeline keeps on-chip."""
+    traffic the fusion+arena pipeline keeps on-chip.
+    ``node_times``/``extra_bytes``/``packed_bytes`` carry the
+    autotuner's kernel-level refinements (see `cost_signature`)."""
     if hw is None:
         hw = BACKEND_HW[backend]
-    w_bytes = weight_bytes(graph, backend, quantized)
+    w_bytes = weight_bytes(graph, backend, quantized, packed_bytes)
     resident = w_bytes <= hw.onchip_bytes
-    compute_t, n_nodes = _compute_cost(graph, hw, backend, batch)
-    bytes_moved = float(arena.ddr_bytes_per_sample) * batch
+    compute_t, n_nodes = _compute_cost(graph, hw, backend, batch,
+                                       node_times)
+    bytes_moved = (float(arena.ddr_bytes_per_sample) * batch
+                   + float(extra_bytes))
     if not resident:
         bytes_moved += w_bytes * batch
     memory_t = bytes_moved / hw.hbm_bw

@@ -78,13 +78,36 @@ class Engine:
     """Executes an op graph on a chosen backend (or a partitioned mix)."""
 
     def __init__(self, graph: Graph, params: Dict[str, Dict[str, jax.Array]],
-                 ptq_demote_threshold: float = 0.2, fuse: bool = True):
+                 ptq_demote_threshold: float = 0.2, fuse: bool = True,
+                 autotune: bool = False, tuning_cache=None,
+                 autotune_measure: bool = False,
+                 autotune_pack_batch: int = 32):
         self.graph = graph
         self.params = params
         self.ptq_demote_threshold = ptq_demote_threshold
         # fuse=False is the escape hatch: skip the graph-compiler pass
         # pipeline (DESIGN.md §10) and build the pre-pass per-node plans
         self.fuse = fuse
+        # autotune=False (the default) reproduces the heuristic kernel
+        # blocks bit-for-bit; autotune=True runs the plan-time tile
+        # search + weight prepack (DESIGN.md §11). ``tuning_cache`` is a
+        # JSON path (or a TuningCache) — warm caches skip ALL candidate
+        # evaluations; ``autotune_measure`` additionally wall-clocks the
+        # model's top-K picks (opt-in: on this host it measures the
+        # Pallas interpreter, on a TPU the compiled Mosaic kernels).
+        self.autotune = autotune
+        self.autotune_pack_batch = autotune_pack_batch
+        self._tuner = None
+        if autotune:
+            from repro.core.autotune import Autotuner, TuningCache
+            cache = (tuning_cache if isinstance(tuning_cache, TuningCache)
+                     else TuningCache(tuning_cache))
+            self._tuner = Autotuner(cache, measure=autotune_measure)
+        elif tuning_cache is not None or autotune_measure:
+            # silently dropping these would serve heuristic plans while
+            # the caller believes a warm cache is in play
+            raise ValueError(
+                "tuning_cache/autotune_measure require autotune=True")
         self._quant: Optional[Dict[str, QuantizedLayer]] = None
         self._calib: Dict[str, float] = {}
         self._ptq_err: Dict[str, float] = {}
@@ -92,6 +115,12 @@ class Engine:
         # `self` — and its quantized weights — for the process lifetime)
         self._planned: Dict[str, ExecutionPlan] = {}
         self._compiled: Dict[tuple, object] = {}
+
+    @property
+    def tuner(self):
+        """The engine's Autotuner (None when ``autotune=False``) — its
+        ``stats``/``cache`` are the re-search observability surface."""
+        return self._tuner
 
     # -- planning (paper: run the inspector, then choose the toolchain) -----
 
@@ -120,6 +149,19 @@ class Engine:
         self._compiled = {k: v for k, v in self._compiled.items()
                           if k[0] != "accel"}
 
+    def share_calibration(self, other: "Engine") -> None:
+        """Adopt ``other``'s PTQ calibration state (same graph topology
+        and the same params): activation absmax, quantized weights, and
+        the per-node PTQ error map. The twin-engine idiom the benchmarks
+        and tests use to pay interpret-mode calibration once per model
+        instead of once per engine variant."""
+        self._quant = other._quant
+        self._calib = other._calib
+        self._ptq_err = other._ptq_err
+        self._planned.pop("accel", None)
+        self._compiled = {k: v for k, v in self._compiled.items()
+                          if k[0] != "accel"}
+
     # -- staged compilation --------------------------------------------------
 
     def planned(self, backend: str = "flex") -> ExecutionPlan:
@@ -132,7 +174,8 @@ class Engine:
                 quant=self._quant, act_absmax=self._calib,
                 ptq_err=self._ptq_err,
                 ptq_demote_threshold=self.ptq_demote_threshold,
-                fuse=self.fuse)
+                fuse=self.fuse, tuner=self._tuner,
+                pack_batch=self.autotune_pack_batch)
         return self._planned[key]
 
     def compile(self, backend: str = "flex", batch_size: int = 1):

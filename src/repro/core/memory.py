@@ -59,6 +59,10 @@ class ArenaPlan:
     output_bytes: int               # graph outputs written to DDR, /sample
     spill_bytes: int                # DDR round-trip traffic from spills
     boundary_bytes: int             # DDR round-trips at segment crossings
+    weight_bytes: int = 0           # resident weight footprint the budget
+                                    # was derived from — the PACKED
+                                    # (tile-padded) bytes when a prepacked
+                                    # weight arena exists (DESIGN.md §11)
 
     @property
     def n_spilled(self) -> int:
@@ -75,7 +79,9 @@ class ArenaPlan:
         lines = [f"arena[{self.graph_name}/{self.backend}]: "
                  f"peak {self.bram_peak:,} / {self.bram_budget:,} B BRAM, "
                  f"{self.n_spilled} spill(s), "
-                 f"{self.ddr_bytes_per_sample:,} DDR B/sample"]
+                 f"{self.ddr_bytes_per_sample:,} DDR B/sample"
+                 + (f", {self.weight_bytes:,} B resident weights"
+                    if self.weight_bytes else "")]
         for b in self.buffers.values():
             where = (f"bram@{b.offset}" if b.tier == "bram"
                      else f"ddr({b.reason})")
@@ -94,11 +100,14 @@ def plan_arena(graph: Graph,
                segments: Sequence,          # plan.Segment sequence
                bram_budget: int,
                act_dtype_bytes: Optional[Dict[str, int]] = None,
-               backend: str = "flex") -> ArenaPlan:
+               backend: str = "flex",
+               weight_bytes: int = 0) -> ArenaPlan:
     """Assign every activation a tier (+ BRAM offset) via liveness-aware
     first-fit. ``act_dtype_bytes`` maps node name -> bytes/element (1 for
     int8-domain values, default 4); ``bram_budget`` is the on-chip bytes
-    left after resident weights."""
+    left after resident weights — ``weight_bytes`` records the footprint
+    that budget was derived from (the packed/padded bytes when a
+    prepacked weight arena exists), for reporting."""
     from repro.core.opgraph import consumers as _consumers
 
     act_dtype_bytes = act_dtype_bytes or {}
@@ -179,4 +188,5 @@ def plan_arena(graph: Graph,
         output_bytes=output_bytes,
         spill_bytes=spill_bytes,
         boundary_bytes=boundary_bytes,
+        weight_bytes=weight_bytes,
     )

@@ -38,12 +38,14 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as autotune_mod
 from repro.core import energy as energy_mod
 from repro.core import memory as memory_mod
 from repro.core.opgraph import (RANDOM_OPS, Graph, Node, base_op,
                                 consumers, param_node)
 from repro.core.passes import PassContext, PassManager, PassReport
 from repro.kernels import ops as kops
+from repro.kernels.conv2d import conv_geometry, pad_input
 
 
 # ---------------------------------------------------------------------------
@@ -214,13 +216,26 @@ class ExecutionPlan:
                  ptq_err: Optional[Dict[str, float]] = None,
                  ptq_demote_threshold: float = 0.2,
                  fuse: bool = True,
-                 pass_manager: Optional[PassManager] = None):
+                 pass_manager: Optional[PassManager] = None,
+                 tuner: Optional[autotune_mod.Autotuner] = None,
+                 pack_batch: int = 32):
         from repro.core import inspector as inspector_mod
         self.source_graph = graph
         self.params = params
         self.backend = backend
         self.fuse = fuse
         self.n_traces = 0
+        # plan-time autotuning (DESIGN.md §11): tuner=None is the escape
+        # hatch that reproduces the heuristic kernels bit-for-bit.
+        # Weight-layout dims are tuned ONCE at `pack_batch` (weights are
+        # packed once for the mission); per-rung tuning covers only the
+        # activation-schedule knobs against that fixed layout.
+        self.tuner = tuner
+        self.pack_batch = pack_batch
+        self._tuning: Dict[int, Dict[str, autotune_mod.TuningDecision]] = {}
+        self._layouts: Optional[Dict[str, autotune_mod.KernelConfig]] = None
+        self.packed: Dict[str, Any] = {}
+        self._packed_bytes: Dict[str, int] = {}
 
         assignment = inspector_mod.assign_backends(graph)
         self.demoted: List[str] = []
@@ -349,7 +364,8 @@ class ExecutionPlan:
     def _plan_arena(self) -> memory_mod.ArenaPlan:
         hw = energy_mod.BACKEND_HW[self.backend]
         w_bytes = energy_mod.weight_bytes(self.graph, self.backend,
-                                          self._quantized_names())
+                                          self._quantized_names(),
+                                          self._packed_bytes or None)
         budget = max(int(hw.onchip_bytes) - w_bytes, 0) \
             if w_bytes <= hw.onchip_bytes else int(hw.onchip_bytes)
         act_dtype = {}
@@ -358,14 +374,48 @@ class ExecutionPlan:
                     or node.attrs.get("requant_scale") is not None):
                 act_dtype[name] = 1     # int8-domain value
         return memory_mod.plan_arena(self.graph, self.segments, budget,
-                                     act_dtype, backend=self.backend)
+                                     act_dtype, backend=self.backend,
+                                     weight_bytes=w_bytes)
+
+    # -- autotuning (DESIGN.md §11) ------------------------------------------
+
+    def _ensure_autotuned(self, batch_size: int) -> None:
+        """Tune (and, on the accel path, prepack) once per batch rung.
+        The packing step runs first, at ``pack_batch``: it fixes the
+        weight-layout dims, builds the tile-aligned device buffers, and
+        re-budgets the activation arena against the PACKED footprint —
+        then every rung's schedule search is constrained to that layout."""
+        if self.tuner is None or batch_size in self._tuning:
+            return
+        if self.backend == "accel" and self._layouts is None:
+            pack = self.tuner.tune_plan(self, self.pack_batch)
+            self._layouts = {
+                n: d.config for n, d in pack.items()
+                if d.kind in autotune_mod.INT8_KINDS}
+            self.packed = autotune_mod.build_packed_weights(
+                self, self._layouts)
+            self._packed_bytes = {n: p.packed_bytes
+                                  for n, p in self.packed.items()}
+            if self.arena is not None:
+                self.arena = self._plan_arena()
+            self._tuning[self.pack_batch] = pack
+            if batch_size == self.pack_batch:
+                return
+        layouts = self._layouts if self.backend == "accel" else None
+        self._tuning[batch_size] = self.tuner.tune_plan(
+            self, batch_size, layouts=layouts)
 
     # -- the batched program -------------------------------------------------
 
-    def batched_fn(self) -> Callable:
-        """The plan as a python callable ``f(inputs[B,...], rngs[B,2])``."""
+    def batched_fn(self, tuning: Optional[Dict[str, Any]] = None
+                   ) -> Callable:
+        """The plan as a python callable ``f(inputs[B,...], rngs[B,2])``.
+        ``tuning`` (node -> TuningDecision, one batch rung) binds the
+        autotuned tile configs; quantized nodes with a prepacked weight
+        arena entry consume it directly (no per-call weight padding)."""
         graph, params = self.graph, self.params
         qplans, fused_into = self.qplans, self.fused_into
+        packed = self.packed
 
         def f(inputs: Dict[str, jax.Array], rngs: jax.Array
               ) -> Dict[str, jax.Array]:
@@ -390,7 +440,11 @@ class ExecutionPlan:
                         continue
                     xs = [vals[i] for i in node.inputs]
                     if name in qplans:
-                        vals[name] = _run_quantized(qplans[name], xs[0])
+                        dec = tuning.get(name) if tuning else None
+                        vals[name] = _run_quantized(
+                            qplans[name], xs[0],
+                            config=dec.config if dec else None,
+                            packed=packed.get(name))
                         continue
                     if node.op == "fused":      # fp32 fused (flex path)
                         vals[name] = _run_fused_f32(node, xs, params)
@@ -411,12 +465,15 @@ class ExecutionPlan:
     def lower(self, batch_size: int) -> "LoweredPlan":
         if batch_size in self._lowered:
             return self._lowered[batch_size]
+        self._ensure_autotuned(batch_size)
         in_sds = {
             name: jax.ShapeDtypeStruct((batch_size,) + tuple(shape),
                                        jnp.float32)
             for name, shape in self.graph.graph_inputs.items()}
         rng_sds = jax.ShapeDtypeStruct((batch_size, 2), jnp.uint32)
-        lowered = jax.jit(self.batched_fn()).lower(in_sds, rng_sds)
+        lowered = jax.jit(
+            self.batched_fn(self._tuning.get(batch_size))).lower(
+                in_sds, rng_sds)
         self.n_traces += 1
         lp = LoweredPlan(self, batch_size, lowered)
         self._lowered[batch_size] = lp
@@ -436,6 +493,11 @@ class ExecutionPlan:
         # always pass the exact quantized set — an accel plan whose nodes
         # were ALL PTQ-demoted runs fp32 and must be priced at fp32
         # widths, not the assume-int8 graph-only approximation
+        if backend is None and self.tuner is not None:
+            self._ensure_autotuned(batch_size)
+            return self.tuned_cost_signature(
+                batch_size, self._tuning[batch_size],
+                packed_bytes=self._packed_bytes or None)
         if self.arena is not None and backend is None:
             return energy_mod.plan_cost_signature(
                 self.graph, self.backend, batch_size, self.arena,
@@ -443,6 +505,38 @@ class ExecutionPlan:
         return energy_mod.cost_signature(
             self.graph, backend or self.backend, batch_size,
             quantized=self._quantized_names())
+
+    def default_cost_signature(self, batch_size: int
+                               ) -> energy_mod.CostSignature:
+        """The heuristic-default configs priced through the SAME
+        kernel-level pricer (and the same packed footprint) as the tuned
+        signature — THE baseline every default-vs-tuned comparison uses
+        (benchmarks/autotune.py, benchmarks/throughput.py): comparing
+        tuned numbers against the coarse roofline would mix two models."""
+        return self.tuned_cost_signature(
+            batch_size, autotune_mod.price_defaults(self, batch_size),
+            packed_bytes=self._packed_bytes or None)
+
+    def tuned_cost_signature(self, batch_size: int,
+                             decisions: Dict[str, Any],
+                             packed_bytes: Optional[Dict[str, int]] = None
+                             ) -> energy_mod.CostSignature:
+        """The plan's cost signature with the kernel-level pricing of a
+        decision set substituted for the coarse per-node roofline term —
+        the one pricer both the tuned plan AND the benchmark's
+        heuristic-default baseline (`autotune.price_defaults`) go
+        through, so default-vs-tuned comparisons never mix models."""
+        node_times = {n: d.modeled_s for n, d in decisions.items()}
+        extra = sum(d.extra_bytes for d in decisions.values())
+        if self.arena is not None:
+            return energy_mod.plan_cost_signature(
+                self.graph, self.backend, batch_size, self.arena,
+                quantized=self._quantized_names(), node_times=node_times,
+                extra_bytes=extra, packed_bytes=packed_bytes)
+        return energy_mod.cost_signature(
+            self.graph, self.backend, batch_size,
+            quantized=self._quantized_names(), node_times=node_times,
+            extra_bytes=extra, packed_bytes=packed_bytes)
 
     # -- reporting -----------------------------------------------------------
 
@@ -486,13 +580,37 @@ class ExecutionPlan:
                     bits.append("int8-in")
                 lines.append(f"  int8 {name:24s} {qp.op:7s} "
                              + " ".join(bits))
+        if self._tuning:
+            lines.append("")
+            for bsz in sorted(self._tuning):
+                lines.append(f"  autotune @ batch {bsz}:")
+                for name, d in self._tuning[bsz].items():
+                    cfg = d.config
+                    if d.kind == "int8_dense":
+                        desc = f"tile {cfg.bm}x{cfg.bn}x{cfg.bk}"
+                    elif d.kind == "int8_conv":
+                        desc = f"rows/blk {cfg.rows_per_block}"
+                        if cfg.cout_per_block:
+                            desc += f" cout/blk {cfg.cout_per_block}"
+                    else:
+                        desc = f"unroll x{cfg.unroll}"
+                    pk = self.packed.get(name)
+                    pb = (f"  packed={pk.packed_bytes:,} B"
+                          if pk is not None else "")
+                    lines.append(
+                        f"    {name:24s} {desc:20s} "
+                        f"t={d.modeled_s*1e6:9.2f} us "
+                        f"(default {d.default_s*1e6:9.2f} us, "
+                        f"x{d.speedup:.2f}) [{d.source}]{pb}")
         if self.arena is not None:
             lines.append("")
             lines.append(self.arena.summary())
         return "\n".join(lines)
 
 
-def _run_quantized(qp: QuantNodePlan, x: jax.Array) -> jax.Array:
+def _run_quantized(qp: QuantNodePlan, x: jax.Array,
+                   config: Optional[Any] = None,
+                   packed: Optional[Any] = None) -> jax.Array:
     """One fused kernel per quantized layer: static-scale requantize ->
     int8 MXU matmul/conv -> dequant (+bias, +act, +requantize) epilogue.
 
@@ -502,6 +620,13 @@ def _run_quantized(qp: QuantNodePlan, x: jax.Array) -> jax.Array:
     covered by a representative calibration set (DESIGN.md §7). When the
     producer already requantized (``int8_input``), the incoming int8
     values are consumed directly — the fp32 intermediate never existed.
+
+    With ``packed`` (a prepacked weight-arena entry, DESIGN.md §11) the
+    kernels consume tile-aligned device buffers directly: weight padding
+    happened once at plan time, input staging (quantize + the conv's
+    SAME pad, geometry computed once at lowering) is all that remains
+    per call. ``config`` binds the rung's autotuned tile schedule; both
+    paths are bit-exact to the heuristic default.
     """
     s = qp.act_scale
     if qp.op == "dense":
@@ -509,11 +634,32 @@ def _run_quantized(qp: QuantNodePlan, x: jax.Array) -> jax.Array:
         x2 = x.reshape(b, -1)
         x_q = x2 if qp.int8_input else jnp.clip(
             jnp.round(x2 / s), -127, 127).astype(jnp.int8)
+        scales = jnp.full((b,), s, jnp.float32)
+        if packed is not None:
+            return kops.int8_matmul(
+                x_q, packed.w_q, scales, packed.w_scale, packed.bias,
+                act=qp.act, requant_scale=qp.requant_scale,
+                bm=(config.bm if config and config.bm else 128),
+                bn=packed.bn, bk=packed.bk, prepacked=True,
+                n_out=packed.n)
         return kops.int8_matmul(
-            x_q, qp.w_q, jnp.full((b,), s, jnp.float32), qp.w_scale,
+            x_q, qp.w_q, scales, qp.w_scale,
             qp.bias, act=qp.act, requant_scale=qp.requant_scale)
     x_q = x if qp.int8_input else jnp.clip(
         jnp.round(x / s), -127, 127).astype(jnp.int8)
+    if packed is not None:
+        h, w = int(x_q.shape[1]), int(x_q.shape[2])
+        kh, kw = int(packed.w_q.shape[0]), int(packed.w_q.shape[1])
+        rows = (config.rows_per_block
+                if config and config.rows_per_block else 8)
+        geom = conv_geometry(h, w, kh, kw, qp.stride, qp.padding, rows)
+        x_q = pad_input(x_q, geom)       # plan-time geometry, one pad op
+        return kops.conv2d_int8(
+            x_q, packed.w_q, packed.w_scale, packed.bias, x_scale=s,
+            stride=qp.stride, padding=qp.padding, act=qp.act,
+            requant_scale=qp.requant_scale, rows_per_block=rows,
+            cout_per_block=packed.cout_per_block, cout=packed.cout,
+            pre_padded=True, in_hw=(h, w))
     return kops.conv2d_int8(
         x_q, qp.w_q, qp.w_scale, qp.bias, x_scale=s,
         stride=qp.stride, padding=qp.padding, act=qp.act,

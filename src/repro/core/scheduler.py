@@ -248,9 +248,16 @@ class _ModelService:
         self.n_submitted = 0
         self.n_deferred = 0
         self._last_deferred_rid: Optional[int] = None
-        # EWMA service-time estimate per (backend, rung), seeded by the
-        # register warmup (or by the cost signature under a modeled clock)
+        # EWMA service-time estimate per (backend, rung). Seeded at
+        # register time from the plan's modeled CostSignature latency so
+        # the very FIRST ragged-tail flush decision is cadence-correct
+        # (the old cold-start margin of 0 made the first dispatch flush
+        # exactly at the deadline, too late to compute). A seed is a
+        # PRIOR: the first real observation replaces it outright (host
+        # wall time and modeled ZCU104 time differ in scale); later
+        # observations EWMA as before.
         self.est_service: Dict[Tuple[str, int], float] = {}
+        self._seeded: set = set()
         self._rng = jax.random.PRNGKey(
             int(np.frombuffer(name.encode()[:4].ljust(4, b"\0"),
                               np.uint32)[0]))
@@ -259,18 +266,30 @@ class _ModelService:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
+    def seed_service(self, backend: str, rung: int, seconds: float) -> None:
+        """Install a modeled prior for the flush margin; replaced (not
+        averaged) by the first real observation."""
+        self.est_service[(backend, rung)] = seconds
+        self._seeded.add((backend, rung))
+
     def observe_service(self, backend: str, rung: int,
                         seconds: float) -> None:
-        old = self.est_service.get((backend, rung))
-        self.est_service[(backend, rung)] = (
-            seconds if old is None else 0.5 * old + 0.5 * seconds)
+        key = (backend, rung)
+        old = self.est_service.get(key)
+        if old is None or key in self._seeded:
+            self._seeded.discard(key)
+            self.est_service[key] = seconds
+        else:
+            self.est_service[key] = 0.5 * old + 0.5 * seconds
 
     def flush_margin(self) -> float:
         """How long before the oldest deadline we must start computing:
-        safety x the worst measured rung service time on the PRIMARY
+        safety x the worst estimated rung service time on the PRIMARY
         backend (fallback backends may be orders slower — budgeting for
-        them would flush everything immediately; 0 until measured — then
-        the first dispatch itself seeds the estimate)."""
+        them would flush everything immediately). Every rung is seeded
+        with its modeled CostSignature latency at register time, so the
+        margin is cadence-correct from the very first flush decision;
+        real observations replace the seeds as dispatches happen."""
         primary = self.backends[0]
         worst = max((t for (b, _), t in self.est_service.items()
                      if b == primary), default=0.0)
@@ -397,6 +416,12 @@ class ContinuousBatchingScheduler:
                     f"power envelope can never admit any backend of "
                     f"{name!r} (smallest rung {bottom}); widen the budget "
                     f"or register a lower-power backend")
+        # seed every (backend, rung) estimate from its plan-time cost
+        # signature so the first flush decision is cadence-correct even
+        # before any observation exists (a warmup or the first dispatch
+        # REPLACES the seed — it is a prior, not a measurement)
+        for key, sig in svc.costs.items():
+            svc.seed_service(key[0], key[1], sig.latency_s)
         if warmup_sample is not None:
             for b in backends:
                 for rung in ladder:
@@ -409,9 +434,11 @@ class ContinuousBatchingScheduler:
                     svc.observe_service(b, rung, time.perf_counter() - t0)
         if self.clock == "modeled":
             # the modeled clock serves on the cost signature's timeline —
-            # estimates come from the plan, not this host
+            # estimates come from the plan, not this host (re-seeded so a
+            # wall-clock warmup above cannot leak host time into the
+            # deterministic simulation)
             for key, sig in svc.costs.items():
-                svc.est_service[key] = sig.latency_s
+                svc.seed_service(key[0], key[1], sig.latency_s)
         with self._lock:
             if name in self._svcs:
                 raise ValueError(f"model {name!r} already registered")

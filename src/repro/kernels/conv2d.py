@@ -13,48 +13,83 @@ Supports stride 1/2 and 'SAME'/'VALID' padding (host-side pre-pad).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
 from repro.kernels.epilogue import (apply_epilogue, normalize_act,
-                                    out_dtype_for)
+                                    out_dtype_for, pad_channel_params)
 
 
-def _conv_geometry(x: jax.Array, kh: int, kw: int, stride: int,
-                   padding: str, rows_per_block: int = 1):
-    """Shared SAME/VALID geometry for the fp32 and int8 kernels: returns
-    ``(x_padded, h_out, w_out, rows, n_row_blocks)`` with the image
-    extended so every row window the grid touches — including rows padded
-    out to a whole number of ``rows_per_block`` blocks — is in range.
-    Zero padding is exact for both fp32 and int8 accumulation."""
-    _, h, wd, _ = x.shape
+class ConvGeom(NamedTuple):
+    """Plan-time conv pad geometry: everything the SAME/VALID staging and
+    the grid blocking need, derived purely from static shapes — so a
+    lowering computes it ONCE (cached) and steady-state serving never
+    re-derives pad amounts for identically-shaped batches."""
+    h_out: int
+    w_out: int
+    rows: int                       # output rows per grid step
+    n_row_blocks: int
+    pad_top: int
+    pad_bottom: int                 # includes row-block coverage padding
+    pad_left: int
+    pad_right: int
+    h_pad: int                      # padded input dims the kernel expects
+    w_pad: int
+
+
+@functools.lru_cache(maxsize=None)
+def conv_geometry(h: int, wd: int, kh: int, kw: int, stride: int,
+                  padding: str, rows_per_block: int = 1) -> ConvGeom:
+    """Shared SAME/VALID geometry for the fp32 and int8 kernels: the
+    image is extended so every row window the grid touches — including
+    rows padded out to a whole number of ``rows_per_block`` blocks — is
+    in range. Zero padding is exact for both fp32 and int8 accumulation.
+    Pure function of static shapes, memoized."""
     if padding == "SAME":
         h_out = -(-h // stride)
         w_out = -(-wd // stride)
         pad_h = max((h_out - 1) * stride + kh - h, 0)
         pad_w = max((w_out - 1) * stride + kw - wd, 0)
-        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
-                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+        top, left = pad_h // 2, pad_w // 2
+        bottom, right = pad_h - top, pad_w - left
     elif padding == "VALID":
         h_out = (h - kh) // stride + 1
         w_out = (wd - kw) // stride + 1
+        top = bottom = left = right = 0
     else:
         raise ValueError(padding)
     rows = min(rows_per_block, h_out)
     n_row_blocks = -(-h_out // rows)
     need_h = (n_row_blocks * rows - 1) * stride + kh
     need_w = (w_out - 1) * stride + kw
-    h_pad, w_pad = x.shape[1], x.shape[2]
-    if need_h > h_pad or need_w > w_pad:
-        x = jnp.pad(x, ((0, 0), (0, max(need_h - h_pad, 0)),
-                        (0, max(need_w - w_pad, 0)), (0, 0)))
-    return x, h_out, w_out, rows, n_row_blocks
+    bottom += max(need_h - (h + top + bottom), 0)
+    right += max(need_w - (wd + left + right), 0)
+    return ConvGeom(h_out, w_out, rows, n_row_blocks, top, bottom, left,
+                    right, h + top + bottom, wd + left + right)
+
+
+def pad_input(x: jax.Array, g: ConvGeom) -> jax.Array:
+    """Apply a plan-time :class:`ConvGeom` to one [B, H, W, C] batch —
+    the single input-staging pad both the kernels and the prepacked
+    plan path share."""
+    if (g.pad_top, g.pad_bottom, g.pad_left, g.pad_right) == (0, 0, 0, 0):
+        return x
+    return jnp.pad(x, ((0, 0), (g.pad_top, g.pad_bottom),
+                       (g.pad_left, g.pad_right), (0, 0)))
+
+
+def _conv_geometry(x: jax.Array, kh: int, kw: int, stride: int,
+                   padding: str, rows_per_block: int = 1):
+    """Back-compat wrapper: ``(x_padded, h_out, w_out, rows,
+    n_row_blocks)`` over the cached :func:`conv_geometry`."""
+    g = conv_geometry(x.shape[1], x.shape[2], kh, kw, stride, padding,
+                      rows_per_block)
+    return pad_input(x, g), g.h_out, g.w_out, g.rows, g.n_row_blocks
 
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, w_out: int,
@@ -165,12 +200,13 @@ def _kernel_int8(x_ref, w_ref, ws_ref, b_ref, o_ref, *, kh: int, kw: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "x_scale", "stride", "padding", "relu", "act", "requant_scale",
-    "rows_per_block", "interpret"))
+    "rows_per_block", "cout_per_block", "cout", "pre_padded", "in_hw",
+    "interpret"))
 def conv2d_int8(
     x_q: jax.Array,                 # [B, H, W, Cin] int8
-    w_q: jax.Array,                 # [KH, KW, Cin, Cout] int8
-    w_scale: jax.Array,             # [Cout] f32 per-output-channel
-    bias: Optional[jax.Array] = None,   # [Cout] f32
+    w_q: jax.Array,                 # [KH, KW, Cin, Cout(_pad)] int8
+    w_scale: jax.Array,             # [Cout(_pad)] f32 per-output-channel
+    bias: Optional[jax.Array] = None,   # [Cout(_pad)] f32
     *,
     x_scale: float = 1.0,           # static per-tensor activation scale
     stride: int = 1,
@@ -179,6 +215,10 @@ def conv2d_int8(
     act: Optional[str] = None,      # 'relu' | 'sigmoid' epilogue
     requant_scale: Optional[float] = None,  # int8 output at this scale
     rows_per_block: int = 8,
+    cout_per_block: int = 0,        # 0 = no channel tiling (whole Cout)
+    cout: Optional[int] = None,     # logical Cout when w arrives padded
+    pre_padded: bool = False,       # x already staged per conv_geometry
+    in_hw: Optional[Tuple[int, int]] = None,  # logical (H, W), pre_padded
     interpret: bool = True,
 ) -> jax.Array:
     """Quantized conv: ``deq(conv_int32(x_q, w_q))`` with fused epilogue.
@@ -189,38 +229,95 @@ def conv2d_int8(
     the epilogue re-quantizes the result to int8 for the next quantized
     layer (the graph compiler's producer->consumer fusion): the fp32
     activation never leaves the kernel.
+
+    Tiling/prepack hooks (DESIGN.md §11 — all bit-exact vs the default
+    path, since channel blocks are independent and zero pad rows/channels
+    are sliced off):
+
+    * ``cout_per_block`` tiles the output-channel dim: the grid gains a
+      channel-block axis and each step holds only a [KH, KW, Cin, bc]
+      weight slice in VMEM. Cout is zero-padded up to whole blocks
+      (neutral scale/bias on pad channels; prepacked callers arrive
+      aligned, with the logical ``cout`` passed separately).
+    * ``pre_padded`` skips the kernel's own input staging: the caller
+      already applied :func:`conv_geometry`/:func:`pad_input` at plan
+      time (the prepacked plans' staging step) and passes the logical
+      ``in_hw`` so the geometry can be re-derived from the cache.
     """
     act = normalize_act(relu, act)
     b, _, _, cin = x_q.shape
-    kh, kw, _, cout = w_q.shape
-    x_q, h_out, w_out, rows, n_row_blocks = _conv_geometry(
-        x_q, kh, kw, stride, padding, rows_per_block)
+    kh, kw, _, cout_pad = w_q.shape
+    cout = cout_pad if cout is None else cout
+    if pre_padded:
+        if in_hw is None:
+            raise ValueError("pre_padded=True needs in_hw=(H, W)")
+        g = conv_geometry(in_hw[0], in_hw[1], kh, kw, stride, padding,
+                          rows_per_block)
+        if x_q.shape[1:3] != (g.h_pad, g.w_pad):
+            raise ValueError(
+                f"pre-padded input {x_q.shape} does not match geometry "
+                f"({g.h_pad}, {g.w_pad})")
+    else:
+        g = conv_geometry(x_q.shape[1], x_q.shape[2], kh, kw, stride,
+                          padding, rows_per_block)
+        x_q = pad_input(x_q, g)
+    h_out, w_out = g.h_out, g.w_out
+    rows, n_row_blocks = g.rows, g.n_row_blocks
     h_out_pad = n_row_blocks * rows
+    bc = cout_per_block or cout_pad
+    if cout_pad % bc:
+        pad_c = -(-cout_pad // bc) * bc - cout_pad
+        w_q = jnp.pad(w_q, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+        w_scale, bias = pad_channel_params(w_scale, bias, pad_c)
+        cout_pad += pad_c
     has_bias = bias is not None
     if bias is None:
-        bias = jnp.zeros((cout,), jnp.float32)
+        bias = jnp.zeros((cout_pad,), jnp.float32)
 
-    out = pl.pallas_call(
-        functools.partial(_kernel_int8, kh=kh, kw=kw, w_out=w_out,
-                          stride=stride, rows=rows, x_scale=float(x_scale),
-                          act=act, requant_scale=requant_scale,
-                          has_bias=has_bias),
-        grid=(b, n_row_blocks),
-        in_specs=[
-            pl.BlockSpec((1, x_q.shape[1], x_q.shape[2], cin),
-                         lambda bi, ri: (bi, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, cin, cout), lambda bi, ri: (0, 0, 0, 0)),
-            pl.BlockSpec((cout,), lambda bi, ri: (0,)),
-            pl.BlockSpec((cout,), lambda bi, ri: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, rows, w_out, cout),
-                               lambda bi, ri: (bi, ri, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h_out_pad, w_out, cout),
-                                       out_dtype_for(requant_scale)),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-    )(x_q, w_q, w_scale, bias)
-    if h_out_pad != h_out:
-        out = out[:, :h_out]
+    kernel = functools.partial(
+        _kernel_int8, kh=kh, kw=kw, w_out=w_out, stride=stride, rows=rows,
+        x_scale=float(x_scale), act=act, requant_scale=requant_scale,
+        has_bias=has_bias)
+    out_sd = jax.ShapeDtypeStruct((b, h_out_pad, w_out, cout_pad),
+                                  out_dtype_for(requant_scale))
+    if bc == cout_pad:
+        out = pl.pallas_call(
+            kernel,
+            grid=(b, n_row_blocks),
+            in_specs=[
+                pl.BlockSpec((1, x_q.shape[1], x_q.shape[2], cin),
+                             lambda bi, ri: (bi, 0, 0, 0)),
+                pl.BlockSpec((kh, kw, cin, cout_pad),
+                             lambda bi, ri: (0, 0, 0, 0)),
+                pl.BlockSpec((cout_pad,), lambda bi, ri: (0,)),
+                pl.BlockSpec((cout_pad,), lambda bi, ri: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, rows, w_out, cout_pad),
+                                   lambda bi, ri: (bi, ri, 0, 0)),
+            out_shape=out_sd,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+            interpret=interpret,
+        )(x_q, w_q, w_scale, bias)
+    else:
+        out = pl.pallas_call(
+            kernel,
+            grid=(b, n_row_blocks, cout_pad // bc),
+            in_specs=[
+                pl.BlockSpec((1, x_q.shape[1], x_q.shape[2], cin),
+                             lambda bi, ri, ci: (bi, 0, 0, 0)),
+                pl.BlockSpec((kh, kw, cin, bc),
+                             lambda bi, ri, ci: (0, 0, 0, ci)),
+                pl.BlockSpec((bc,), lambda bi, ri, ci: (ci,)),
+                pl.BlockSpec((bc,), lambda bi, ri, ci: (ci,)),
+            ],
+            out_specs=pl.BlockSpec((1, rows, w_out, bc),
+                                   lambda bi, ri, ci: (bi, ri, 0, ci)),
+            out_shape=out_sd,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(x_q, w_q, w_scale, bias)
+    if h_out_pad != h_out or cout_pad != cout:
+        out = out[:, :h_out, :, :cout]
     return out

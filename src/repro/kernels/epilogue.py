@@ -40,6 +40,21 @@ def out_dtype_for(requant_scale: Optional[float], default=jnp.float32):
     return jnp.int8 if requant_scale is not None else default
 
 
+def pad_channel_params(w_scale: jax.Array, bias: Optional[jax.Array],
+                       n_pad: int):
+    """Extend per-output-channel dequant params to a tile-padded channel
+    count: scale 1.0 and bias 0.0 on the padding channels. Neutral values
+    keep the padded lanes' math finite and exact — their outputs are
+    sliced off after the kernel. One definition shared by the prepacked
+    weight arenas and the kernels' pad-on-the-fly channel tiling."""
+    if n_pad == 0:
+        return w_scale, bias
+    w_scale = jnp.pad(w_scale, (0, n_pad), constant_values=1.0)
+    if bias is not None:
+        bias = jnp.pad(bias, (0, n_pad))
+    return w_scale, bias
+
+
 def apply_epilogue(out: jax.Array, act: Optional[str],
                    requant_scale: Optional[float]) -> jax.Array:
     """The fp32 tail after dequant+bias. ``out`` is fp32; returns fp32,

@@ -64,13 +64,24 @@ def _aligned_block(dim: int, target: int) -> int:
     return -(-dim // 8) * 8
 
 
+def heuristic_blocks(m: int, k: int, n: int,
+                     bm: int = 128, bn: int = 128, bk: int = 128):
+    """The default (pre-autotune) block choice for an [M, K] x [K, N]
+    int8 matmul — THE definition the autotuner's default candidate and
+    the kernel's untuned path share, so ``autotune=False`` reproduces
+    these blocks bit-for-bit."""
+    return (min(bm, _aligned_block(m, bm)),
+            min(bn, _aligned_block(n, bn)),
+            min(bk, _aligned_block(k, bk)))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bm", "bn", "bk", "relu", "act", "requant_scale",
-                     "out_dtype", "interpret"))
+                     "out_dtype", "prepacked", "n_out", "interpret"))
 def int8_matmul(
     x_q: jax.Array,                 # [M, K] int8
-    w_q: jax.Array,                 # [K, N] int8
+    w_q: jax.Array,                 # [K, N] int8 (tile-aligned if prepacked)
     x_scale: jax.Array,             # [M] f32 per-row
     w_scale: jax.Array,             # [N] f32 per-output-channel
     bias: Optional[jax.Array] = None,   # [N] f32
@@ -82,26 +93,41 @@ def int8_matmul(
     act: Optional[str] = None,      # 'relu' | 'sigmoid' epilogue
     requant_scale: Optional[float] = None,  # int8 output at this scale
     out_dtype=jnp.float32,
+    prepacked: bool = False,        # w/w_scale/bias arrive tile-aligned
+    n_out: Optional[int] = None,    # logical N when prepacked
     interpret: bool = True,
 ) -> jax.Array:
     act = normalize_act(relu, act)
     out_dtype = out_dtype_for(requant_scale, out_dtype)
     m, k = x_q.shape
     k2, n = w_q.shape
-    assert k == k2, (k, k2)
-    bm = min(bm, _aligned_block(m, bm))
-    bn = min(bn, _aligned_block(n, bn))
-    bk = min(bk, _aligned_block(k, bk))
-    # pad every dim up to a whole number of aligned tiles; padded K
-    # contributes exact zeros, padded M/N rows/cols are sliced off below
-    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
-    if (mp, kp, np_) != (m, k, n):
-        x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
-        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
-        x_scale = jnp.pad(x_scale, (0, mp - m), constant_values=1.0)
-        w_scale = jnp.pad(w_scale, (0, np_ - n), constant_values=1.0)
-        if bias is not None:
-            bias = jnp.pad(bias, (0, np_ - n))
+    if prepacked:
+        # the weight arena already padded w (zeros), w_scale (1.0) and
+        # bias (0.0) out to whole (bk, bn) tiles at plan time — only the
+        # per-call activation still needs staging. bk/bn are the packed
+        # layout and must divide the packed dims exactly.
+        kp, np_ = k2, n
+        n = np_ if n_out is None else n_out
+        assert kp % bk == 0 and np_ % bn == 0, (kp, np_, bk, bn)
+        assert k <= kp, (k, kp)
+        bm = min(bm, _aligned_block(m, bm))
+        mp = -(-m // bm) * bm
+        if (mp, kp) != (m, k):
+            x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+            x_scale = jnp.pad(x_scale, (0, mp - m), constant_values=1.0)
+    else:
+        assert k == k2, (k, k2)
+        bm, bn, bk = heuristic_blocks(m, k, n, bm, bn, bk)
+        # pad every dim up to a whole number of aligned tiles; padded K
+        # contributes exact zeros, padded M/N rows/cols are sliced below
+        mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+        if (mp, kp, np_) != (m, k, n):
+            x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+            w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+            x_scale = jnp.pad(x_scale, (0, mp - m), constant_values=1.0)
+            w_scale = jnp.pad(w_scale, (0, np_ - n), constant_values=1.0)
+            if bias is not None:
+                bias = jnp.pad(bias, (0, np_ - n))
     n_k = kp // bk
     has_bias = bias is not None
     if bias is None:

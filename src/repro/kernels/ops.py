@@ -30,10 +30,11 @@ def _interp() -> bool:
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, bias=None, *, relu=False,
                 act=None, requant_scale=None, out_dtype=jnp.float32,
-                **tiles):
+                prepacked=False, n_out=None, **tiles):
     return _int8mm.int8_matmul(x_q, w_q, x_scale, w_scale, bias, relu=relu,
                                act=act, requant_scale=requant_scale,
-                               out_dtype=out_dtype, interpret=_interp(),
+                               out_dtype=out_dtype, prepacked=prepacked,
+                               n_out=n_out, interpret=_interp(),
                                **tiles)
 
 
@@ -44,11 +45,14 @@ def conv2d(x, w, bias=None, *, stride=1, padding="SAME", relu=False):
 
 def conv2d_int8(x_q, w_q, w_scale, bias=None, *, x_scale=1.0, stride=1,
                 padding="SAME", relu=False, act=None, requant_scale=None,
-                rows_per_block=8):
+                rows_per_block=8, cout_per_block=0, cout=None,
+                pre_padded=False, in_hw=None):
     return _conv2d.conv2d_int8(x_q, w_q, w_scale, bias, x_scale=x_scale,
                                stride=stride, padding=padding, relu=relu,
                                act=act, requant_scale=requant_scale,
                                rows_per_block=rows_per_block,
+                               cout_per_block=cout_per_block, cout=cout,
+                               pre_padded=pre_padded, in_hw=in_hw,
                                interpret=_interp())
 
 

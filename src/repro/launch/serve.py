@@ -90,13 +90,18 @@ def serve_space(args) -> int:
         raise SystemExit("--burst-j/--window-s configure the power "
                          "envelope; pass --power-budget and/or --peak-w "
                          "to enable it")
+    if (args.tuning_cache or args.autotune_measure) and not args.autotune:
+        raise SystemExit("--tuning-cache/--autotune-measure configure the "
+                         "plan-time autotuner; pass --autotune to enable it")
     sched = ContinuousBatchingScheduler(envelope=envelope, clock=args.clock)
     trace = []
     for mi, name in enumerate(names):
         m = SPACE_MODELS[name]
         graph = m.build_graph()
         engine = Engine(graph, m.init_params(jax.random.PRNGKey(1)),
-                        fuse=not args.no_fuse)
+                        fuse=not args.no_fuse, autotune=args.autotune,
+                        tuning_cache=args.tuning_cache,
+                        autotune_measure=args.autotune_measure)
         print(inspector.inspect(graph).summary())
 
         reqs = synthetic_requests(m, args.requests, seed=mi)
@@ -206,6 +211,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-fuse", action="store_true",
                     help="skip the graph-compiler pass pipeline "
                          "(DESIGN.md §10) and serve the op-by-op plans")
+    ap.add_argument("--autotune", action="store_true",
+                    help="plan-time kernel tile search + prepacked "
+                         "weight arenas (DESIGN.md §11); off = the "
+                         "heuristic kernel blocks, bit-for-bit")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="JSON tuning-cache path: warm caches skip all "
+                         "candidate evaluations across processes")
+    ap.add_argument("--autotune-measure", action="store_true",
+                    help="refine the autotuner's top-K picks by "
+                         "wall-clock measurement (measures the Pallas "
+                         "interpreter on non-TPU hosts)")
     # lm mode
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

@@ -422,3 +422,80 @@ def test_scheduler_async_mode_completes_everything(engines):
         sched.stop(drain=True)
     got = sorted(c.rid for c in sched.completions)
     assert got == sorted(rids)
+
+
+# ---------------------------------------------------------------------------
+# EWMA seeding from plan-time cost signatures (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_service_estimates_seeded_from_cost_signature(engines):
+    """Registration alone (no warmup, no dispatch) seeds every
+    (backend, rung) service-time estimate from the plan's modeled
+    CostSignature latency, so the very FIRST ragged-tail flush decision
+    has a cadence-correct margin instead of the old cold-start 0."""
+    m, e = engines["logistic_net"]
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4))
+    svc = sched._svcs["logistic_net"]
+    assert svc.est_service                      # non-empty before warmup
+    for (backend, rung), est in svc.est_service.items():
+        assert est == pytest.approx(svc.costs[(backend, rung)].latency_s)
+    assert svc.flush_margin() > 0.0
+
+
+def test_seed_is_prior_first_observation_replaces(engines):
+    m, e = engines["logistic_net"]
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1,))
+    svc = sched._svcs["logistic_net"]
+    seeded = svc.est_service[("flex", 1)]
+    # first observation REPLACES the modeled prior outright (scales can
+    # differ wildly between host wall time and the modeled ZCU104)...
+    svc.observe_service("flex", 1, 0.5)
+    assert svc.est_service[("flex", 1)] == pytest.approx(0.5)
+    assert svc.est_service[("flex", 1)] != seeded
+    # ...and later observations EWMA as before
+    svc.observe_service("flex", 1, 0.1)
+    assert svc.est_service[("flex", 1)] == pytest.approx(0.3)
+
+
+def test_warmup_observation_overrides_seed(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 1)
+    sched = ContinuousBatchingScheduler()
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    svc = sched._svcs["logistic_net"]
+    # warmed keys carry measured host time, not the modeled seed
+    for key in svc.est_service:
+        assert key not in svc._seeded
+
+
+def test_modeled_clock_estimates_stay_modeled_after_warmup(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 1)
+    sched = ContinuousBatchingScheduler(clock="modeled")
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    svc = sched._svcs["logistic_net"]
+    for key, est in svc.est_service.items():
+        assert est == pytest.approx(svc.costs[key].latency_s)
+
+
+def test_first_flush_decision_uses_seeded_margin(engines):
+    """With a seeded margin the first ragged request is flushed BEFORE
+    its deadline (deadline - margin), not at it: pick() fires at the
+    seeded flush time with no dispatch history at all."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 1)
+    sched = ContinuousBatchingScheduler(clock="modeled", flush_safety=2.0)
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   deadline_s=0.15)
+    svc = sched._svcs["logistic_net"]
+    sched.submit("logistic_net", reqs[0], arrival=0.0)
+    ft = svc.flush_time()
+    assert ft == pytest.approx(0.15 - svc.flush_margin())
+    assert svc.flush_margin() > 0.0
+    assert svc.pick(ft - 1e-6) is None          # not due yet
+    assert svc.pick(ft + 1e-6) is not None      # due at the seeded time
