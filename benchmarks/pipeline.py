@@ -1,0 +1,259 @@
+"""Pipelined-runtime benchmark — async staging/compute/readback overlap
+(DESIGN.md §12), gated -> BENCH_pipeline.json.
+
+Three parts:
+
+1. **Overlap table** (machine-independent): for every space model x
+   backend {flex, accel} x rung {1, 32}, the plan's stage decomposition
+   (`ExecutionPlan.stage_costs`) and its steady-state overlap — serial
+   per-batch seconds / longest stage, the asymptotic effective-throughput
+   gain of pipelining a saturated stream. Gates: overlap >= 1.3x on at
+   least two conv-heavy models at rung 32, every chain's longest stage
+   equals the signature's ``pipelined_latency_s``, and overlap >= 1
+   everywhere.
+2. **Identity** (machine-independent under the modeled clock): the
+   scheduler with ``pipeline=True`` is dispatch-for-dispatch and
+   BIT-identical to ``pipeline=False`` (records, completion timestamps,
+   outputs) over a bursty two-model trace, and the overlap ledger's
+   invariants hold (speedup >= 1, pipelined span <= serial span,
+   per-resource occupancy <= 1).
+3. **Wall-clock** (host-dependent, skipped in --smoke):
+   ``ServingPipeline.run(pipeline=True)`` vs ``pipeline=False`` as
+   ALTERNATING timed blocks (the autotune benchmark's `_wall_pair`
+   discipline). On this CPU-only host both paths drive the same XLA
+   executables, so the honest expectation is ~1.0x with async-dispatch
+   headroom — the gate is no-regression, not speedup.
+
+    PYTHONPATH=src python -m benchmarks.pipeline            # full
+    PYTHONPATH=src python -m benchmarks.pipeline --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.energy import steady_state_overlap
+from repro.core.engine import Engine
+from repro.core.pipeline import ServingPipeline
+from repro.core.scheduler import ContinuousBatchingScheduler, bursty_arrivals
+from repro.models import SPACE_MODELS, synthetic_requests
+
+OUT_PATH = "BENCH_pipeline.json"
+BACKENDS = ("flex", "accel")
+RUNGS = (1, 32)
+N_CALIB = 2
+# the tentpole gate: modeled steady-state overlap at the top rung on the
+# models the paper offloads for their conv stacks (Fig 11's pipelining
+# candidates — staging and readback large enough to hide compute behind)
+CONV_HEAVY = ("baseline_net", "cnet_plus_scalar", "vae_encoder")
+OVERLAP_X = 1.3
+MIN_OVERLAPPED = 2
+GATE_RUNG = 32
+# identity + wall-clock run the two cheap models (accel is interpret-mode
+# Pallas on hosts; conv models at rung 32 would measure the emulator)
+CHEAP_MODELS = ("logistic_net", "multi_esperta")
+N_REQUESTS = 40
+WALL_BATCH = 16
+WALL_STREAM = 256             # requests per timed block — the cheap
+                              # models run tens of thousands of fps, so a
+                              # short stream would sit in timer noise
+WALL_REPEATS = 7              # alternating best-of blocks (_wall_pair)
+WALL_TOLERANCE = 0.85         # same executables; timer/thread headroom
+
+
+_ENGINES = {}
+
+
+def _engines(name: str):
+    if name not in _ENGINES:
+        m = SPACE_MODELS[name]
+        e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                     for i in range(N_CALIB)])
+        _ENGINES[name] = (m, e)
+    return _ENGINES[name]
+
+
+# ---------------------------------------------------------------------------
+# part 1: modeled overlap table
+# ---------------------------------------------------------------------------
+
+
+def overlap_table() -> List[Dict]:
+    rows = []
+    for name in SPACE_MODELS:
+        _, e = _engines(name)
+        for backend in BACKENDS:
+            plan = e.planned(backend)
+            for rung in RUNGS:
+                stages = plan.stage_costs(rung)
+                sig = plan.pipelined_cost_signature(rung)
+                longest = max(s.seconds for s in stages)
+                rows.append({
+                    "model": name, "backend": backend, "rung": rung,
+                    "serial_latency_ms": sig.latency_s * 1e3,
+                    "pipelined_latency_ms": sig.pipelined_latency_s * 1e3,
+                    "overlap_x": steady_state_overlap(stages),
+                    "longest_stage": max(stages,
+                                         key=lambda s: s.seconds).name,
+                    "n_stages": len(stages),
+                    "stages_ms": {s.name: s.seconds * 1e3 for s in stages},
+                    "longest_matches_signature": bool(
+                        abs(longest - sig.pipelined_latency_s)
+                        <= 1e-12 + 1e-9 * longest),
+                })
+    return rows
+
+
+def check_overlap(rows: List[Dict]) -> Dict[str, bool]:
+    print(f"\n{'model':18s} {'bkend':6s} {'rung':>4s} {'serial ms':>10s} "
+          f"{'pipe ms':>10s} {'overlap':>8s}  longest stage")
+    for r in rows:
+        print(f"{r['model']:18s} {r['backend']:6s} {r['rung']:4d} "
+              f"{r['serial_latency_ms']:10.4f} "
+              f"{r['pipelined_latency_ms']:10.4f} "
+              f"{r['overlap_x']:7.2f}x  {r['longest_stage']}")
+    all_consistent = all(r["longest_matches_signature"] for r in rows)
+    all_ge_one = all(r["overlap_x"] >= 1.0 - 1e-12 for r in rows)
+    # the headline gate counts conv-heavy models at the top rung by their
+    # best backend's overlap
+    best = {}
+    for r in rows:
+        if r["model"] in CONV_HEAVY and r["rung"] == GATE_RUNG:
+            best[r["model"]] = max(best.get(r["model"], 0.0),
+                                   r["overlap_x"])
+    n_over = sum(1 for v in best.values() if v >= OVERLAP_X)
+    print(f"\n[gate] longest stage == pipelined_latency_s everywhere: "
+          f"{all_consistent}")
+    print(f"[gate] overlap >= 1x everywhere: {all_ge_one}")
+    print(f"[gate] conv-heavy models >= {OVERLAP_X}x at rung {GATE_RUNG}: "
+          f"{n_over} of {list(best)} (need >= {MIN_OVERLAPPED})")
+    return {"longest_stage_matches_signature": all_consistent,
+            "overlap_at_least_one": all_ge_one,
+            "conv_models_overlap": n_over >= MIN_OVERLAPPED}
+
+
+# ---------------------------------------------------------------------------
+# part 2: pipelined == synchronous under the modeled clock
+# ---------------------------------------------------------------------------
+
+
+def _serve(pipeline: bool):
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=pipeline)
+    trace = []
+    for mi, name in enumerate(CHEAP_MODELS):
+        m, e = _engines(name)
+        reqs = synthetic_requests(m, N_REQUESTS, seed=5 + mi)
+        sched.register(name, e, backend="flex", ladder=(1, 4, 16),
+                       warmup_sample=reqs[0])
+        trace += [(t, name, r) for t, r in
+                  zip(bursty_arrivals(N_REQUESTS, burst_size=8, gap_s=0.02,
+                                      seed=20 + mi), reqs)]
+    end = sched.serve_trace(trace)
+    return sched, end
+
+
+def identity_check() -> Dict:
+    sync_sched, sync_end = _serve(pipeline=False)
+    pipe_sched, pipe_end = _serve(pipeline=True)
+    same_dispatches = (pipe_sched.dispatches == sync_sched.dispatches
+                       and pipe_end == sync_end)
+    same_completions = len(pipe_sched.completions) == len(
+        sync_sched.completions)
+    bit_exact = same_completions
+    for a, b in zip(pipe_sched.completions, sync_sched.completions):
+        same_completions = same_completions and (
+            (a.rid, a.kept, a.arrival, a.finished, a.rung, a.n_real)
+            == (b.rid, b.kept, b.arrival, b.finished, b.rung, b.n_real))
+        for k in b.outputs:
+            bit_exact = bit_exact and np.array_equal(a.outputs[k],
+                                                     b.outputs[k])
+    rep = pipe_sched.overlap_report()
+    ledger_ok = (rep["n_dispatches"] == len(pipe_sched.dispatches)
+                 and rep["overlap_speedup_x"] >= 1.0
+                 and rep["pipelined_span_s"] <= rep["serial_span_s"] + 1e-12
+                 and all(v <= 1.0 + 1e-9
+                         for v in rep["occupancy"].values()))
+    print(f"[identity] dispatches identical:  {same_dispatches}")
+    print(f"[identity] completions identical: {same_completions}")
+    print(f"[identity] outputs bit-exact:     {bit_exact}")
+    print(f"[identity] ledger invariants:     {ledger_ok}  "
+          f"(modeled overlap x{rep['overlap_speedup_x']:.3f} over "
+          f"{rep['n_dispatches']} dispatches)")
+    return {"report": rep,
+            "gates": {"pipelined_dispatches_identical": same_dispatches,
+                      "pipelined_completions_identical": same_completions,
+                      "pipelined_outputs_bit_exact": bit_exact,
+                      "overlap_ledger_invariants": ledger_ok}}
+
+
+# ---------------------------------------------------------------------------
+# part 3: wall clock — run(pipeline=True) vs run(pipeline=False)
+# ---------------------------------------------------------------------------
+
+
+def _wall_pair(pipe: ServingPipeline, reqs) -> Dict:
+    """Alternating timed blocks of full `run()` streams, best-of per
+    column (the autotune benchmark's discipline): host-load drift on this
+    shared box hits both columns equally, and a 64-request stream keeps
+    each block well out of single-call timer noise."""
+    for p in (False, True):                     # warm both paths
+        pipe.run(reqs, pipeline=p)
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(WALL_REPEATS):
+        for p in (False, True):
+            t0 = time.perf_counter()
+            pipe.run(reqs, pipeline=p)
+            best[p] = min(best[p], time.perf_counter() - t0)
+    return {"serial_fps": len(reqs) / best[False],
+            "pipelined_fps": len(reqs) / best[True],
+            "ratio": best[False] / best[True]}
+
+
+def wall_clock() -> Dict:
+    res = {}
+    for name in CHEAP_MODELS:
+        m, e = _engines(name)
+        reqs = synthetic_requests(m, WALL_STREAM, seed=13)
+        pipe = ServingPipeline(e, backend="flex", batch_size=WALL_BATCH)
+        r = _wall_pair(pipe, reqs)
+        r["ok"] = r["ratio"] >= WALL_TOLERANCE
+        res[name] = r
+        print(f"[wall] {name:18s} flex b{WALL_BATCH}: pipelined "
+              f"{r['pipelined_fps']:9.2f} fps vs serial "
+              f"{r['serial_fps']:9.2f} fps (x{r['ratio']:.3f})")
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="machine-independent gates only (skip wall-clock)")
+    args = ap.parse_args(argv)
+
+    print("== pipelined runtime: modeled stage overlap + zero-drift "
+          f"identity (backends {BACKENDS}, rungs {RUNGS}) ==")
+    rows = overlap_table()
+    gates = check_overlap(rows)
+    ident = identity_check()
+    gates.update(ident["gates"])
+    wall = {} if args.smoke else wall_clock()
+    if wall:
+        gates["no_pipelined_wallclock_regression"] = all(
+            w["ok"] for w in wall.values())
+
+    with open(OUT_PATH, "w") as f:
+        json.dump({"overlap_table": rows, "identity": ident["report"],
+                   "wall_clock": wall, "gates": gates}, f, indent=1)
+    print(f"\n[pipeline] wrote {len(rows)} overlap rows -> {OUT_PATH}")
+    print("[gates] " + "  ".join(f"{k}={v}" for k, v in gates.items()))
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,9 @@ SECTIONS = {
     "autotune": ("benchmarks.autotune", False, True,
                  "autotuner gates: tuned vs heuristic tile configs, "
                  "prepacked arenas, bit-exactness"),
+    "pipeline": ("benchmarks.pipeline", False, True,
+                 "pipelined-runtime gates: modeled stage overlap, "
+                 "pipelined==sync identity, overlap-ledger invariants"),
     "table45": ("benchmarks.table45_context", False, False,
                 "Tables IV/V context: device/toolchain comparison"),
     "fig_power": ("benchmarks.fig_power_phases", False, False,

@@ -32,7 +32,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core.energy import HOST_POWER_BUSY
+from repro.core.energy import HOST_POWER_BUSY, steady_state_overlap
 from repro.core.engine import Engine
 from repro.models import SPACE_MODELS
 
@@ -123,6 +123,14 @@ def bench_model(name: str, batches=BATCHES, backends=BACKENDS) -> List[Dict]:
                 "tuned_samples_per_s": tuned_fps,
                 "modeled_latency_ms": modeled_ms,
                 "tuned_modeled_latency_ms": tuned_modeled_ms,
+                # the pipelined runtime's modeled columns (DESIGN.md §12):
+                # steady-state per-batch interval (longest stage of the
+                # plan's stage decomposition) and the effective-throughput
+                # gain of overlapping staging/compute/readback
+                "pipelined_modeled_latency_ms":
+                    plan.cost.pipelined_latency_s * 1e3,
+                "pipelined_modeled_overlap_x":
+                    steady_state_overlap(plan.stages),
             })
             r = rows[-1]
             tuned_col = (f"tuned={tuned_fps:10.1f}" if tuned_fps

@@ -22,7 +22,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.opgraph import Graph, Node, base_op, node_param_bytes
 
@@ -60,6 +60,15 @@ class HardwareModel:
                                    # coarse roofline has no tile notion),
                                    # so default cost signatures are
                                    # unchanged by this field.
+    stage_bw: float = 0.0          # host->device staging bandwidth (B/s):
+                                   # PS-side batch assembly + AXI-DMA into
+                                   # the accelerator's DDR window. Only the
+                                   # pipelined stage decomposition
+                                   # (`stage_costs`) charges it — the
+                                   # serial roofline folds staging into
+                                   # `overhead_s`, so latency_s/energy_j
+                                   # are unchanged by this field. 0 means
+                                   # no separate staging channel (cpu).
 
 
 # Public TPU v5e figures: 197 TFLOP/s bf16 / 394 TOP/s int8, 819 GB/s HBM,
@@ -111,7 +120,13 @@ ZCU104_DPU = HardwareModel(
     # one DPU instruction fetch + DMA descriptor (~10 us at 300 MHz with
     # the AXI round-trip) — the term the tile autotuner trades against
     # padding waste (DESIGN.md §11).
-    util=0.125, overhead_s=2e-4, grid_step_s=1e-5)
+    util=0.125, overhead_s=2e-4, grid_step_s=1e-5,
+    # PYNQ-style PS staging: NumPy batch assembly + fp32 buffer fill over
+    # AXI-DMA sustains a few hundred MB/s, well under the 19.2 GB/s DDR
+    # peak — the regime behind the paper's Fig 11, where input staging
+    # DOMINATES inference for the small models. 0.6 GB/s is the staging
+    # channel both FPGA paths share (one PS, one DMA engine).
+    stage_bw=0.6e9)
 
 # The paper's *naive* HLS designs (no perf pragmas): each layer maps to a
 # sequential 100 MHz dataflow stage; Table III's HLS rows imply ~15-25
@@ -123,7 +138,7 @@ ZCU104_HLS_NAIVE = HardwareModel(
     hbm_bw=19.2e9, onchip_bytes=4.75 * 2**20,
     power_busy=1.75, power_idle=1.5,
     ddr_pj_per_byte=_ZCU104_DDR_PJ,
-    util=1.0, overhead_s=27e-6)
+    util=1.0, overhead_s=27e-6, stage_bw=0.6e9)
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +357,13 @@ class CostSignature:
     power_w: float                  # busy power while the batch runs
     weights_resident: bool
     ddr_energy_j: float = 0.0       # the off-chip-access share of energy_j
+    pipelined_latency_s: float = 0.0
+    # ^ steady-state per-batch interval of the PIPELINED runtime: the
+    # longest stage of the plan's stage decomposition (`stage_costs`) —
+    # with staging, per-segment compute, and readback overlapped across
+    # batches, a saturated stream completes one batch per longest stage.
+    # 0.0 when the plan was priced without a stage decomposition;
+    # latency_s (the serial whole-batch latency) is unchanged either way.
 
     def row(self) -> str:
         return (f"{self.backend:6s} b={self.batch:<3d} "
@@ -419,6 +441,226 @@ def plan_cost_signature(graph: Graph, backend: str, batch: int, arena,
     memory_t = bytes_moved / hw.hbm_bw
     return _make_signature(graph, backend, batch, hw, compute_t, memory_t,
                            bytes_moved, resident, n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined stage decomposition + overlap ledger (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    """One pipeline stage of one dispatched batch: host staging, one plan
+    segment's compute, or host readback. ``resource`` names the hardware
+    unit the stage occupies — stages of DIFFERENT batches overlap iff
+    their resources differ. Staging and readback get SEPARATE host
+    resources ('host_in' / 'host_out'): the PS-side AXI DMA channels are
+    full-duplex, so batch k+1's input assembly overlaps batch k's output
+    drain (the whole point of double buffering)."""
+    name: str                       # 'stage_in' | 'seg<i>/<backend>' | 'readback'
+    resource: str                   # 'host_in' | 'host_out' | 'accel' | 'flex' | 'cpu'
+    seconds: float
+
+
+def stage_costs(graph: Graph, backend: str, batch: int, segments: Sequence,
+                arena=None,
+                hw: Optional[HardwareModel] = None,
+                quantized: Optional[Set[str]] = None,
+                node_times: Optional[Dict[str, float]] = None,
+                packed_bytes: Optional[Dict[str, int]] = None
+                ) -> Tuple[StageCost, ...]:
+    """Decompose one ``batch``-sized dispatch into its pipeline stages:
+
+    * ``stage_in`` on the ``host_in`` resource — the per-dispatch setup
+      (``overhead_s``) plus the graph inputs streamed at the PS staging
+      bandwidth (``stage_bw``; the paper's Fig 11 load_ip_input phase),
+    * one stage per plan *segment* on that segment's backend resource —
+      per-node compute time (tuned kernel times when available, else the
+      roofline term, exactly `_compute_cost`'s per-node pricing) maxed
+      against the segment's share of the plan's DDR traffic,
+    * ``readback`` on ``host_out`` — graph outputs back at ``stage_bw``
+      (a separate resource from ``host_in``: the DMA path is full-duplex,
+      so one batch's drain overlaps the next batch's input assembly).
+
+    This is a REFINEMENT of the serial signature, not a replacement: the
+    serial ``latency_s`` (one global roofline max + overhead) is what the
+    synchronous runtime and the envelope charge; the stage decomposition
+    is what the pipelined runtime overlaps. Both are priced from the same
+    node times and the same bytes model (arena when fused, op-by-op
+    otherwise), so sum(stages) tracks the serial latency and
+    max(stages) is the steady-state pipelined batch interval.
+    """
+    from repro.core.opgraph import consumers as _consumers
+
+    if hw is None:
+        hw = BACKEND_HW[backend]
+    q = _quantized_set(graph, backend, quantized)
+    w_bytes = weight_bytes(graph, backend, q, packed_bytes)
+    resident = w_bytes <= hw.onchip_bytes
+    peak = _peak(hw, backend)
+
+    seg_of: Dict[str, int] = {}
+    for si, seg in enumerate(segments):
+        for n in seg.nodes:
+            seg_of[n] = si
+    seg_bytes = [0.0] * max(len(segments), 1)
+    if arena is not None:
+        cons = _consumers(graph)
+        for b in arena.buffers.values():
+            si = seg_of.get(b.name)
+            if b.tier != "ddr" or si is None:
+                continue
+            # written once; read back only if somebody reads it (the
+            # arena's own spill/boundary traffic rule)
+            seg_bytes[si] += b.nbytes * (2 if cons.get(b.name) else 1)
+    else:
+        # op-by-op bytes model: every value round-trips DDR
+        for name in graph.order:
+            node = graph.nodes[name]
+            si = seg_of.get(name)
+            if node.op in ("input", "const") or si is None:
+                continue
+            reads = sum(_act_bytes(graph, i) for i in node.inputs
+                        if graph.nodes[i].op != "const")
+            seg_bytes[si] += _act_bytes(graph, name) + reads
+    if not resident:                    # spilled weights stream per inference
+        for name, si in seg_of.items():
+            seg_bytes[si] += _node_weight_bytes(graph.nodes[name], q,
+                                                packed_bytes)
+
+    in_bytes = sum(_act_bytes(graph, n) for n in graph.graph_inputs) * batch
+    out_bytes = sum(_act_bytes(graph, o) for o in set(graph.outputs)) * batch
+    stages = [StageCost(
+        "stage_in", "host_in",
+        hw.overhead_s + (in_bytes / hw.stage_bw if hw.stage_bw else 0.0))]
+    for si, seg in enumerate(segments):
+        c = 0.0
+        for n in seg.nodes:
+            node = graph.nodes[n]
+            if node_times and n in node_times:
+                c += node_times[n]      # tuned time includes util already
+            else:
+                c += node.ops * batch / peak / hw.util
+            c += hw.dispatch_s * batch
+        m = seg_bytes[si] * batch / hw.hbm_bw
+        stages.append(StageCost(f"seg{si}/{seg.backend}", seg.backend,
+                                max(c, m)))
+    stages.append(StageCost(
+        "readback", "host_out",
+        out_bytes / hw.stage_bw if hw.stage_bw else 0.0))
+    return tuple(stages)
+
+
+def steady_state_overlap(stages: Sequence[StageCost]) -> float:
+    """Asymptotic throughput gain of pipelining this stage chain over a
+    saturated stream: serial per-batch time / longest stage (one batch
+    completes per longest stage once the pipeline fills)."""
+    total = sum(s.seconds for s in stages)
+    longest = max((s.seconds for s in stages), default=0.0)
+    return total / longest if longest > 0 else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StageInterval:
+    """One placed stage occupancy on the timeline."""
+    dispatch: int                   # dispatch ordinal on this timeline
+    stage: str
+    resource: str
+    start: float
+    end: float
+
+
+class PipelineTimeline:
+    """Deterministic per-resource occupancy ledger of the pipelined
+    runtime — the modeled clock's overlap accounting.
+
+    ``add()`` places one dispatch's stage chain in dispatch order: each
+    stage starts at max(its predecessor's finish, its resource's free
+    time, the dispatch's ``earliest`` start — the batch's data-arrival
+    time). The same chain is also appended to a single virtual *serial*
+    resource: the synchronous baseline every overlap speedup is measured
+    against. Pure arithmetic over modeled stage seconds and trace
+    arrival times — machine-independent under ``clock="modeled"``.
+    """
+
+    def __init__(self) -> None:
+        self._free: Dict[str, float] = {}       # resource -> busy-until
+        self._serial_free: Optional[float] = None
+        self.intervals: List[StageInterval] = []
+        self.n_dispatches = 0
+        self._start: Optional[float] = None
+        self._end = 0.0
+        self._serial_start: Optional[float] = None
+        self._serial_end = 0.0
+
+    def add(self, stages: Sequence[StageCost], earliest: float = 0.0
+            ) -> Tuple[float, float]:
+        """Place one dispatch; returns its (start, finish) on the
+        pipelined timeline."""
+        t = float(earliest)
+        first: Optional[float] = None
+        for st in stages:
+            s = max(t, self._free.get(st.resource, t))
+            e = s + st.seconds
+            self._free[st.resource] = e
+            self.intervals.append(StageInterval(
+                self.n_dispatches, st.name, st.resource, s, e))
+            if first is None:
+                first = s
+            t = e
+        total = sum(st.seconds for st in stages)
+        s0 = float(earliest) if self._serial_free is None \
+            else max(float(earliest), self._serial_free)
+        self._serial_free = s0 + total
+        self._serial_start = s0 if self._serial_start is None \
+            else min(self._serial_start, s0)
+        self._serial_end = max(self._serial_end, self._serial_free)
+        if first is not None:
+            self._start = first if self._start is None \
+                else min(self._start, first)
+            self._end = max(self._end, t)
+        self.n_dispatches += 1
+        return (first if first is not None else float(earliest)), t
+
+    @property
+    def span_s(self) -> float:
+        """Pipelined makespan (first stage start to last stage end)."""
+        return self._end - self._start if self._start is not None else 0.0
+
+    @property
+    def serial_span_s(self) -> float:
+        """Makespan of the same dispatches chained on one resource."""
+        return (self._serial_end - self._serial_start
+                if self._serial_start is not None else 0.0)
+
+    @property
+    def speedup_x(self) -> float:
+        """Effective-throughput gain of overlap: serial / pipelined
+        makespan. >= 1 by construction (a stage never starts later on
+        the pipelined timeline than on the serial chain); the clamp only
+        guards float-summation jitter when nothing ever overlapped."""
+        if self.span_s <= 0:
+            return 1.0
+        return max(1.0, self.serial_span_s / self.span_s)
+
+    def busy_s(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for iv in self.intervals:
+            out[iv.resource] = out.get(iv.resource, 0.0) + (iv.end - iv.start)
+        return out
+
+    def report(self) -> Dict:
+        busy = self.busy_s()
+        span = self.span_s
+        return {
+            "n_dispatches": self.n_dispatches,
+            "pipelined_span_s": span,
+            "serial_span_s": self.serial_span_s,
+            "overlap_speedup_x": self.speedup_x,
+            "busy_s": busy,
+            "occupancy": {r: (b / span if span > 0 else 0.0)
+                          for r, b in busy.items()},
+        }
 
 
 # ---------------------------------------------------------------------------

@@ -90,6 +90,59 @@ class ArenaPlan:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass(frozen=True)
+class StagingPlan:
+    """The HOST-side staging arena for one (plan, batch rung): the fixed
+    fp32 batch-buffer shape of every graph input and the slot count the
+    double-buffered pipeline preallocates (DESIGN.md §12).
+
+    Planned statically, like the device arena above: the serving loop
+    reuses these buffers for every dispatch (batch k+1 is assembled in a
+    free slot while batch k computes) instead of allocating a fresh host
+    stack per `jax.device_put`. A slot is owned by its in-flight dispatch
+    until the dispatch's ticket retires — `jax.device_put` may alias host
+    memory, so an owned slot is never rewritten."""
+    graph_name: str
+    batch_size: int
+    slots: int
+    input_shapes: Dict[str, Tuple[int, ...]]    # name -> [B, ...] shape
+
+    @property
+    def input_bytes(self) -> Dict[str, int]:
+        """fp32 bytes of each input buffer, per slot."""
+        return {k: int(np.prod(s, dtype=np.int64)) * 4
+                for k, s in self.input_shapes.items()}
+
+    @property
+    def slot_bytes(self) -> int:
+        return sum(self.input_bytes.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return self.slot_bytes * self.slots
+
+    def summary(self) -> str:
+        return (f"staging[{self.graph_name}/b{self.batch_size}]: "
+                f"{self.slots} slot(s) x {self.slot_bytes:,} B "
+                f"({self.total_bytes:,} B host arena)")
+
+
+def plan_staging(graph: Graph, batch_size: int, slots: int = 2
+                 ) -> StagingPlan:
+    """Size the host staging arena for ``batch_size`` dispatches of
+    ``graph``: one fp32 ``[batch_size, ...]`` buffer per graph input per
+    slot. ``slots=2`` is classic double buffering; more slots deepen the
+    in-flight window the async scheduler may keep open."""
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    if slots < 1:
+        raise ValueError(f"staging needs >= 1 slot, got {slots}")
+    shapes = {name: (batch_size,) + tuple(shape)
+              for name, shape in graph.graph_inputs.items()}
+    return StagingPlan(graph_name=graph.name, batch_size=batch_size,
+                       slots=slots, input_shapes=shapes)
+
+
 def _nbytes(graph: Graph, name: str,
             act_dtype_bytes: Dict[str, int]) -> int:
     shape = graph.nodes[name].out_shape or ()

@@ -3,9 +3,10 @@
 The paper's PYNQ flow is load_ip_input() -> start_ip() -> read_ip_output(),
 with Fig 11 showing input staging *dominating* inference for small models.
 This pipeline reproduces that phase structure and fixes it the way a real
-deployment would: double-buffered staging (stage batch k+1 while batch k
-computes) and micro-batching, with per-phase timing so the staging/compute
-overlap is measurable.
+deployment would: a pool of reusable host staging buffers (batch k+1 is
+assembled while batch k computes), non-blocking dispatch tickets riding
+JAX's async dispatch, and micro-batching, with per-phase timing so the
+staging/compute overlap is measurable.
 
 It also implements the use cases' *decision* layer: selective downlink —
 requests whose model output crosses the trigger predicate are kept
@@ -13,21 +14,32 @@ requests whose model output crosses the trigger predicate are kept
 dropped, and the achieved downlink-reduction ratio is reported (the
 paper's motivating metric).
 
-``ServingPipeline`` is the *single-model, single-batch-size synchronous
-core*: one compiled plan, one padded batch per call. The continuous-
-batching scheduler (core/scheduler.py) composes one pipeline per ladder
-rung and drives :meth:`execute_batch` per dispatch; :meth:`run` is the
-standalone fixed-batch streaming mode over a pre-materialized request
-list.
+``ServingPipeline`` is the *single-model, single-batch-size core*: one
+compiled plan, one padded batch per call. The continuous-batching
+scheduler (core/scheduler.py) composes one pipeline per ladder rung and
+drives :meth:`execute_batch` (or :meth:`execute_batch_async` in pipelined
+mode) per dispatch; :meth:`run` is the standalone fixed-batch streaming
+mode over a pre-materialized request list.
+
+Synchronization contract (DESIGN.md §12): no path here ever calls
+``jax.block_until_ready``. A dispatch's outputs are forced — one
+``np.asarray`` per output, which blocks on exactly that batch — when its
+:class:`DispatchTicket` retires: immediately in :meth:`execute_batch`,
+lazily (slot-pool exhaustion, stream end, or an explicit :meth:`sync`
+telemetry barrier) in the pipelined paths.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterable, List, Optional
+from collections import deque
+from typing import (Callable, Deque, Dict, Iterable, List, Optional,
+                    Tuple)
 
 import jax
 import numpy as np
+
+from repro.core import memory as memory_mod
 
 
 @dataclasses.dataclass
@@ -35,7 +47,7 @@ class PhaseTimes:
     stage_in: float = 0.0
     compute: float = 0.0
     stage_out: float = 0.0
-    overlapped: float = 0.0         # wall time saved by double buffering
+    overlapped: float = 0.0         # wall time saved by pipelining
 
     @property
     def serial(self) -> float:
@@ -61,7 +73,9 @@ class ServeStats:
 @dataclasses.dataclass
 class BatchResult:
     """One dispatched batch: host outputs sliced back to the real requests,
-    the per-request selective-downlink verdicts, and per-phase timings."""
+    the per-request selective-downlink verdicts, and per-phase timings.
+    ``compute_time`` spans dispatch to retirement (it includes the async
+    wait when the ticket retired late)."""
     outputs: Dict[str, np.ndarray]      # [n_real, ...] — padding sliced off
     keep: List[bool]                    # per real request
     stage_time: float
@@ -77,8 +91,9 @@ def stage_batch(reqs: List[Dict[str, np.ndarray]], batch_size: int
                 ) -> Dict[str, jax.Array]:
     """Stack request dicts into one ``[batch_size, ...]`` device batch,
     padding a ragged tail by repeating the last sample (the padding rows
-    are sliced off after compute). The single staging/padding path shared
-    by the fixed-batch pipeline and the scheduler's ladder dispatches.
+    are sliced off after compute). The freshly-allocating fallback of the
+    arena staging path below — and the reference its bit-exactness is
+    tested against.
 
     Assembly is host-side NumPy on purpose: staging must cost one device
     transfer, never an XLA compile — jnp stacking would recompile for
@@ -96,24 +111,127 @@ def stage_batch(reqs: List[Dict[str, np.ndarray]], batch_size: int
     return jax.device_put(batch)
 
 
+class HostStagingArena:
+    """The pool of reusable host batch buffers a :class:`StagingPlan`
+    sizes: ``slots`` preallocated fp32 ``[B, ...]`` NumPy buffers per
+    graph input, filled in place per dispatch instead of re-allocating a
+    fresh stack for every ``jax.device_put``.
+
+    Donation invariant (DESIGN.md §12): ``acquire()`` transfers slot
+    ownership to the dispatch being staged; the slot returns to the free
+    pool only when that dispatch's ticket retires. ``jax.device_put``
+    may alias host memory on CPU backends, so an owned slot is NEVER
+    rewritten while its batch is in flight. ``stage()`` writes every row
+    (real rows then ragged padding), so slot reuse can never leak a
+    previous batch's samples."""
+
+    def __init__(self, staging: memory_mod.StagingPlan):
+        self.staging = staging
+        self._bufs = [
+            {k: np.empty(shape, np.float32)
+             for k, shape in staging.input_shapes.items()}
+            for _ in range(staging.slots)]
+        self._free: Deque[int] = deque(range(staging.slots))
+        self.n_staged = 0           # dispatches staged through a slot
+        self.n_fallback = 0         # pool-exhausted fresh allocations
+
+    @property
+    def n_slots(self) -> int:
+        return self.staging.slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Take a free slot (None when the pool is exhausted — callers
+        fall back to a fresh `stage_batch` allocation, never deadlock)."""
+        return self._free.popleft() if self._free else None
+
+    def release(self, slot: int) -> None:
+        self._free.append(slot)
+
+    def stage(self, slot: int, reqs: List[Dict[str, np.ndarray]]
+              ) -> Dict[str, np.ndarray]:
+        """Fill ``slot`` in place with ``reqs`` (+ repeat-last padding);
+        returns the slot's buffer dict. Bit-identical to `stage_batch`:
+        the same fp32 casts, the same padding rule."""
+        n = len(reqs)
+        bufs = self._bufs[slot]
+        for k, buf in bufs.items():
+            for i, r in enumerate(reqs):
+                buf[i] = np.asarray(r[k], np.float32)
+            if n < self.staging.batch_size:
+                buf[n:] = buf[n - 1]
+        self.n_staged += 1
+        return bufs
+
+
+@dataclasses.dataclass
+class DispatchTicket:
+    """One in-flight dispatched batch: unforced device outputs plus the
+    staging slot the dispatch owns. ``retire()`` forces the outputs to
+    host (np.asarray — blocks on exactly this batch), runs the keep
+    predicate, releases the slot back to the pool, and returns the
+    :class:`BatchResult`. Idempotent: later calls return the cached
+    result."""
+    pipeline: "ServingPipeline"
+    outputs: Dict[str, jax.Array]
+    n_real: int
+    slot: Optional[int]
+    stage_time: float
+    dispatched_at: float                # perf_counter at dispatch
+    _result: Optional[BatchResult] = None
+
+    @property
+    def retired(self) -> bool:
+        return self._result is not None
+
+    def retire(self) -> BatchResult:
+        if self._result is not None:
+            return self._result
+        host_out = self.pipeline._unstage(self.outputs, self.n_real)
+        t1 = time.perf_counter()
+        keep = self.pipeline._keep(host_out, self.n_real)
+        t2 = time.perf_counter()
+        if self.slot is not None:
+            self.pipeline.arena.release(self.slot)
+            self.slot = None
+        self.outputs = {}               # drop the device references
+        try:
+            self.pipeline._inflight.remove(self)
+        except ValueError:
+            pass
+        self._result = BatchResult(
+            host_out, keep, stage_time=self.stage_time,
+            compute_time=t1 - self.dispatched_at, output_time=t2 - t1)
+        return self._result
+
+
 class ServingPipeline:
-    """Micro-batched, double-buffered inference over a request stream.
+    """Micro-batched, pipelined inference over a request stream.
 
     Uses the engine's staged plan cache: ONE compiled batched executable
     per (backend, batch_size), built up front — the serving loop never
     re-traces. Ragged final chunks are padded up to the plan's batch size
     (and the padding sliced off), so a request stream of any length hits
-    exactly one executable.
+    exactly one executable. ``staging_buffers`` sizes the host staging
+    arena (2 = classic double buffering).
     """
 
     def __init__(self, engine, backend: str = "flex",
                  batch_size: int = 16,
-                 keep_predicate: Optional[Callable] = None):
+                 keep_predicate: Optional[Callable] = None,
+                 staging_buffers: int = 2):
         self.engine = engine
         self.backend = backend
         self.batch_size = batch_size
         self.keep_predicate = keep_predicate
         self._plan = engine.compile(backend, batch_size)
+        self.staging = memory_mod.plan_staging(
+            self._plan.plan.graph, batch_size, staging_buffers)
+        self.arena = HostStagingArena(self.staging)
+        self._inflight: Deque[DispatchTicket] = deque()
 
     @property
     def cost(self):
@@ -122,15 +240,50 @@ class ServingPipeline:
         and charges the power envelope with."""
         return self._plan.cost
 
-    def _stage(self, reqs: List[Dict[str, np.ndarray]]) -> Dict[str, jax.Array]:
-        return stage_batch(reqs, self.batch_size)
+    @property
+    def stages(self):
+        """The plan's pipeline-stage decomposition (energy.StageCost
+        tuple) — what the scheduler's overlap ledger prices dispatches
+        with."""
+        return self._plan.stages
 
-    def _compute(self, staged: Dict[str, jax.Array], rng: jax.Array):
-        """One plan call; returns (device outputs, carried-over rng)."""
+    def _stage(self, reqs: List[Dict[str, np.ndarray]]
+               ) -> Tuple[Dict[str, jax.Array], Optional[int]]:
+        """Stage one batch into an arena slot (in-place reuse), falling
+        back to a fresh `stage_batch` allocation when the pool is dry.
+        Returns (device batch, owned slot or None)."""
+        if not reqs:
+            raise ValueError("stage_batch needs at least one request")
+        if len(reqs) > self.batch_size:
+            raise ValueError(
+                f"{len(reqs)} requests > batch size {self.batch_size}")
+        slot = self.arena.acquire()
+        if slot is None:
+            self.arena.n_fallback += 1
+            return stage_batch(reqs, self.batch_size), None
+        host = self.arena.stage(slot, reqs)
+        return jax.device_put(host), slot
+
+    def _dispatch(self, staged: Dict[str, jax.Array], rng: jax.Array
+                  ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+        """One plan call — async dispatch, nothing forced; returns
+        (unforced device outputs, carried-over rng)."""
         rngs = jax.random.split(rng, self.batch_size + 1)
-        out = self._plan(staged, rngs[1:])
-        jax.block_until_ready(out)
-        return out, rngs[0]
+        return self._plan(staged, rngs[1:]), rngs[0]
+
+    def _issue(self, staged: Dict[str, jax.Array], slot: Optional[int],
+               n_real: int, stage_time: float, rng: jax.Array
+               ) -> Tuple[DispatchTicket, jax.Array]:
+        try:
+            out, carry = self._dispatch(staged, rng)
+        except BaseException:
+            if slot is not None:        # dispatch failed: slot back to pool
+                self.arena.release(slot)
+            raise
+        ticket = DispatchTicket(self, out, n_real, slot, stage_time,
+                                time.perf_counter())
+        self._inflight.append(ticket)
+        return ticket, carry
 
     def _unstage(self, out: Dict[str, jax.Array], n_real: int
                  ) -> Dict[str, np.ndarray]:
@@ -145,26 +298,50 @@ class ServingPipeline:
 
     # -- the scheduler's dispatch core --------------------------------------
 
-    def execute_batch(self, reqs: List[Dict[str, np.ndarray]],
-                      rng: Optional[jax.Array] = None) -> BatchResult:
-        """Serve exactly ONE (possibly ragged) batch synchronously:
-        stage + pad -> compiled plan -> slice padding -> keep predicate."""
+    def execute_batch_async(self, reqs: List[Dict[str, np.ndarray]],
+                            rng: Optional[jax.Array] = None
+                            ) -> DispatchTicket:
+        """Stage + dispatch ONE (possibly ragged) batch WITHOUT forcing
+        the result: staging is synchronous host work, the plan call rides
+        JAX's async dispatch, and the returned ticket owns the staging
+        slot until `retire()`."""
         if rng is None:
             rng = jax.random.PRNGKey(0)
         t0 = time.perf_counter()
-        staged = self._stage(reqs)
+        staged, slot = self._stage(reqs)
         t1 = time.perf_counter()
-        out, _ = self._compute(staged, rng)
-        t2 = time.perf_counter()
-        host_out = self._unstage(out, len(reqs))
-        keep = self._keep(host_out, len(reqs))
-        t3 = time.perf_counter()
-        return BatchResult(host_out, keep, stage_time=t1 - t0,
-                           compute_time=t2 - t1, output_time=t3 - t2)
+        ticket, _ = self._issue(staged, slot, len(reqs), t1 - t0, rng)
+        return ticket
+
+    def execute_batch(self, reqs: List[Dict[str, np.ndarray]],
+                      rng: Optional[jax.Array] = None) -> BatchResult:
+        """Serve exactly ONE (possibly ragged) batch and return its forced
+        result: stage + pad -> compiled plan -> slice padding -> keep
+        predicate. Synchronous from the caller's view, but with NO
+        `jax.block_until_ready` barrier: retiring the ticket forces only
+        this batch's outputs (np.asarray), never the whole device queue."""
+        return self.execute_batch_async(reqs, rng=rng).retire()
+
+    def sync(self) -> None:
+        """Retire every in-flight ticket — the telemetry-flush barrier of
+        the pipelined paths."""
+        while self._inflight:
+            self._inflight[0].retire()
 
     # -- standalone fixed-batch streaming mode ------------------------------
 
-    def run(self, requests: Iterable[Dict[str, np.ndarray]]) -> ServeStats:
+    def run(self, requests: Iterable[Dict[str, np.ndarray]],
+            pipeline: bool = True) -> ServeStats:
+        """Stream ``requests`` through fixed-size batches.
+
+        ``pipeline=True`` (default): batch k+1 is staged into a free
+        arena slot and dispatched while batch k's async dispatch is still
+        computing; tickets retire lazily when the slot pool runs dry and
+        once at stream end (the telemetry flush). ``overlapped`` is the
+        MEASURED saving: serial phase sum minus end-to-end wall time.
+
+        ``pipeline=False``: strictly serial stage -> compute -> readback
+        per batch (each ticket retires before the next dispatch)."""
         reqs = list(requests)
         phases = PhaseTimes()
         if not reqs:                        # empty stream: zero-request stats
@@ -174,38 +351,34 @@ class ServingPipeline:
         batches = [reqs[i:i + self.batch_size]
                    for i in range(0, len(reqs), self.batch_size)]
 
-        staged = None
-        stage_times: List[float] = []
-        for bi, chunk in enumerate(batches):
-            if staged is None:                       # first batch: no overlap
-                t0 = time.perf_counter()
-                staged = self._stage(chunk)
-                stage_times.append(time.perf_counter() - t0)
-            current = staged
+        tickets: Deque[DispatchTicket] = deque()
 
+        def _retire_next() -> None:
+            nonlocal kept
+            res = tickets.popleft().retire()
+            kept += sum(res.keep)
+            phases.stage_in += res.stage_time
+            phases.compute += res.compute_time
+            phases.stage_out += res.output_time
+
+        wall0 = time.perf_counter()
+        for chunk in batches:
+            if pipeline:
+                # lazy retirement: only when the pool would starve
+                while tickets and self.arena.n_free == 0:
+                    _retire_next()
             t0 = time.perf_counter()
-            out, rng = self._compute(current, rng)
-            compute_t = time.perf_counter() - t0
+            staged, slot = self._stage(chunk)
+            stage_t = time.perf_counter() - t0
+            ticket, rng = self._issue(staged, slot, len(chunk), stage_t, rng)
+            tickets.append(ticket)
+            if not pipeline:
+                _retire_next()
+        while tickets:                      # stream-end flush
+            _retire_next()
+        wall = time.perf_counter() - wall0
 
-            # double buffering: stage the NEXT batch while this one computes
-            # (sequenced here; on hardware the DMA engine runs concurrently —
-            # we credit min(stage, compute) as overlapped)
-            staged = None
-            stage_t = 0.0
-            if bi + 1 < len(batches):
-                t0 = time.perf_counter()
-                staged = self._stage(batches[bi + 1])
-                stage_t = time.perf_counter() - t0
-                stage_times.append(stage_t)
-            phases.compute += compute_t
-            phases.overlapped += min(stage_t, compute_t)
-
-            t0 = time.perf_counter()
-            host_out = self._unstage(out, len(chunk))
-            kept += sum(self._keep(host_out, len(chunk)))
-            phases.stage_out += time.perf_counter() - t0
-
-        phases.stage_in = sum(stage_times)
-        fps = len(reqs) / max(phases.wall, 1e-12)
+        phases.overlapped = max(phases.serial - wall, 0.0)
+        fps = len(reqs) / max(wall, 1e-12)
         return ServeStats(n_requests=len(reqs), n_kept=kept, phases=phases,
                           fps=fps)

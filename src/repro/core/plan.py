@@ -506,6 +506,43 @@ class ExecutionPlan:
             self.graph, backend or self.backend, batch_size,
             quantized=self._quantized_names())
 
+    def stage_costs(self, batch_size: int,
+                    backend: Optional[str] = None
+                    ) -> Tuple[energy_mod.StageCost, ...]:
+        """The plan's pipeline-stage decomposition at ``batch_size``
+        (DESIGN.md §12): host stage_in -> one stage per segment on its
+        backend resource -> host readback. Priced from the same node
+        times (tuned when the autotuner ran) and the same bytes model as
+        the serial signature. The ``backend`` override (the EagerPlan
+        cpu view) has no staging channel or segment pipeline — it is one
+        monolithic eager stage."""
+        if backend is not None and backend != self.backend:
+            sig = self.cost_signature(batch_size, backend=backend)
+            return (energy_mod.StageCost("eager", backend, sig.latency_s),)
+        node_times = None
+        if self.tuner is not None:
+            self._ensure_autotuned(batch_size)
+            node_times = {n: d.modeled_s
+                          for n, d in self._tuning[batch_size].items()}
+        return energy_mod.stage_costs(
+            self.graph, self.backend, batch_size, self.segments,
+            arena=self.arena, quantized=self._quantized_names(),
+            node_times=node_times,
+            packed_bytes=self._packed_bytes or None)
+
+    def pipelined_cost_signature(self, batch_size: int,
+                                 backend: Optional[str] = None
+                                 ) -> energy_mod.CostSignature:
+        """`cost_signature` with the pipelined-latency term filled in:
+        the longest stage of `stage_costs` — the steady-state per-batch
+        interval when staging, segment compute, and readback overlap
+        across batches. Every other field (latency_s, energy_j, ...) is
+        byte-for-byte the serial signature."""
+        sig = self.cost_signature(batch_size, backend=backend)
+        stages = self.stage_costs(batch_size, backend=backend)
+        return dataclasses.replace(
+            sig, pipelined_latency_s=max(s.seconds for s in stages))
+
     def default_cost_signature(self, batch_size: int
                                ) -> energy_mod.CostSignature:
         """The heuristic-default configs priced through the SAME
@@ -698,7 +735,8 @@ class CompiledPlan:
         self.plan = plan
         self.batch_size = batch_size
         self._executable = executable
-        self.cost = plan.cost_signature(batch_size)
+        self.cost = plan.pipelined_cost_signature(batch_size)
+        self.stages = plan.stage_costs(batch_size)
 
     @property
     def n_traces(self) -> int:
@@ -717,7 +755,8 @@ class EagerPlan:
         self.plan = plan
         self.batch_size = batch_size
         self._fn = plan.batched_fn()
-        self.cost = plan.cost_signature(batch_size, backend="cpu")
+        self.cost = plan.pipelined_cost_signature(batch_size, backend="cpu")
+        self.stages = plan.stage_costs(batch_size, backend="cpu")
 
     @property
     def n_traces(self) -> int:

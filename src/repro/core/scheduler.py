@@ -40,6 +40,17 @@ Execution of one dispatched batch is delegated to
 *when and how many*, the pipeline owns *staging, padding, compute, and
 the keep predicate*.
 
+``pipeline=True`` (DESIGN.md §12) switches dispatch to the ASYNC ticket
+path: ``execute_batch_async`` returns without forcing the outputs, up to
+``staging_buffers`` dispatches stay in flight (each owning a reusable
+host staging slot), and tickets retire lazily — at slot-pool pressure,
+at every telemetry boundary, and at stream end. EWMA service times are
+observed at ticket retirement. Dispatch DECISIONS are unchanged, and
+under ``clock="modeled"`` pipelined serving is dispatch-for-dispatch and
+bit-exact identical to ``pipeline=False``; the overlap a pipelined
+deployment would realize is priced by a deterministic per-resource
+occupancy ledger (``overlap_report()``).
+
 Two driving modes share the same ``step()`` core:
 
 * ``serve_trace(trace)`` — deterministic virtual-clock simulation:
@@ -61,8 +72,10 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.energy import CostSignature, Draw, PowerEnvelope
-from repro.core.pipeline import BatchResult, ServingPipeline
+from repro.core.energy import (CostSignature, Draw, PipelineTimeline,
+                               PowerEnvelope, StageCost)
+from repro.core.pipeline import (BatchResult, DispatchTicket,
+                                 ServingPipeline)
 
 DEFAULT_LADDER = (1, 4, 16, 32)
 BACKENDS = ("cpu", "flex", "accel")
@@ -148,6 +161,24 @@ class DispatchRecord:
     @property
     def modeled_latency_s(self) -> float:
         return self.energy_j / self.power_w if self.power_w > 0 else 0.0
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """A dispatched-but-unretired batch in pipelined mode: everything the
+    scheduler needs to finish the bookkeeping (EWMA observation, the
+    measured service rewrite, completions) when the ticket retires."""
+    ticket: DispatchTicket
+    reqs: List[Request]
+    svc: "_ModelService"
+    backend: str
+    rung: int
+    n_real: int
+    started: float                      # virtual dispatch time
+    sig: CostSignature
+    draw: Optional[Draw]
+    rec_idx: int                        # index into scheduler.dispatches
+    t0: float                           # wall perf_counter at dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +272,11 @@ class _ModelService:
             sorted(pipelines[self.backends[0]]))
         self.costs: Dict[Tuple[str, int], CostSignature] = {
             (b, r): p.cost
+            for b, rungs in pipelines.items() for r, p in rungs.items()}
+        # the plans' stage decompositions — what the pipelined overlap
+        # ledger prices each dispatch with
+        self.stages: Dict[Tuple[str, int], Tuple[StageCost, ...]] = {
+            (b, r): p.stages
             for b, rungs in pipelines.items() for r, p in rungs.items()}
         self.deadline_s = deadline_s
         self.flush_safety = flush_safety
@@ -352,12 +388,25 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, flush_safety: float = 2.0,
                  envelope: Optional[PowerEnvelope] = None,
-                 clock: str = "measured"):
+                 clock: str = "measured",
+                 pipeline: bool = False,
+                 staging_buffers: int = 2):
         if clock not in ("measured", "modeled"):
             raise ValueError(f"clock must be measured|modeled, got {clock}")
+        if staging_buffers < 1:
+            raise ValueError(
+                f"staging_buffers must be >= 1, got {staging_buffers}")
         self.flush_safety = flush_safety
         self.envelope = envelope
         self.clock = clock
+        self.pipeline = bool(pipeline)
+        self.staging_buffers = int(staging_buffers)
+        # dispatched-but-unretired tickets, FIFO in dispatch order; depth
+        # is capped at staging_buffers (retiring the oldest frees its
+        # host slot before a new dispatch would need one)
+        self._inflight: Deque[_Inflight] = deque()
+        self.timeline: Optional[PipelineTimeline] = (
+            PipelineTimeline() if pipeline else None)
         self._svcs: Dict[str, _ModelService] = {}
         self._order: List[str] = []     # round-robin rotation
         self._rr = 0
@@ -398,7 +447,8 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"bad ladder {ladder}")
         pipelines = {
             b: {r: ServingPipeline(engine, backend=b, batch_size=r,
-                                   keep_predicate=keep_predicate)
+                                   keep_predicate=keep_predicate,
+                                   staging_buffers=self.staging_buffers)
                 for r in ladder}
             for b in backends}
         if deadline_s is None:
@@ -544,6 +594,10 @@ class ContinuousBatchingScheduler:
             rng = svc.next_rng()
             sig = svc.costs[(backend, rung)]
 
+        if self.pipeline:
+            return self._step_pipelined(svc, reqs, backend, rung, n_real,
+                                        mode, now, sig, draw, rng)
+
         t0 = time.perf_counter()
         try:
             result: BatchResult = svc.pipelines[backend][rung].execute_batch(
@@ -574,6 +628,114 @@ class ContinuousBatchingScheduler:
                     result.keep[i], req.arrival, finished, rung, n_real,
                     req.deadline))
             return rec
+
+    # -- pipelined dispatch (DESIGN.md §12) ---------------------------------
+
+    def _step_pipelined(self, svc: _ModelService, reqs: List[Request],
+                        backend: str, rung: int, n_real: int, mode: str,
+                        now: float, sig: CostSignature,
+                        draw: Optional[Draw], rng: jax.Array
+                        ) -> DispatchRecord:
+        """The non-blocking tail of one picked dispatch: issue an async
+        ticket, append the dispatch record immediately, and defer EWMA +
+        completions to retirement. The dispatch DECISION (queue pops,
+        envelope draw, rung) already happened in `step` — identical to
+        the synchronous path by construction, and under the modeled
+        clock every recorded number (service_time, finished) is the same
+        cost-signature latency the synchronous path records, so
+        pipelined serving is dispatch-for-dispatch and bit-exact
+        identical to ``pipeline=False``."""
+        # retiring the oldest ticket(s) first keeps at most
+        # staging_buffers dispatches in flight — so every pipeline's
+        # slot pool can double-buffer instead of falling back to fresh
+        # allocations
+        self._drain_inflight(self.staging_buffers - 1)
+        t0 = time.perf_counter()
+        try:
+            ticket = svc.pipelines[backend][rung].execute_batch_async(
+                [r.inputs for r in reqs], rng=rng)
+        except BaseException:
+            # staging runs synchronously inside the async dispatch, so a
+            # poison request surfaces HERE — same recovery as the
+            # synchronous path: batch back at the queue head, draw
+            # refunded
+            with self._lock:
+                svc.queue.extendleft(reversed(reqs))
+                if draw is not None:
+                    self.envelope.remove(draw)
+            raise
+        dispatch_s = time.perf_counter() - t0
+        # modeled clock: the dispatch occupies its modeled latency (the
+        # identical virtual-clock advance the synchronous path makes).
+        # measured clock: the server is only busy for the non-blocking
+        # dispatch call — overlap is the point — and the record's
+        # service_time is rewritten to the true dispatch->retirement
+        # time when the ticket retires.
+        service = sig.latency_s if self.clock == "modeled" else dispatch_s
+        with self._lock:
+            rec = DispatchRecord(svc.name, rung, n_real, now, service, mode,
+                                 backend=backend, energy_j=sig.energy_j,
+                                 power_w=sig.power_w)
+            rec_idx = len(self.dispatches)
+            self.dispatches.append(rec)
+            self._inflight.append(_Inflight(
+                ticket, reqs, svc, backend, rung, n_real, now, sig, draw,
+                rec_idx, t0))
+            if self.timeline is not None:
+                # overlap accounting: the pipelined deployment could
+                # start this batch's staging as soon as its data had
+                # arrived and the host channel was free
+                self.timeline.add(svc.stages[(backend, rung)],
+                                  earliest=max(r.arrival for r in reqs))
+        return rec
+
+    def _retire(self, inf: _Inflight) -> None:
+        """Finish one in-flight dispatch: force its outputs (releasing
+        the staging slot), observe the EWMA service time from ticket
+        retirement, and emit its completions (FIFO retirement keeps
+        completion order identical to the synchronous path)."""
+        try:
+            result = inf.ticket.retire()
+        except BaseException:
+            # no silent loss on an async failure either: batch back at
+            # the queue head, draw refunded (the dispatch record stays —
+            # the dispatch DID happen — but its requests are requeued)
+            with self._lock:
+                inf.svc.queue.extendleft(reversed(inf.reqs))
+                if inf.draw is not None:
+                    self.envelope.remove(inf.draw)
+            raise
+        measured = time.perf_counter() - inf.t0
+        service = inf.sig.latency_s if self.clock == "modeled" else measured
+        with self._lock:
+            inf.svc.observe_service(inf.backend, inf.rung, service)
+            if self.clock != "modeled":
+                # telemetry should report the true dispatch->retirement
+                # service; the virtual clock already advanced by the
+                # non-blocking dispatch time at dispatch
+                self.dispatches[inf.rec_idx] = dataclasses.replace(
+                    self.dispatches[inf.rec_idx], service_time=service)
+            finished = inf.started + service
+            for i, req in enumerate(inf.reqs):
+                self.completions.append(Completion(
+                    req.rid, req.model,
+                    {k: v[i] for k, v in result.outputs.items()},
+                    result.keep[i], req.arrival, finished, inf.rung,
+                    inf.n_real, req.deadline))
+
+    def _drain_inflight(self, keep: int = 0) -> None:
+        """Retire oldest-first until at most ``keep`` remain in flight."""
+        while True:
+            with self._lock:
+                if len(self._inflight) <= keep:
+                    return
+                inf = self._inflight.popleft()
+            self._retire(inf)
+
+    def sync(self) -> None:
+        """Retire every in-flight ticket — the telemetry/stream barrier.
+        A no-op in synchronous mode (nothing is ever in flight)."""
+        self._drain_inflight(0)
 
     def _earliest_admit(self, svc: _ModelService, rung: int, now: float
                         ) -> Optional[float]:
@@ -639,6 +801,7 @@ class ContinuousBatchingScheduler:
                     "power envelope can never admit the remaining queued "
                     "dispatches; widen the budget")
             now = max(min(admits), now + 1e-9)
+        self.sync()                     # end of stream: retire everything
         return now
 
     # -- virtual-clock trace serving ----------------------------------------
@@ -675,6 +838,7 @@ class ContinuousBatchingScheduler:
             # guarantee progress: a blocked queue's next event must move
             # the clock strictly forward
             now = max(now + 1e-9, nxt) if nxt <= now else nxt
+        self.sync()                     # end of stream: retire everything
         return now
 
     # -- asynchronous (wall-clock) mode -------------------------------------
@@ -714,11 +878,14 @@ class ContinuousBatchingScheduler:
             err, self._thread_error = self._thread_error, None
             raise err
         if drain:
-            self.drain(time.monotonic())
+            self.drain(time.monotonic())    # drain() ends with sync()
+        else:
+            self.sync()
 
     # -- telemetry ----------------------------------------------------------
 
     def telemetry(self) -> Dict[str, ModelTelemetry]:
+        self.sync()     # telemetry boundary: retire in-flight tickets first
         with self._lock:
             out: Dict[str, ModelTelemetry] = {}
             for name, svc in self._svcs.items():
@@ -764,6 +931,13 @@ class ContinuousBatchingScheduler:
         count — which admission-time checking keeps at zero."""
         return None if self.envelope is None else self.envelope.audit()
 
+    def overlap_report(self) -> Optional[Dict]:
+        """The pipelined overlap ledger (None when pipeline=False):
+        pipelined vs serialized makespan of the dispatched stage chains,
+        the effective-throughput speedup, and per-resource occupancy.
+        Deterministic and machine-independent under clock="modeled"."""
+        return None if self.timeline is None else self.timeline.report()
+
     def summary(self) -> str:
         lines = []
         for name, tel in self.telemetry().items():
@@ -791,4 +965,13 @@ class ContinuousBatchingScheduler:
                 f"{rep['n_draws']} draws  duty={rep['duty_cycle']:.1%}  "
                 f"max-window={rep['max_window_w']:.2f} W  "
                 f"violations={rep['n_violations']}")
+        ov = self.overlap_report()
+        if ov is not None and ov["n_dispatches"]:
+            occ = " ".join(f"{r}:{o:.0%}" for r, o in
+                           sorted(ov["occupancy"].items()))
+            lines.append(
+                f"[pipeline] modeled overlap {ov['overlap_speedup_x']:.2f}x "
+                f"({ov['serial_span_s']:.4f} s serial -> "
+                f"{ov['pipelined_span_s']:.4f} s pipelined over "
+                f"{ov['n_dispatches']} dispatches)  occupancy[{occ}]")
         return "\n".join(lines)

@@ -93,7 +93,12 @@ def serve_space(args) -> int:
     if (args.tuning_cache or args.autotune_measure) and not args.autotune:
         raise SystemExit("--tuning-cache/--autotune-measure configure the "
                          "plan-time autotuner; pass --autotune to enable it")
-    sched = ContinuousBatchingScheduler(envelope=envelope, clock=args.clock)
+    sched = ContinuousBatchingScheduler(envelope=envelope, clock=args.clock,
+                                        pipeline=args.pipeline,
+                                        staging_buffers=args.staging_buffers)
+    if args.pipeline:
+        print(f"[pipeline] async ticket dispatch on, "
+              f"{args.staging_buffers} staging buffer(s) per (model, rung)")
     trace = []
     for mi, name in enumerate(names):
         m = SPACE_MODELS[name]
@@ -208,6 +213,16 @@ def main(argv=None) -> int:
                     choices=["measured", "modeled"],
                     help="virtual-clock source: host wall time per batch "
                          "or the plan's modeled latency (deterministic)")
+    ap.add_argument("--pipeline", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="async pipelined dispatch (DESIGN.md §12): "
+                         "staging/compute/readback overlap across "
+                         "batches; --no-pipeline reproduces the fully "
+                         "synchronous path (identical dispatches and "
+                         "outputs)")
+    ap.add_argument("--staging-buffers", type=int, default=2,
+                    help="host staging slots per (model, rung) = max "
+                         "in-flight dispatches (2 = double buffering)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="skip the graph-compiler pass pipeline "
                          "(DESIGN.md §10) and serve the op-by-op plans")

@@ -1,0 +1,394 @@
+"""Async pipelined runtime (DESIGN.md §12): stage decomposition, the
+overlap ledger, ticket lifecycle, and scheduler identity.
+
+* Stage decomposition: every plan yields a positive stage chain whose
+  longest stage is the signature's ``pipelined_latency_s``; resources
+  come from {host, accel, flex, cpu}; the decomposition is deterministic.
+* PipelineTimeline: per-resource intervals never overlap, the pipelined
+  makespan never exceeds the serialized one (speedup >= 1), and the
+  ledger is pure arithmetic (same inputs -> same report).
+* Tickets: ``execute_batch_async().retire()`` is bit-identical to
+  ``execute_batch``; retirement is idempotent, releases the staging
+  slot, and the pool falls back to fresh allocation (never deadlocks)
+  when over-subscribed.
+* Scheduler identity: with ``clock="modeled"``, ``pipeline=True`` is
+  dispatch-for-dispatch and bit-exact identical to ``pipeline=False``
+  (which is the PR-5 synchronous path) — including under a power
+  envelope — while the overlap ledger prices the pipelining.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.energy import (BACKEND_HW, PipelineTimeline, PowerEnvelope,
+                               StageCost, steady_state_overlap)
+from repro.core.engine import Engine
+from repro.core.pipeline import ServingPipeline
+from repro.core.scheduler import ContinuousBatchingScheduler, bursty_arrivals
+from repro.models import SPACE_MODELS, synthetic_requests
+
+MODELS = ("logistic_net", "multi_esperta")
+
+
+@pytest.fixture(scope="module")
+def engines():
+    out = {}
+    for name in MODELS:
+        m = SPACE_MODELS[name]
+        e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                     for i in range(2)])
+        out[name] = (m, e)
+    return out
+
+
+def _requests(m, n, seed=3):
+    return synthetic_requests(m, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# stage decomposition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["cpu", "flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_stage_costs_invariants(name, backend, engines):
+    _, e = engines[name]
+    plan = e.planned("flex" if backend == "cpu" else backend)
+    stages = plan.stage_costs(4, backend="cpu" if backend == "cpu" else None)
+    assert stages
+    assert all(s.seconds >= 0.0 for s in stages)
+    assert all(s.resource in ("host_in", "host_out", "accel", "flex", "cpu")
+               for s in stages)
+    longest = max(s.seconds for s in stages)
+    assert longest <= sum(s.seconds for s in stages)
+    # deterministic: same decomposition on every call
+    assert plan.stage_costs(
+        4, backend="cpu" if backend == "cpu" else None) == stages
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_pipelined_latency_is_longest_stage(name, backend, engines):
+    _, e = engines[name]
+    plan = e.planned(backend)
+    sig = e.compile(backend, 4).cost
+    stages = plan.stage_costs(4)
+    assert sig.pipelined_latency_s == pytest.approx(
+        max(s.seconds for s in stages))
+    # the serial fields are untouched by the pipelined term
+    base = plan.cost_signature(4)
+    assert dataclasses.replace(
+        sig, pipelined_latency_s=base.pipelined_latency_s) == base
+
+
+def test_stage_costs_host_stages_use_staging_bw(engines):
+    """FPGA backends model a host staging channel (stage_bw > 0), so
+    stage_in covers the per-dispatch overhead PLUS the input bytes at the
+    staging bandwidth — larger batches stage longer."""
+    _, e = engines["logistic_net"]
+    plan = e.planned("accel")
+    hw = BACKEND_HW["accel"]
+    assert hw.stage_bw > 0
+    s4 = plan.stage_costs(4)[0]
+    s16 = plan.stage_costs(16)[0]
+    assert s4.name == "stage_in" and s4.resource == "host_in"
+    assert s4.seconds > hw.overhead_s
+    assert s16.seconds > s4.seconds
+
+
+def test_steady_state_overlap_formula():
+    stages = (StageCost("stage_in", "host", 2.0),
+              StageCost("seg0/accel", "accel", 3.0),
+              StageCost("readback", "host", 1.0))
+    assert steady_state_overlap(stages) == pytest.approx(6.0 / 3.0)
+    assert steady_state_overlap(()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# the overlap ledger
+# ---------------------------------------------------------------------------
+
+
+def _chain(a, b, c):
+    return (StageCost("stage_in", "host_in", a),
+            StageCost("seg0/accel", "accel", b),
+            StageCost("readback", "host_out", c))
+
+
+def test_timeline_overlaps_distinct_resources():
+    tl = PipelineTimeline()
+    for _ in range(8):
+        tl.add(_chain(1.0, 1.0, 0.0), earliest=0.0)
+    # steady state: one batch per longest stage; serial: 2.0 per batch
+    assert tl.serial_span_s == pytest.approx(16.0)
+    assert tl.span_s == pytest.approx(9.0)      # 2.0 fill + 7 x 1.0
+    assert tl.speedup_x > 1.7
+    rep = tl.report()
+    assert rep["n_dispatches"] == 8
+    assert 0.0 < rep["occupancy"]["accel"] <= 1.0
+
+
+def test_timeline_per_resource_intervals_never_overlap():
+    tl = PipelineTimeline()
+    for i in range(6):
+        tl.add(_chain(0.5, 1.5, 0.25), earliest=0.1 * i)
+    by_res = {}
+    for iv in tl.intervals:
+        by_res.setdefault(iv.resource, []).append(iv)
+    for ivs in by_res.values():
+        ivs = sorted(ivs, key=lambda x: x.start)
+        for a, b in zip(ivs, ivs[1:]):
+            assert a.end <= b.start + 1e-12
+    # stages of ONE dispatch are chained in order
+    for d in range(6):
+        mine = [iv for iv in tl.intervals if iv.dispatch == d]
+        for a, b in zip(mine, mine[1:]):
+            assert a.end <= b.start + 1e-12
+
+
+def test_timeline_speedup_at_least_one_and_deterministic():
+    def build():
+        tl = PipelineTimeline()
+        for i in range(5):
+            tl.add(_chain(0.3 + 0.1 * i, 1.0, 0.1), earliest=0.2 * i)
+        return tl.report()
+    a, b = build(), build()
+    assert a == b                               # pure arithmetic
+    assert a["overlap_speedup_x"] >= 1.0
+    assert a["pipelined_span_s"] <= a["serial_span_s"] + 1e-12
+
+
+def test_timeline_respects_earliest_data_arrival():
+    tl = PipelineTimeline()
+    start, _ = tl.add(_chain(1.0, 1.0, 0.0), earliest=5.0)
+    assert start == pytest.approx(5.0)          # no time travel
+
+
+# ---------------------------------------------------------------------------
+# ticket lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+def test_async_ticket_matches_sync_execute(backend, engines):
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 3)
+    pipe = ServingPipeline(e, backend=backend, batch_size=4)
+    ref = pipe.execute_batch(reqs, rng=jax.random.PRNGKey(5))
+    ticket = pipe.execute_batch_async(reqs, rng=jax.random.PRNGKey(5))
+    assert not ticket.retired
+    res = ticket.retire()
+    assert ticket.retired
+    assert res.keep == ref.keep
+    for k in ref.outputs:
+        np.testing.assert_array_equal(res.outputs[k], ref.outputs[k])
+    # idempotent: the same result object comes back
+    assert ticket.retire() is res
+
+
+def test_ticket_releases_slot_and_sync_drains(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 2)
+    pipe = ServingPipeline(e, backend="flex", batch_size=2,
+                           staging_buffers=2)
+    assert pipe.arena.n_free == 2
+    t1 = pipe.execute_batch_async(reqs)
+    t2 = pipe.execute_batch_async(reqs)
+    assert pipe.arena.n_free == 0               # both slots owned
+    assert len(pipe._inflight) == 2
+    t1.retire()
+    assert pipe.arena.n_free == 1
+    pipe.sync()                                 # telemetry barrier
+    assert t2.retired and pipe.arena.n_free == 2
+    assert not pipe._inflight
+
+
+def test_pool_exhaustion_falls_back_to_fresh_allocation(engines):
+    """Over-subscribing the slot pool must not deadlock or corrupt: the
+    extra dispatch stages into a fresh allocation (counted), and results
+    stay bit-identical."""
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 2)
+    pipe = ServingPipeline(e, backend="flex", batch_size=2,
+                           staging_buffers=1)
+    ref = pipe.execute_batch(reqs, rng=jax.random.PRNGKey(1))
+    tickets = [pipe.execute_batch_async(reqs, rng=jax.random.PRNGKey(1))
+               for _ in range(3)]
+    assert pipe.arena.n_fallback == 2           # slots: 1 owned, 2 fresh
+    for t in tickets:
+        res = t.retire()
+        for k in ref.outputs:
+            np.testing.assert_array_equal(res.outputs[k], ref.outputs[k])
+
+
+def test_run_pipelined_matches_serial_run(engines):
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 11)                     # ragged tail
+    pipe = ServingPipeline(e, backend="flex", batch_size=4,
+                           keep_predicate=lambda out: any(
+                               float(np.max(v)) > 0 for v in out.values()))
+    serial = pipe.run(reqs, pipeline=False)
+    pipelined = pipe.run(reqs, pipeline=True)
+    assert pipelined.n_requests == serial.n_requests == 11
+    assert pipelined.n_kept == serial.n_kept
+    assert pipelined.fps > 0 and serial.fps > 0
+    assert pipelined.phases.overlapped >= 0.0
+    assert not pipe._inflight                   # stream-end flush retired all
+
+
+# ---------------------------------------------------------------------------
+# scheduler identity: pipeline=True == pipeline=False (modeled clock)
+# ---------------------------------------------------------------------------
+
+
+def _serve(engines, pipeline, envelope=None, staging_buffers=2, n=40):
+    env = None
+    if envelope:
+        # the known-servable pressure envelope of the serving tests: the
+        # peak cap excludes the DPU sometimes (flex fallback + deferrals)
+        # but every dispatch stays admissible eventually
+        env = PowerEnvelope(10.0, peak_w=3.0, window_s=0.01)
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=pipeline,
+                                        staging_buffers=staging_buffers,
+                                        envelope=env)
+    trace = []
+    for mi, name in enumerate(MODELS):
+        m, e = engines[name]
+        reqs = _requests(m, n, seed=11 + mi)
+        backend = ("accel", "flex") if envelope else "flex"
+        sched.register(name, e, backend=backend, ladder=(1, 4, 16),
+                       warmup_sample=reqs[0])
+        trace += [(t, name, r) for t, r in
+                  zip(bursty_arrivals(n, burst_size=8, gap_s=0.02,
+                                      seed=40 + mi), reqs)]
+    end = sched.serve_trace(trace)
+    return sched, end
+
+
+@pytest.mark.parametrize("envelope", [False, True],
+                         ids=["plain", "envelope"])
+def test_pipelined_scheduler_identical_to_sync(envelope, engines):
+    """The tentpole's zero-drift gate: same virtual end time, same
+    dispatch records, same completions (ids, timestamps, rungs, keeps)
+    and BIT-identical outputs, pipeline on vs off."""
+    sync_sched, sync_end = _serve(engines, pipeline=False, envelope=envelope)
+    pipe_sched, pipe_end = _serve(engines, pipeline=True, envelope=envelope)
+    assert pipe_end == sync_end
+    assert pipe_sched.dispatches == sync_sched.dispatches
+    assert len(pipe_sched.completions) == len(sync_sched.completions)
+    for a, b in zip(pipe_sched.completions, sync_sched.completions):
+        assert (a.rid, a.model, a.kept, a.arrival, a.finished, a.rung,
+                a.n_real, a.deadline) == \
+               (b.rid, b.model, b.kept, b.arrival, b.finished, b.rung,
+                b.n_real, b.deadline)
+        for k in b.outputs:
+            np.testing.assert_array_equal(a.outputs[k], b.outputs[k])
+    # ...and only the pipelined run carries an overlap ledger
+    assert sync_sched.overlap_report() is None
+    rep = pipe_sched.overlap_report()
+    assert rep["n_dispatches"] == len(pipe_sched.dispatches)
+    assert rep["overlap_speedup_x"] >= 1.0
+    assert rep["pipelined_span_s"] <= rep["serial_span_s"] + 1e-12
+
+
+def test_pipelined_scheduler_caps_inflight_depth(engines):
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 24)
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=True,
+                                        staging_buffers=2)
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    for i, r in enumerate(reqs):
+        sched.submit("logistic_net", r, arrival=0.001 * i)
+    now, depth_seen = 0.0, 0
+    while sched.pending():
+        rec = sched.step(now, force=True)
+        assert rec is not None
+        depth_seen = max(depth_seen, len(sched._inflight))
+        assert len(sched._inflight) <= 2
+        now += rec.service_time
+    assert depth_seen == 2                      # it really pipelined
+    sched.sync()
+    assert len(sched.completions) == len(reqs)
+    assert not sched._inflight
+
+
+def test_pipelined_ewma_observed_at_retirement(engines):
+    """measured clock + pipeline: estimates update when tickets RETIRE
+    (dispatch->retirement span), not at the non-blocking dispatch."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 4)
+    sched = ContinuousBatchingScheduler(pipeline=True, staging_buffers=4)
+    sched.register("logistic_net", e, backend="flex", ladder=(4,),
+                   warmup_sample=reqs[0])
+    svc = sched._svcs["logistic_net"]
+    est_before = dict(svc.est_service)
+    for i, r in enumerate(reqs):
+        sched.submit("logistic_net", r, arrival=0.001 * i)
+    rec = sched.step(1.0, force=True)
+    assert rec is not None
+    assert len(sched._inflight) == 1
+    assert svc.est_service == est_before        # nothing observed yet
+    sched.sync()
+    assert svc.est_service != est_before        # retirement observed
+    # the dispatch record was rewritten to the true retired service
+    assert sched.dispatches[-1].service_time >= rec.service_time
+
+
+def test_pipelined_trace_keeps_plan_cache_cold(engines):
+    """Pipelined serving must never re-trace: arena-slot staging reuses
+    the same compiled executable for full and ragged batches."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 21)
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=True)
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4, 16),
+                   warmup_sample=reqs[0])
+    before = e.planned("flex").n_traces
+    sched.serve_trace([(0.002 * i, "logistic_net", r)
+                       for i, r in enumerate(reqs)])
+    assert e.planned("flex").n_traces == before
+    assert len(sched.completions) == len(reqs)
+
+
+def test_pipelined_async_wall_clock_mode_completes_everything(engines):
+    import time as _time
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 13)
+    sched = ContinuousBatchingScheduler(pipeline=True, staging_buffers=3)
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=reqs[0])
+    sched.start(poll_s=0.0005)
+    try:
+        rids = [sched.submit("logistic_net", r) for r in reqs]
+        _time.sleep(0.01)
+    finally:
+        sched.stop(drain=True)
+    assert sorted(c.rid for c in sched.completions) == sorted(rids)
+
+
+def test_pipelined_poison_request_requeued(engines):
+    """Staging errors surface at dispatch in pipelined mode too, with the
+    batch back at the queue head."""
+    m, e = engines["logistic_net"]
+    good = _requests(m, 2)
+    bad = {"wrong_key": np.zeros((2, 2), np.float32)}
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=True)
+    sched.register("logistic_net", e, backend="flex", ladder=(1, 4),
+                   warmup_sample=good[0])
+    with pytest.raises(Exception):
+        sched.serve_trace([(0.0, "logistic_net", good[0]),
+                           (0.001, "logistic_net", bad),
+                           (0.002, "logistic_net", good[1])])
+    sched.sync()
+    assert len(sched.completions) + sched.pending() == 3
+    svc = sched._svcs["logistic_net"]
+    assert any(r.inputs is bad for r in svc.queue)
+
+
+def test_staging_buffers_validated():
+    with pytest.raises(ValueError, match="staging_buffers"):
+        ContinuousBatchingScheduler(staging_buffers=0)

@@ -167,6 +167,79 @@ def test_scheduler_ragged_stream_matches_per_sample(name, backend, engines):
 
 
 # ---------------------------------------------------------------------------
+# staging-buffer reuse (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+@pytest.mark.parametrize("name", MODELS)
+def test_reused_arena_bit_exact_vs_fresh_allocation(name, backend, engines):
+    """Ragged tails staged into a REUSED host arena slot produce outputs
+    bit-identical to the freshly-allocating `stage_batch` path — including
+    a shrinking batch reusing a slot still holding a longer batch's rows
+    (every row is rewritten: real samples + repeat-last padding)."""
+    m, e = engines[name]
+    B = 4
+    reqs = _requests(m, 9)
+    arena_pipe = ServingPipeline(e, backend=backend, batch_size=B,
+                                 staging_buffers=1)
+    fresh_pipe = ServingPipeline(e, backend=backend, batch_size=B,
+                                 staging_buffers=1)
+    fresh_pipe.arena.acquire()      # hog the slot -> always falls back
+
+    # full batch, then shrinking ragged tails through the SAME slot
+    for lo, hi in ((0, 4), (4, 6), (6, 7)):
+        chunk = reqs[lo:hi]
+        got = arena_pipe.execute_batch(chunk, rng=jax.random.PRNGKey(lo))
+        ref = fresh_pipe.execute_batch(chunk, rng=jax.random.PRNGKey(lo))
+        assert got.keep == ref.keep
+        for k in ref.outputs:
+            np.testing.assert_array_equal(
+                got.outputs[k], ref.outputs[k],
+                err_msg=f"{name}/{backend}/{k} chunk [{lo}:{hi}]")
+    assert arena_pipe.arena.n_staged == 3       # all via the one slot
+    assert arena_pipe.arena.n_fallback == 0
+    assert arena_pipe.arena.n_free == 1         # every slot returned
+    assert fresh_pipe.arena.n_fallback == 3     # reference path never staged
+
+
+def test_arena_slot_contents_match_stage_batch(engines):
+    """Buffer-level check of the bit-exactness contract: a reused slot's
+    contents equal `stage_batch`'s fresh stack for the same requests."""
+    m, e = engines["logistic_net"]
+    B = 4
+    reqs = _requests(m, 6)
+    pipe = ServingPipeline(e, backend="flex", batch_size=B,
+                           staging_buffers=1)
+    slot = pipe.arena.acquire()
+    for chunk in (reqs[:4], reqs[4:]):          # reuse, incl. ragged tail
+        bufs = pipe.arena.stage(slot, chunk)
+        ref = stage_batch(chunk, B)
+        assert set(bufs) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(bufs[k], np.asarray(ref[k]))
+    pipe.arena.release(slot)
+
+
+@pytest.mark.parametrize("backend", ["flex", "accel"])
+def test_arena_reuse_never_retraces(backend, engines):
+    """Reused staging buffers hit the SAME compiled executable: no plan
+    re-trace across slot reuse, ragged lengths, or the fallback path."""
+    m, e = engines["multi_esperta"]
+    reqs = _requests(m, 11)
+    pipe = ServingPipeline(e, backend=backend, batch_size=4,
+                           staging_buffers=1)
+    before = e.planned(backend).n_traces
+    tickets = [pipe.execute_batch_async(reqs[:4]),
+               pipe.execute_batch_async(reqs[4:8])]   # 2nd one falls back
+    for t in tickets:
+        t.retire()
+    pipe.execute_batch(reqs[8:])                      # ragged slot reuse
+    assert e.planned(backend).n_traces == before
+    assert pipe.arena.n_fallback == 1
+
+
+# ---------------------------------------------------------------------------
 # scheduler behavior
 # ---------------------------------------------------------------------------
 
