@@ -1,0 +1,313 @@
+"""Degraded-mode fault-injection benchmark (DESIGN.md §13), gated ->
+BENCH_faults.json. Everything runs under ``clock="modeled"`` — every
+number and every gate is machine-independent.
+
+Four parts:
+
+1. **Storm A — repack recovery**: a deterministic 3-SEU storm against
+   multi_esperta's accel weight arenas while a bursty trace serves.
+   Gates: every injected fault is detected by an in-band canary within
+   the self-test period (plus the low-priority aging allowance), every
+   recovery re-packs the arena back to bit-exact pristine weights, no
+   accepted request is dropped or duplicated, and the storm adds only a
+   bounded number of deadline misses over a fault-free run of the SAME
+   trace.
+2. **Storm B — demote recovery**: same storm, but detection quarantines
+   the accel backend so dispatch falls back through the multi-backend
+   registration (cpu) until a delayed repair. Gates: fallback dispatches
+   actually happen during quarantine, the quarantine is lifted after
+   repair, recovery is bit-exact, zero drop/dup.
+3. **Watchdog reboot**: serve a two-model trace to ``stop_at``, write
+   the scheduler ledger through ``save_checkpoint``/``load_checkpoint``
+   (one .npz, no pickle), restore into a FRESH scheduler with freshly
+   registered models, and serve the remainder. Gates: the combined run
+   completes every accepted request exactly once, and is dispatch-for-
+   dispatch + completion-metadata IDENTICAL to the uninterrupted run
+   (post-reboot outputs bit-exact).
+4. **Inert-controller identity pin**: with ``fault_rate=0`` and no
+   self-test period, an attached+armed controller leaves the scheduler
+   dispatch-for-dispatch and bit-exact identical to serving with no
+   controller at all — degraded-mode support costs nothing when off.
+
+    PYTHONPATH=src python -m benchmarks.faults            # full
+    PYTHONPATH=src python -m benchmarks.faults --smoke    # CI (same gates)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import faults
+from repro.core.engine import Engine
+from repro.core.scheduler import ContinuousBatchingScheduler, bursty_arrivals
+from repro.models import SPACE_MODELS, synthetic_requests
+
+OUT_PATH = "BENCH_faults.json"
+STORM_MODEL = "multi_esperta"        # six int8 dense heads -> real arenas
+CO_MODEL = "logistic_net"
+BACKENDS = ("accel", "cpu")
+LADDER = (1, 4, 16)
+N_REQUESTS = 48
+N_CALIB = 2
+PERIOD = 0.05                        # self-test period (virtual s)
+FAULT_TIMES = (0.011, 0.043, 0.087) # the deterministic 3-SEU storm —
+                                     # all inside the ~0.1 s burst span
+REPAIR_DELAY = 0.04                  # demote-mode watchdog repair delay
+STOP_AT = 0.05                       # reboot point (mid-trace)
+MAX_EXTRA_MISSES = 8                 # storm deadline-miss allowance
+# detection bound: next due test (<= one period away) + busy-deferral
+# aging (0.5 period) + one in-flight dispatch and the canary itself
+DETECT_SLACK_S = 0.01
+
+_ENGINES = {}
+
+
+def _engines(name: str) -> Tuple:
+    if name not in _ENGINES:
+        m = SPACE_MODELS[name]
+        e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)))
+        e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                     for i in range(N_CALIB)])
+        _ENGINES[name] = (m, e)
+    return _ENGINES[name]
+
+
+def _storm_trace() -> Tuple[List, List[Dict]]:
+    m, _ = _engines(STORM_MODEL)
+    reqs = synthetic_requests(m, N_REQUESTS, seed=5)
+    times = bursty_arrivals(N_REQUESTS, burst_size=8, gap_s=0.02, seed=20)
+    return [(t, STORM_MODEL, r) for t, r in zip(times, reqs)], reqs
+
+
+def _storm_sched() -> ContinuousBatchingScheduler:
+    _, e = _engines(STORM_MODEL)
+    sched = ContinuousBatchingScheduler(clock="modeled")
+    sched.register(STORM_MODEL, e, backend=BACKENDS, ladder=LADDER,
+                   warmup_sample=synthetic_requests(
+                       _engines(STORM_MODEL)[0], 1, seed=5)[0])
+    return sched
+
+
+def _misses(sched) -> int:
+    return sum(1 for c in sched.completions if c.missed_deadline)
+
+
+def _zero_drop_dup(sched, n: int) -> bool:
+    rids = sorted(c.rid for c in sched.completions)
+    return rids == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# parts 1 + 2: fault storms
+# ---------------------------------------------------------------------------
+
+
+def run_storm(recovery: str) -> Dict:
+    trace, reqs = _storm_trace()
+    sched = _storm_sched()
+    ctl = faults.FaultController(faults.FaultConfig(
+        seed=0, fault_times=FAULT_TIMES, self_test_period=PERIOD,
+        recovery=recovery, repair_delay_s=REPAIR_DELAY))
+    sched.attach_faults(ctl)
+    ctl.arm(sched, STORM_MODEL, reqs[:1])
+    end = sched.serve_trace(trace)
+    rep = ctl.report()
+
+    bound = PERIOD * (1.0 + ctl.config.aging_fraction) + DETECT_SLACK_S
+    detect_ok = (rep["n_injected"] == len(FAULT_TIMES)
+                 and rep["n_detected"] == rep["n_injected"]
+                 and all(e["detected_at"] is not None
+                         and e["detected_at"] - e["t_injected"] <= bound
+                         for e in rep["events"]))
+    recovered_ok = rep["n_recovered"] == rep["n_injected"] and all(
+        e["recovered_at"] is not None
+        and e["recovered_at"] >= e["detected_at"] for e in rep["events"])
+    # the arena itself must be back to pristine bits, not just digests
+    plan = ctl._models[STORM_MODEL].plan
+    arena_ok = all(np.array_equal(np.asarray(plan.weight_arena[n]),
+                                  plan.host_weights[n])
+                   for n in plan.weight_arena)
+    res = {
+        "recovery": recovery, "virtual_end_s": end, "report": rep,
+        "detection_bound_s": bound,
+        "deadline_misses": _misses(sched),
+        "gates": {
+            f"{recovery}_all_detected_within_bound": detect_ok,
+            f"{recovery}_all_recovered": recovered_ok,
+            f"{recovery}_arena_bit_exact_after": arena_ok,
+            f"{recovery}_zero_drop_dup": _zero_drop_dup(sched, len(trace)),
+            f"{recovery}_overhead_priced": rep["overhead_energy_j"] > 0,
+        },
+    }
+    if recovery == "demote":
+        fb = sum(1 for d in sched.dispatches
+                 if d.model == STORM_MODEL and d.backend != BACKENDS[0])
+        res["n_fallback_dispatches"] = fb
+        res["gates"]["demote_fallback_dispatches"] = fb > 0
+        res["gates"]["demote_unquarantined_at_end"] = (
+            not sched._svcs[STORM_MODEL].quarantined)
+    print(f"[storm/{recovery}] injected={rep['n_injected']} "
+          f"detected={rep['n_detected']} recovered={rep['n_recovered']} "
+          f"max detection latency="
+          f"{rep['max_detection_latency_s']*1e3:.2f} ms "
+          f"(bound {bound*1e3:.0f} ms)  self-tests={rep['n_self_tests']}  "
+          f"overhead={rep['overhead_energy_j']*1e3:.3f} mJ  "
+          f"misses={res['deadline_misses']}")
+    return res
+
+
+def clean_baseline() -> Dict:
+    trace, _ = _storm_trace()
+    sched = _storm_sched()
+    sched.serve_trace(trace)
+    return {"deadline_misses": _misses(sched),
+            "n_completions": len(sched.completions)}
+
+
+# ---------------------------------------------------------------------------
+# part 3: watchdog reboot through a checkpoint file
+# ---------------------------------------------------------------------------
+
+
+def _co_sched() -> Tuple[ContinuousBatchingScheduler, List]:
+    sched = ContinuousBatchingScheduler(clock="modeled")
+    trace = []
+    for mi, name in enumerate((STORM_MODEL, CO_MODEL)):
+        m, e = _engines(name)
+        reqs = synthetic_requests(m, N_REQUESTS, seed=5 + mi)
+        sched.register(name, e, backend=BACKENDS, ladder=LADDER,
+                       warmup_sample=reqs[0])
+        trace += [(t, name, r) for t, r in
+                  zip(bursty_arrivals(N_REQUESTS, burst_size=8, gap_s=0.02,
+                                      seed=20 + mi), reqs)]
+    return sched, trace
+
+
+def reboot_check() -> Dict:
+    full, trace = _co_sched()
+    full.serve_trace(trace)
+
+    first, _ = _co_sched()
+    now = first.serve_trace(trace, stop_at=STOP_AT)
+    n_before = len(first.completions)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "sched.npz")
+        faults.save_checkpoint(path, first.state_dict())
+        size = os.path.getsize(path)
+        state = faults.load_checkpoint(path)
+    # the reboot: a fresh process re-registers the same models (pristine
+    # bitstream + weights), then the ledger restore resumes the queues
+    second, _ = _co_sched()
+    second.load_state_dict(state)
+    rest = [e for e in trace if e[0] > now + 1e-12]
+    second.serve_trace(rest, start=now)
+
+    n = len(trace)
+    zero_loss = _zero_drop_dup(second, n)
+    meta = [(c.rid, c.model, c.kept, c.arrival, c.finished, c.rung,
+             c.n_real, c.deadline) for c in second.completions]
+    meta_full = [(c.rid, c.model, c.kept, c.arrival, c.finished, c.rung,
+                  c.n_real, c.deadline) for c in full.completions]
+    identical = meta == meta_full
+    same_dispatches = second.dispatches == full.dispatches
+    by_rid = {c.rid: c for c in full.completions}
+    bit_exact = all(
+        np.array_equal(c.outputs[k], by_rid[c.rid].outputs[k])
+        for c in second.completions if c.outputs for k in c.outputs)
+    print(f"[reboot] stop at t={now*1e3:.1f} ms with {n_before} done; "
+          f"checkpoint {size/1024:.1f} KiB; resumed "
+          f"{len(second.completions) - n_before} more -> "
+          f"{len(second.completions)}/{n} total  zero-loss={zero_loss}  "
+          f"identical-to-uninterrupted={identical and same_dispatches}")
+    return {
+        "stop_at_s": now, "completed_before": n_before,
+        "checkpoint_bytes": size, "n_requests": n,
+        "gates": {
+            "reboot_zero_drop_dup": zero_loss,
+            "reboot_completions_identical": identical,
+            "reboot_dispatches_identical": same_dispatches,
+            "reboot_outputs_bit_exact": bit_exact,
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# part 4: inert controller == no controller
+# ---------------------------------------------------------------------------
+
+
+def identity_pin() -> Dict:
+    plain, trace = _co_sched()
+    plain.serve_trace(trace)
+
+    armed, _ = _co_sched()
+    ctl = faults.FaultController(faults.FaultConfig())   # rate 0, no tests
+    armed.attach_faults(ctl)
+    for mi, name in enumerate((STORM_MODEL, CO_MODEL)):
+        m, _ = _engines(name)
+        ctl.arm(armed, name, synthetic_requests(m, 1, seed=5 + mi))
+    armed.serve_trace(trace)
+
+    same_dispatches = armed.dispatches == plain.dispatches
+    tuples = lambda s: [(c.rid, c.model, c.kept, c.arrival, c.finished,
+                         c.rung, c.n_real) for c in s.completions]
+    same_completions = tuples(armed) == tuples(plain)
+    bit_exact = same_completions and all(
+        np.array_equal(a.outputs[k], b.outputs[k])
+        for a, b in zip(armed.completions, plain.completions)
+        for k in b.outputs)
+    untouched = ctl.report()["n_injected"] == 0 \
+        and ctl.report()["n_self_tests"] == 0
+    print(f"[identity] inert controller: dispatches identical="
+          f"{same_dispatches}  completions identical={same_completions}  "
+          f"outputs bit-exact={bit_exact}")
+    return {"gates": {
+        "inert_dispatches_identical": same_dispatches,
+        "inert_completions_identical": same_completions,
+        "inert_outputs_bit_exact": bit_exact,
+        "inert_controller_untouched": untouched,
+    }}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI symmetry; every part is "
+                         "modeled-clock and machine-independent, so "
+                         "smoke runs the full gate set")
+    ap.parse_args(argv)
+
+    print(f"== degraded-mode fault injection: {len(FAULT_TIMES)}-SEU "
+          f"storms on {STORM_MODEL} ({'+'.join(BACKENDS)}), self-test "
+          f"period {PERIOD*1e3:.0f} ms, reboot at {STOP_AT*1e3:.0f} ms ==")
+    clean = clean_baseline()
+    storms = [run_storm("repack"), run_storm("demote")]
+    gates = {}
+    for s in storms:
+        extra = s["deadline_misses"] - clean["deadline_misses"]
+        gates[f"{s['recovery']}_bounded_extra_misses"] = (
+            extra <= MAX_EXTRA_MISSES)
+        s["extra_misses_vs_clean"] = extra
+        gates.update(s["gates"])
+    reboot = reboot_check()
+    gates.update(reboot["gates"])
+    ident = identity_pin()
+    gates.update(ident["gates"])
+
+    with open(OUT_PATH, "w") as f:
+        json.dump({"clean_baseline": clean, "storms": storms,
+                   "reboot": reboot, "identity": ident, "gates": gates},
+                  f, indent=1)
+    print(f"\n[faults] wrote {OUT_PATH}")
+    print("[gates] " + "  ".join(f"{k}={v}" for k, v in gates.items()))
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,6 +38,9 @@ SECTIONS = {
     "pipeline": ("benchmarks.pipeline", False, True,
                  "pipelined-runtime gates: modeled stage overlap, "
                  "pipelined==sync identity, overlap-ledger invariants"),
+    "faults": ("benchmarks.faults", False, True,
+               "degraded-mode gates: SEU storms detected+recovered, "
+               "watchdog reboot zero-loss, inert-controller identity"),
     "table45": ("benchmarks.table45_context", False, False,
                 "Tables IV/V context: device/toolchain comparison"),
     "fig_power": ("benchmarks.fig_power_phases", False, False,

@@ -170,11 +170,25 @@ class TuningCache:
             self.load()
 
     def load(self) -> None:
-        with open(self.path) as f:
-            payload = json.load(f)
-        if payload.get("version") != SCHEMA_VERSION:
+        """Load winners from ``path``. A cache file is an OPTIMIZATION,
+        never a correctness input: unreadable, truncated, or
+        stale-schema files degrade to a cold cache with a one-line
+        warning — a corrupt cache must not crash the serve entrypoint
+        (it re-searches and rewrites the file on save)."""
+        self.entries = {}
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as ex:
+            print(f"[autotune] ignoring unreadable tuning cache "
+                  f"{self.path}: {ex} (cold cache)")
+            return
+        if (not isinstance(payload, dict)
+                or payload.get("version") != SCHEMA_VERSION
+                or not isinstance(payload.get("entries", {}), dict)):
             # schema moved on: discard rather than mis-serve old picks
-            self.entries = {}
+            print(f"[autotune] ignoring stale/foreign tuning cache "
+                  f"{self.path} (cold cache)")
             return
         self.entries = payload.get("entries", {})
 

@@ -336,6 +336,32 @@ BACKEND_HW: Dict[str, HardwareModel] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Recovery pricing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryCost:
+    """Modeled cost of one fault-recovery action (an arena re-pack from
+    host copies): what the fault controller advances the virtual clock by
+    and charges to its energy ledger."""
+    seconds: float
+    energy_j: float
+
+
+def repack_cost(hw: HardwareModel, packed_bytes: int) -> RecoveryCost:
+    """Price restoring ``packed_bytes`` of prepacked weights from host
+    copies: one dispatch-overhead setup plus the bytes over the staging
+    channel (the same PS->DDR path batch staging uses; DDR bandwidth when
+    the backend has no separate staging channel), busy power plus the
+    per-byte DDR access energy."""
+    bw = hw.stage_bw or hw.hbm_bw
+    t = hw.overhead_s + packed_bytes / bw
+    e = hw.power_busy * t + packed_bytes * hw.ddr_pj_per_byte
+    return RecoveryCost(seconds=t, energy_j=e)
+
+
 @dataclasses.dataclass(frozen=True)
 class CostSignature:
     """Plan-time cost of ONE dispatched batch of a compiled plan: what the

@@ -1,0 +1,488 @@
+"""Degraded-mode fault modeling: SEU injection, in-band self-test
+detection, and the recovery ladder (DESIGN.md §13).
+
+Radiation-induced single-event upsets (SEUs) are the dominant on-orbit
+failure mode the deployment literature centers on (PAPERS.md: the FPGA
+space-accelerator survey and the CubeSat cloud-detection design). The
+repo already holds every mechanism a detect -> recover -> resume story
+needs — prepacked int8 weight arenas (live, argument-fed buffers on the
+compiled plans), golden output digests, modeled cost signatures, and
+multi-backend registration — and this module connects them:
+
+* :class:`SEUInjector` — deterministic, seedable bit flips in a plan's
+  live :attr:`~repro.core.plan.ExecutionPlan.weight_arena` (the modeled
+  DPU weight memory). Because compiled plans consume the arena as a
+  RUNTIME argument, a flip corrupts every subsequent dispatch on that
+  backend without any re-trace — exactly the silent-corruption regime an
+  SEU creates. Flips into host *staging* buffers are also supported;
+  they are transient by construction (``stage()`` rewrites every row).
+* :class:`GoldenCanary` — one fixed canary batch per armed model, run
+  once at arm time against pristine weights to pin a sha256 output
+  digest (the serve-time analog of ``tests/golden/``). A self-test
+  re-runs the canary and compares digests — bit-exact or corrupt, no
+  tolerance band, because the int8 plans are deterministic.
+* :class:`FaultController` — the watchdog: injects scheduled faults,
+  runs periodic self-tests as LOW-PRIORITY scheduler work (deferred
+  while the model's queue is busy, aged in after half a period so
+  detection latency stays bounded), prices every test and recovery on
+  the virtual clock and the energy ledger, and drives the recovery
+  ladder — ``repack`` (restore the arena from pristine host copies,
+  re-verify) or ``demote`` (quarantine the primary backend so dispatch
+  falls back through the existing multi-backend registration, repair and
+  un-quarantine after a watchdog delay). A cost-signature drift report
+  (EWMA service estimates vs plan-time modeled latencies) provides the
+  complementary always-on detection signal.
+* :func:`save_checkpoint` / :func:`load_checkpoint` — the scheduler
+  ledger (``state_dict()``) as a single ``.npz``: JSON metadata with
+  every ndarray lifted into named entries (``allow_pickle=False`` on
+  both sides), so a simulated watchdog reboot restores the accepted
+  queues, EWMA state, RNG, and telemetry records and loses zero
+  accepted requests.
+
+An unarmed / inert controller (no faults, no self-test period) leaves
+``serve_trace`` dispatch-for-dispatch identical to running without one —
+``benchmarks/faults.py`` pins that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import energy as energy_mod
+
+_CANARY_KEY = 20260801          # fixed canary rng: digests must be stable
+_ARRAY_TAG = "__array__:"
+
+
+# ---------------------------------------------------------------------------
+# Digests
+# ---------------------------------------------------------------------------
+
+
+def output_digest(outputs: Dict[str, np.ndarray]) -> str:
+    """sha256 over (key, shape, dtype, bytes) of every output, sorted by
+    key — the bit-exact fingerprint self-tests compare."""
+    h = hashlib.sha256()
+    for k in sorted(outputs):
+        a = np.ascontiguousarray(np.asarray(outputs[k]))
+        h.update(k.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# SEU injection
+# ---------------------------------------------------------------------------
+
+
+class SEUInjector:
+    """Deterministic seeded single-bit flips in live weight arenas.
+
+    Target selection is weighted by buffer size (a physical SEU is
+    equally likely per bit of exposed memory); explicit ``node`` /
+    ``byte`` / ``bit`` pin the flip for regression tests."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self._rng = np.random.default_rng(self.seed)
+        self.n_flips = 0
+
+    def flip(self, plan, node: Optional[str] = None,
+             byte: Optional[int] = None, bit: Optional[int] = None
+             ) -> Tuple[str, int, int]:
+        """Flip one bit of one weight-arena entry of ``plan`` (in place:
+        the entry is replaced by a host round-tripped copy with the bit
+        XORed). Returns (node, byte offset, bit index)."""
+        arena = plan.weight_arena
+        if not arena:
+            raise ValueError(
+                f"plan {plan.graph.name}/{plan.backend} has no quantized "
+                f"weight arena to inject into")
+        if node is None:
+            names = sorted(arena)
+            sizes = np.array([int(np.asarray(arena[n]).nbytes)
+                              for n in names], dtype=np.float64)
+            node = names[int(self._rng.choice(len(names),
+                                              p=sizes / sizes.sum()))]
+        arr = np.array(arena[node])            # host copy, contiguous
+        flat = arr.view(np.uint8).reshape(-1)
+        if byte is None:
+            byte = int(self._rng.integers(flat.size))
+        if bit is None:
+            bit = int(self._rng.integers(8))
+        flat[byte] ^= np.uint8(1 << bit)
+        import jax.numpy as jnp
+        arena[node] = jnp.asarray(arr)
+        self.n_flips += 1
+        return node, byte, bit
+
+    def flip_staging(self, arena, slot: int = 0) -> Tuple[str, int, int]:
+        """Flip one bit in a host staging buffer (transient corruption:
+        ``stage()`` rewrites every row of every buffer, so the flip only
+        matters if it lands between staging and dispatch)."""
+        bufs = arena._bufs[slot]
+        name = sorted(bufs)[int(self._rng.integers(len(bufs)))]
+        flat = bufs[name].view(np.uint8).reshape(-1)
+        byte = int(self._rng.integers(flat.size))
+        bit = int(self._rng.integers(8))
+        flat[byte] ^= np.uint8(1 << bit)
+        self.n_flips += 1
+        return name, byte, bit
+
+
+# ---------------------------------------------------------------------------
+# Canaries
+# ---------------------------------------------------------------------------
+
+
+class GoldenCanary:
+    """One in-band self-test unit: a fixed canary batch through one
+    (model, backend, bottom-rung) pipeline, digest pinned at arm time."""
+
+    def __init__(self, name: str, pipeline,
+                 reqs: Sequence[Dict[str, np.ndarray]]):
+        self.name = name
+        self.pipeline = pipeline
+        self.reqs = list(reqs)
+        self.cost = pipeline.cost           # modeled canary dispatch cost
+        self.digest, self.reference = self._snapshot()
+
+    def _snapshot(self) -> Tuple[str, Dict[str, np.ndarray]]:
+        out = self.run()
+        return output_digest(out), out
+
+    def run(self) -> Dict[str, np.ndarray]:
+        res = self.pipeline.execute_batch(
+            self.reqs, rng=jax.random.PRNGKey(_CANARY_KEY))
+        return res.outputs
+
+    def check(self) -> Tuple[bool, str]:
+        """(passed, observed digest). Bit-exact comparison — any mismatch
+        is corruption, by the int8 plans' determinism contract."""
+        got = output_digest(self.run())
+        return got == self.digest, got
+
+
+# ---------------------------------------------------------------------------
+# The controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault-storm shape. ``fault_times`` pins injections explicitly
+    (deterministic storms, the benchmark gates); otherwise a Poisson
+    schedule at ``fault_rate`` over ``horizon_s`` is derived from
+    ``seed``. ``self_test_period=None`` disables periodic canaries (the
+    inert controller the identity gate pins)."""
+    seed: int = 0
+    fault_times: Tuple[float, ...] = ()
+    fault_rate: float = 0.0             # faults / virtual second
+    horizon_s: float = 0.0
+    self_test_period: Optional[float] = None
+    recovery: str = "repack"            # 'repack' | 'demote'
+    repair_delay_s: float = 0.05        # demote: watchdog repair latency
+    aging_fraction: float = 0.5         # run a busy-deferred test once
+                                        # overdue by this fraction of the
+                                        # period (bounds detection lag)
+
+    def __post_init__(self):
+        if self.recovery not in ("repack", "demote"):
+            raise ValueError(
+                f"recovery must be repack|demote, got {self.recovery!r}")
+
+    def schedule(self) -> List[float]:
+        if self.fault_times:
+            return sorted(float(t) for t in self.fault_times)
+        if self.fault_rate <= 0.0 or self.horizon_s <= 0.0:
+            return []
+        rng = np.random.default_rng(self.seed + 1)
+        times, t = [], 0.0
+        while True:
+            t += float(rng.exponential(1.0 / self.fault_rate))
+            if t >= self.horizon_s:
+                return times
+            times.append(t)
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One injected SEU's lifecycle in the controller's ledger."""
+    t_injected: float
+    model: str
+    node: str
+    byte: int
+    bit: int
+    detected_at: Optional[float] = None
+    recovered_at: Optional[float] = None
+    action: str = ""                    # 'repack' | 'demote+repack'
+
+    @property
+    def detection_latency_s(self) -> Optional[float]:
+        return (None if self.detected_at is None
+                else self.detected_at - self.t_injected)
+
+
+@dataclasses.dataclass
+class _ArmedModel:
+    name: str
+    backend: str                        # primary (faultable) backend
+    canary: GoldenCanary
+    plan: Any                           # the primary backend ExecutionPlan
+    next_test: Optional[float]
+    repair_at: Optional[float] = None   # pending demote repair
+
+
+class FaultController:
+    """The degraded-mode watchdog ``serve_trace`` ticks every scheduling
+    round (see module docstring for the full protocol)."""
+
+    def __init__(self, config: FaultConfig):
+        self.config = config
+        self.injector = SEUInjector(config.seed)
+        self._models: Dict[str, _ArmedModel] = {}
+        self._pending: List[float] = config.schedule()
+        self.events: List[FaultEvent] = []
+        self.energy_j = 0.0                 # self-tests + recoveries
+        self.n_self_tests = 0
+        self.n_recoveries = 0
+
+    # -- arming --------------------------------------------------------------
+
+    def arm(self, sched, name: str,
+            canary_reqs: Sequence[Dict[str, np.ndarray]]) -> None:
+        """Arm one registered model: pin its pristine canary digest on
+        the primary backend's bottom rung. Must run BEFORE any fault can
+        fire (the digest is the recovery reference)."""
+        svc = sched._svcs[name]
+        backend = svc.backends[0]
+        rung = svc.ladder[0]
+        pipe = svc.pipelines[backend][rung]
+        reqs = (list(canary_reqs) * rung)[:rung]
+        canary = GoldenCanary(name, pipe, reqs)
+        period = self.config.self_test_period
+        self._models[name] = _ArmedModel(
+            name=name, backend=backend, canary=canary,
+            plan=pipe._plan.plan,
+            next_test=None if period is None else period)
+
+    # -- the serve_trace hooks ----------------------------------------------
+
+    def tick(self, sched, now: float) -> float:
+        """One watchdog round at virtual time ``now``: inject due
+        faults (instantaneous), run due repairs, then run due self-tests
+        — each test/recovery advances and returns the clock."""
+        while self._pending and self._pending[0] <= now + 1e-12:
+            self._inject(self._pending.pop(0))
+        for am in self._models.values():
+            if am.repair_at is not None and am.repair_at <= now + 1e-12:
+                now = self._repair(sched, am, now)
+        period = self.config.self_test_period
+        if period is None:
+            return now
+        for am in self._models.values():
+            if am.next_test is None or am.repair_at is not None:
+                continue                # known-bad: the repair timer owns it
+            if am.next_test > now + 1e-12:
+                continue
+            overdue = now - am.next_test
+            busy = sched._svcs[am.name].pick(now) is not None
+            if busy and overdue < self.config.aging_fraction * period:
+                continue                # low priority: real work first
+            now = self._self_test(sched, am, now)
+            am.next_test = now + period
+        return now
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Earliest pending watchdog instant — what an idle virtual
+        clock jumps to (so self-tests run on schedule between bursts)."""
+        times = list(self._pending)
+        for am in self._models.values():
+            if am.repair_at is not None:
+                times.append(am.repair_at)
+            elif am.next_test is not None:
+                times.append(am.next_test)
+        future = [t for t in times if t > now + 1e-12]
+        return min(future) if future else None
+
+    def finalize(self, sched, now: float) -> float:
+        """End-of-stream closing sweep: one self-test per armed model,
+        so nothing injected during the final period escapes the ledger.
+        A fully inert controller (no faults, no period) does nothing."""
+        if not self.events and self.config.self_test_period is None:
+            return now
+        for am in self._models.values():
+            if am.repair_at is not None:
+                now = self._repair(sched, am, max(now, am.repair_at))
+            now = self._self_test(sched, am, now)
+            if am.next_test is not None:
+                am.next_test = now + self.config.self_test_period
+        return now
+
+    # -- fault lifecycle -----------------------------------------------------
+
+    def _inject(self, t: float) -> None:
+        targets = [am for am in self._models.values()
+                   if am.plan.weight_arena]
+        if not targets:
+            raise RuntimeError(
+                f"fault due at t={t:.4f}s but no armed model has a "
+                f"weight arena; arm() accel models before serving")
+        sizes = np.array([sum(int(np.asarray(a).nbytes)
+                              for a in am.plan.weight_arena.values())
+                          for am in targets], dtype=np.float64)
+        am = targets[int(self.injector._rng.choice(
+            len(targets), p=sizes / sizes.sum()))]
+        node, byte, bit = self.injector.flip(am.plan)
+        self.events.append(FaultEvent(t, am.name, node, byte, bit))
+
+    def _run_priced_canary(self, am: _ArmedModel, now: float
+                           ) -> Tuple[bool, float]:
+        """Run one canary, advancing the clock by its modeled service
+        and charging its modeled energy. Returns (passed, new now)."""
+        passed, _ = am.canary.check()
+        self.n_self_tests += 1
+        self.energy_j += am.canary.cost.energy_j
+        return passed, now + am.canary.cost.latency_s
+
+    def _self_test(self, sched, am: _ArmedModel, now: float) -> float:
+        passed, now = self._run_priced_canary(am, now)
+        if passed:
+            return now
+        for ev in self.events:
+            if ev.model == am.name and ev.detected_at is None:
+                ev.detected_at = now
+        if self.config.recovery == "demote":
+            svc = sched._svcs[am.name]
+            if len(svc.backends) < 2:
+                raise RuntimeError(
+                    f"recovery='demote' needs a fallback backend for "
+                    f"{am.name!r}; it registered only {svc.backends}")
+            svc.quarantined.add(am.backend)
+            am.repair_at = now + self.config.repair_delay_s
+            return now
+        return self._repack(am, now, action="repack")
+
+    def _repack(self, am: _ArmedModel, now: float, action: str) -> float:
+        """Restore the whole arena from pristine host copies (scrubbing
+        cannot localize the flip), price it, and re-verify bit-exact."""
+        nbytes = am.plan.repack_weights()
+        hw = energy_mod.BACKEND_HW[am.plan.backend]
+        cost = energy_mod.repack_cost(hw, nbytes)
+        now += cost.seconds
+        self.energy_j += cost.energy_j
+        self.n_recoveries += 1
+        passed, now = self._run_priced_canary(am, now)
+        if not passed:
+            raise RuntimeError(
+                f"arena re-pack for {am.name!r} did not restore the "
+                f"pristine canary digest — host weight copies corrupt?")
+        for ev in self.events:
+            if ev.model == am.name and ev.recovered_at is None:
+                if ev.detected_at is None:
+                    # injected between detection and this repack (e.g.
+                    # during a demote quarantine): the full-arena scrub
+                    # restores it collaterally, and the verification
+                    # canary that just passed is its detection record
+                    ev.detected_at = now
+                ev.recovered_at = now
+                ev.action = action
+        return now
+
+    def _repair(self, sched, am: _ArmedModel, now: float) -> float:
+        now = self._repack(am, now, action="demote+repack")
+        sched._svcs[am.name].quarantined.discard(am.backend)
+        am.repair_at = None
+        return now
+
+    # -- reporting -----------------------------------------------------------
+
+    def drift_report(self, sched) -> Dict[str, Dict[str, float]]:
+        """EWMA service estimate vs plan-time modeled latency per armed
+        (backend, rung) — the always-on complementary detection signal:
+        a hard fault that slows a backend (retries, bus errors) shows up
+        as ratio drift even between self-tests. Under ``clock="modeled"``
+        every ratio is exactly 1.0 (estimates ARE the signatures)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name in self._models:
+            svc = sched._svcs[name]
+            ratios = {
+                f"{b}/b{r}": est / svc.costs[(b, r)].latency_s
+                for (b, r), est in svc.est_service.items()
+                if svc.costs[(b, r)].latency_s > 0}
+            out[name] = ratios
+        return out
+
+    def report(self) -> Dict[str, Any]:
+        detected = [e for e in self.events if e.detected_at is not None]
+        recovered = [e for e in self.events if e.recovered_at is not None]
+        return {
+            "n_injected": len(self.events),
+            "n_detected": len(detected),
+            "n_recovered": len(recovered),
+            "n_self_tests": self.n_self_tests,
+            "n_recoveries": self.n_recoveries,
+            "overhead_energy_j": self.energy_j,
+            "max_detection_latency_s": max(
+                (e.detection_latency_s for e in detected), default=0.0),
+            "events": [dataclasses.asdict(e) for e in self.events],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint files (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _lift_arrays(obj: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    """Replace every ndarray in a state tree with an ``__array__:aN``
+    placeholder, collecting the arrays — what makes the metadata pure
+    JSON and the file loadable with ``allow_pickle=False``."""
+    if isinstance(obj, np.ndarray):
+        key = f"a{len(arrays)}"
+        arrays[key] = obj
+        return _ARRAY_TAG + key
+    if isinstance(obj, dict):
+        return {str(k): _lift_arrays(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_lift_arrays(v, arrays) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    return obj
+
+
+def _sink_arrays(obj: Any, data) -> Any:
+    if isinstance(obj, str) and obj.startswith(_ARRAY_TAG):
+        return data[obj[len(_ARRAY_TAG):]]
+    if isinstance(obj, dict):
+        return {k: _sink_arrays(v, data) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_sink_arrays(v, data) for v in obj]
+    return obj
+
+
+def save_checkpoint(path: str, state: Dict[str, Any]) -> None:
+    """Write a scheduler ``state_dict()`` (or any JSON+ndarray tree) to
+    one ``.npz``: ``__meta__`` holds the JSON skeleton, ``aN`` entries
+    hold the lifted arrays. No pickling on either side."""
+    arrays: Dict[str, np.ndarray] = {}
+    meta = _lift_arrays(state, arrays)
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.asarray(json.dumps(meta)), **arrays)
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        return _sink_arrays(meta, data)

@@ -174,9 +174,16 @@ class DispatchTicket:
     host (np.asarray — blocks on exactly this batch), runs the keep
     predicate, releases the slot back to the pool, and returns the
     :class:`BatchResult`. Idempotent: later calls return the cached
-    result."""
+    result.
+
+    Failure contract: if forcing the outputs or the keep predicate
+    raises, the staging slot is STILL released and the ticket unlinked
+    (a pool slot must never leak with its dispatch — the old leak
+    silently drained the pool into the ``n_fallback`` path forever); the
+    ticket is left poisoned, so a later ``retire()`` raises RuntimeError
+    instead of fabricating a result."""
     pipeline: "ServingPipeline"
-    outputs: Dict[str, jax.Array]
+    outputs: Optional[Dict[str, jax.Array]]
     n_real: int
     slot: Optional[int]
     stage_time: float
@@ -187,21 +194,33 @@ class DispatchTicket:
     def retired(self) -> bool:
         return self._result is not None
 
-    def retire(self) -> BatchResult:
-        if self._result is not None:
-            return self._result
-        host_out = self.pipeline._unstage(self.outputs, self.n_real)
-        t1 = time.perf_counter()
-        keep = self.pipeline._keep(host_out, self.n_real)
-        t2 = time.perf_counter()
+    def _release(self) -> None:
         if self.slot is not None:
             self.pipeline.arena.release(self.slot)
             self.slot = None
-        self.outputs = {}               # drop the device references
         try:
             self.pipeline._inflight.remove(self)
         except ValueError:
             pass
+
+    def retire(self) -> BatchResult:
+        if self._result is not None:
+            return self._result
+        if self.outputs is None:
+            raise RuntimeError(
+                "retire() after a failed retirement: this ticket's batch "
+                "was already abandoned (its outputs are gone)")
+        try:
+            host_out = self.pipeline._unstage(self.outputs, self.n_real)
+            t1 = time.perf_counter()
+            keep = self.pipeline._keep(host_out, self.n_real)
+            t2 = time.perf_counter()
+        except BaseException:
+            self.outputs = None         # poison: no result can ever exist
+            self._release()
+            raise
+        self.outputs = {}               # drop the device references
+        self._release()
         self._result = BatchResult(
             host_out, keep, stage_time=self.stage_time,
             compute_time=t1 - self.dispatched_at, output_time=t2 - t1)

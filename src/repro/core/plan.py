@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import autotune as autotune_mod
 from repro.core import energy as energy_mod
@@ -236,6 +237,11 @@ class ExecutionPlan:
         self._layouts: Optional[Dict[str, autotune_mod.KernelConfig]] = None
         self.packed: Dict[str, Any] = {}
         self._packed_bytes: Dict[str, int] = {}
+        # live int8 weight buffers (fed to executables as ARGUMENTS, not
+        # baked-in trace constants) + pristine host copies for re-pack
+        # recovery (DESIGN.md §13)
+        self._weight_arena: Optional[Dict[str, jax.Array]] = None
+        self._host_weights: Dict[str, np.ndarray] = {}
 
         assignment = inspector_mod.assign_backends(graph)
         self.demoted: List[str] = []
@@ -396,6 +402,7 @@ class ExecutionPlan:
                 self, self._layouts)
             self._packed_bytes = {n: p.packed_bytes
                                   for n, p in self.packed.items()}
+            self._weight_arena = None       # rebuild over packed buffers
             if self.arena is not None:
                 self.arena = self._plan_arena()
             self._tuning[self.pack_batch] = pack
@@ -405,20 +412,62 @@ class ExecutionPlan:
         self._tuning[batch_size] = self.tuner.tune_plan(
             self, batch_size, layouts=layouts)
 
+    # -- the live weight arena (DESIGN.md §13) -------------------------------
+
+    @property
+    def weight_arena(self) -> Dict[str, jax.Array]:
+        """Live int8 weight buffers, one per quantized node (the packed
+        tile-aligned buffer when a prepacked entry exists, the raw
+        ``w_q`` otherwise). Executables receive this dict as a RUNTIME
+        argument on every call, so a bit flip injected here (or a
+        re-pack recovery) takes effect without re-tracing — exactly the
+        on-device weight memory an SEU would hit. Scales and biases stay
+        trace-time constants: they are small fp32 host-derived tables,
+        outside the modeled SEU cross-section."""
+        if self._weight_arena is None:
+            arena: Dict[str, jax.Array] = {}
+            for name, qp in self.qplans.items():
+                pk = self.packed.get(name)
+                arena[name] = pk.w_q if pk is not None else qp.w_q
+            self._weight_arena = arena
+            self._host_weights = {n: np.array(a) for n, a in arena.items()}
+        return self._weight_arena
+
+    @property
+    def host_weights(self) -> Dict[str, np.ndarray]:
+        """Pristine host-side copies of the arena (captured at arena
+        build, before any fault could touch device state) — the re-pack
+        recovery source."""
+        self.weight_arena
+        return self._host_weights
+
+    def repack_weights(self, names: Optional[List[str]] = None) -> int:
+        """Restore arena entries from the pristine host copies (the
+        recovery ladder's 're-pack' rung). Returns the bytes rewritten,
+        which the fault controller prices as recovery work."""
+        arena = self.weight_arena
+        total = 0
+        for name in (names if names is not None else list(arena)):
+            arena[name] = jnp.asarray(self._host_weights[name])
+            total += self._host_weights[name].nbytes
+        return total
+
     # -- the batched program -------------------------------------------------
 
     def batched_fn(self, tuning: Optional[Dict[str, Any]] = None
                    ) -> Callable:
-        """The plan as a python callable ``f(inputs[B,...], rngs[B,2])``.
-        ``tuning`` (node -> TuningDecision, one batch rung) binds the
-        autotuned tile configs; quantized nodes with a prepacked weight
-        arena entry consume it directly (no per-call weight padding)."""
+        """The plan as a python callable
+        ``f(inputs[B,...], rngs[B,2], weights)``. ``tuning`` (node ->
+        TuningDecision, one batch rung) binds the autotuned tile configs;
+        ``weights`` is the live :attr:`weight_arena` dict — quantized
+        nodes consume their int8 buffer from it at run time (prepacked
+        entries arrive tile-aligned; no per-call weight padding)."""
         graph, params = self.graph, self.params
         qplans, fused_into = self.qplans, self.fused_into
         packed = self.packed
 
-        def f(inputs: Dict[str, jax.Array], rngs: jax.Array
-              ) -> Dict[str, jax.Array]:
+        def f(inputs: Dict[str, jax.Array], rngs: jax.Array,
+              weights: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
             vals: Dict[str, jax.Array] = {}
             batch = rngs.shape[0]
             for name in graph.graph_inputs:
@@ -444,7 +493,8 @@ class ExecutionPlan:
                         vals[name] = _run_quantized(
                             qplans[name], xs[0],
                             config=dec.config if dec else None,
-                            packed=packed.get(name))
+                            packed=packed.get(name),
+                            w_q=weights[name])
                         continue
                     if node.op == "fused":      # fp32 fused (flex path)
                         vals[name] = _run_fused_f32(node, xs, params)
@@ -471,9 +521,11 @@ class ExecutionPlan:
                                        jnp.float32)
             for name, shape in self.graph.graph_inputs.items()}
         rng_sds = jax.ShapeDtypeStruct((batch_size, 2), jnp.uint32)
+        w_sds = {name: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                 for name, a in self.weight_arena.items()}
         lowered = jax.jit(
             self.batched_fn(self._tuning.get(batch_size))).lower(
-                in_sds, rng_sds)
+                in_sds, rng_sds, w_sds)
         self.n_traces += 1
         lp = LoweredPlan(self, batch_size, lowered)
         self._lowered[batch_size] = lp
@@ -647,7 +699,8 @@ class ExecutionPlan:
 
 def _run_quantized(qp: QuantNodePlan, x: jax.Array,
                    config: Optional[Any] = None,
-                   packed: Optional[Any] = None) -> jax.Array:
+                   packed: Optional[Any] = None,
+                   w_q: Optional[jax.Array] = None) -> jax.Array:
     """One fused kernel per quantized layer: static-scale requantize ->
     int8 MXU matmul/conv -> dequant (+bias, +act, +requantize) epilogue.
 
@@ -664,8 +717,14 @@ def _run_quantized(qp: QuantNodePlan, x: jax.Array,
     SAME pad, geometry computed once at lowering) is all that remains
     per call. ``config`` binds the rung's autotuned tile schedule; both
     paths are bit-exact to the heuristic default.
+
+    ``w_q`` is the node's live weight-arena buffer (a runtime argument
+    of the traced program — DESIGN.md §13); when omitted, the plan-time
+    constant (``packed.w_q`` / ``qp.w_q``) is baked in as before.
     """
     s = qp.act_scale
+    wq = w_q if w_q is not None else (
+        packed.w_q if packed is not None else qp.w_q)
     if qp.op == "dense":
         b = x.shape[0]
         x2 = x.reshape(b, -1)
@@ -674,31 +733,31 @@ def _run_quantized(qp: QuantNodePlan, x: jax.Array,
         scales = jnp.full((b,), s, jnp.float32)
         if packed is not None:
             return kops.int8_matmul(
-                x_q, packed.w_q, scales, packed.w_scale, packed.bias,
+                x_q, wq, scales, packed.w_scale, packed.bias,
                 act=qp.act, requant_scale=qp.requant_scale,
                 bm=(config.bm if config and config.bm else 128),
                 bn=packed.bn, bk=packed.bk, prepacked=True,
                 n_out=packed.n)
         return kops.int8_matmul(
-            x_q, qp.w_q, scales, qp.w_scale,
+            x_q, wq, scales, qp.w_scale,
             qp.bias, act=qp.act, requant_scale=qp.requant_scale)
     x_q = x if qp.int8_input else jnp.clip(
         jnp.round(x / s), -127, 127).astype(jnp.int8)
     if packed is not None:
         h, w = int(x_q.shape[1]), int(x_q.shape[2])
-        kh, kw = int(packed.w_q.shape[0]), int(packed.w_q.shape[1])
+        kh, kw = int(wq.shape[0]), int(wq.shape[1])
         rows = (config.rows_per_block
                 if config and config.rows_per_block else 8)
         geom = conv_geometry(h, w, kh, kw, qp.stride, qp.padding, rows)
         x_q = pad_input(x_q, geom)       # plan-time geometry, one pad op
         return kops.conv2d_int8(
-            x_q, packed.w_q, packed.w_scale, packed.bias, x_scale=s,
+            x_q, wq, packed.w_scale, packed.bias, x_scale=s,
             stride=qp.stride, padding=qp.padding, act=qp.act,
             requant_scale=qp.requant_scale, rows_per_block=rows,
             cout_per_block=packed.cout_per_block, cout=packed.cout,
             pre_padded=True, in_hw=(h, w))
     return kops.conv2d_int8(
-        x_q, qp.w_q, qp.w_scale, qp.bias, x_scale=s,
+        x_q, wq, qp.w_scale, qp.bias, x_scale=s,
         stride=qp.stride, padding=qp.padding, act=qp.act,
         requant_scale=qp.requant_scale)
 
@@ -744,7 +803,9 @@ class CompiledPlan:
 
     def __call__(self, inputs: Dict[str, jax.Array], rngs: jax.Array
                  ) -> Dict[str, jax.Array]:
-        return self._executable(inputs, rngs)
+        # the weight arena is read LIVE on every call: SEU injection and
+        # re-pack recovery swap entries without touching the executable
+        return self._executable(inputs, rngs, self.plan.weight_arena)
 
 
 class EagerPlan:
@@ -765,4 +826,4 @@ class EagerPlan:
     def __call__(self, inputs: Dict[str, jax.Array], rngs: jax.Array
                  ) -> Dict[str, jax.Array]:
         with jax.disable_jit():
-            return self._fn(inputs, rngs)
+            return self._fn(inputs, rngs, self.plan.weight_arena)

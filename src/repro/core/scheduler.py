@@ -153,6 +153,7 @@ class DispatchRecord:
     backend: str = ""                   # backend the batch ran on
     energy_j: float = 0.0               # modeled energy of the dispatch
     power_w: float = 0.0                # modeled busy power while it ran
+    failed: bool = False                # retirement raised; batch requeued
 
     @property
     def fill(self) -> float:
@@ -212,6 +213,9 @@ class ModelTelemetry:
     duty_cycle: float = 0.0             # modeled busy time / serving span
     n_deferrals: int = 0                # envelope-refused dispatch chances
     backend_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # -- degraded-mode accounting (DESIGN.md §13) ----------------------------
+    n_staging_fallbacks: int = 0        # host arena pool misses (fresh alloc)
+    n_failed_dispatches: int = 0        # dispatches whose retirement raised
 
     @property
     def downlink_reduction(self) -> float:
@@ -294,6 +298,10 @@ class _ModelService:
         # observations EWMA as before.
         self.est_service: Dict[Tuple[str, int], float] = {}
         self._seeded: set = set()
+        # backends quarantined by the fault controller (demotion
+        # recovery, DESIGN.md §13): dispatch skips them until repaired.
+        # Empty set -> dispatch is identical to the unfaulted scheduler.
+        self.quarantined: set = set()
         self._rng = jax.random.PRNGKey(
             int(np.frombuffer(name.encode()[:4].ljust(4, b"\0"),
                               np.uint32)[0]))
@@ -301,6 +309,14 @@ class _ModelService:
     def next_rng(self) -> jax.Array:
         self._rng, sub = jax.random.split(self._rng)
         return sub
+
+    @property
+    def active_backends(self) -> Tuple[str, ...]:
+        """Registration-ordered backends minus the quarantined set. If
+        EVERY backend is quarantined, serving beats stopping: fall back
+        to the full registration list rather than starve the queue."""
+        act = tuple(b for b in self.backends if b not in self.quarantined)
+        return act or self.backends
 
     def seed_service(self, backend: str, rung: int, seconds: float) -> None:
         """Install a modeled prior for the flush margin; replaced (not
@@ -326,7 +342,7 @@ class _ModelService:
         with its modeled CostSignature latency at register time, so the
         margin is cadence-correct from the very first flush decision;
         real observations replace the seeds as dispatches happen."""
-        primary = self.backends[0]
+        primary = self.active_backends[0]
         worst = max((t for (b, _), t in self.est_service.items()
                      if b == primary), default=0.0)
         return self.flush_safety * worst
@@ -418,6 +434,9 @@ class ContinuousBatchingScheduler:
         self._thread: Optional[threading.Thread] = None
         self._thread_error: Optional[BaseException] = None
         self._stop = threading.Event()
+        # optional degraded-mode controller (core/faults.py); None keeps
+        # serve_trace byte-for-byte the unfaulted loop
+        self._faults = None
 
     # -- setup --------------------------------------------------------------
 
@@ -499,6 +518,13 @@ class ContinuousBatchingScheduler:
     def models(self) -> List[str]:
         return list(self._order)
 
+    def attach_faults(self, controller) -> None:
+        """Attach a :class:`~repro.core.faults.FaultController`:
+        ``serve_trace`` will tick it every scheduling round (injection +
+        due self-tests) and let its pending event times drive the idle
+        virtual-clock jumps."""
+        self._faults = controller
+
     # -- submission ---------------------------------------------------------
 
     def submit(self, model: str, inputs: Dict[str, np.ndarray],
@@ -531,10 +557,11 @@ class ContinuousBatchingScheduler:
         no envelope -> the primary backend, unconditionally (PR-2
         behavior). Under an envelope -> the admissible backend with the
         lowest modeled dispatch energy (ties resolve to registration
-        order), charging the envelope; (None, None) means defer."""
+        order), charging the envelope; (None, None) means defer.
+        Quarantined backends (fault demotion) are skipped entirely."""
         if self.envelope is None:
-            return svc.backends[0], None
-        ranked = sorted(svc.backends,
+            return svc.active_backends[0], None
+        ranked = sorted(svc.active_backends,
                         key=lambda b: svc.costs[(b, rung)].energy_j)
         for b in ranked:
             sig = svc.costs[(b, rung)]
@@ -698,12 +725,17 @@ class ContinuousBatchingScheduler:
             result = inf.ticket.retire()
         except BaseException:
             # no silent loss on an async failure either: batch back at
-            # the queue head, draw refunded (the dispatch record stays —
-            # the dispatch DID happen — but its requests are requeued)
+            # the queue head in original order, with the ORIGINAL arrival
+            # timestamps and deadlines (Request objects are frozen), and
+            # the draw refunded. The dispatch record is marked failed so
+            # the inevitable re-dispatch cannot double-count the batch in
+            # p50/p99, fill-histogram, or energy telemetry.
             with self._lock:
                 inf.svc.queue.extendleft(reversed(inf.reqs))
                 if inf.draw is not None:
                     self.envelope.remove(inf.draw)
+                self.dispatches[inf.rec_idx] = dataclasses.replace(
+                    self.dispatches[inf.rec_idx], failed=True)
             raise
         measured = time.perf_counter() - inf.t0
         service = inf.sig.latency_s if self.clock == "modeled" else measured
@@ -743,7 +775,7 @@ class ContinuousBatchingScheduler:
         picked rung) of a due dispatch — how far a blocked virtual clock
         advances (step degrades rungs the same way)."""
         times = []
-        for b in svc.backends:
+        for b in svc.active_backends:
             for r in svc.ladder:
                 if r > rung:
                     break
@@ -807,17 +839,30 @@ class ContinuousBatchingScheduler:
     # -- virtual-clock trace serving ----------------------------------------
 
     def serve_trace(self, trace: Sequence[Tuple[float, str, Dict]],
-                    start: float = 0.0) -> float:
+                    start: float = 0.0,
+                    stop_at: Optional[float] = None) -> float:
         """Serve a pre-built arrival trace of ``(t, model, inputs)`` under a
         virtual clock: arrivals occur at trace time, each dispatch occupies
         its measured execution time. Deterministic given the trace; returns
-        the final virtual time."""
+        the final virtual time.
+
+        ``stop_at`` halts the loop once the clock reaches that instant —
+        the watchdog-reboot cut point (DESIGN.md §13): every arrival with
+        ``t <= `` the returned time has been submitted (accepted into a
+        queue, hence checkpointable), in-flight tickets are retired, and
+        queued-but-undispatched requests stay queued. The caller resumes
+        by replaying the remaining trace events (``t >`` the returned
+        time) into a restored scheduler."""
         ev = sorted(trace, key=lambda e: e[0])
         now, i, n = start, 0, len(ev)
         while i < n or self.pending():
             while i < n and ev[i][0] <= now + 1e-12:
                 self.submit(ev[i][1], ev[i][2], arrival=ev[i][0])
                 i += 1
+            if stop_at is not None and now >= stop_at - 1e-12:
+                break                           # accepted, not yet served
+            if self._faults is not None:
+                now = self._faults.tick(self, now)
             rec = self.step(now)
             if rec is not None:
                 now += rec.service_time         # server busy while computing
@@ -826,6 +871,10 @@ class ContinuousBatchingScheduler:
             ft = self.next_event_time(now)
             if ft is not None:
                 nxt = ft if nxt is None else min(nxt, ft)
+            if self._faults is not None:
+                et = self._faults.next_event_time(now)
+                if et is not None:
+                    nxt = et if nxt is None else min(nxt, et)
             if nxt is None:
                 if self.pending():
                     # only reachable under an envelope whose remaining
@@ -839,7 +888,128 @@ class ContinuousBatchingScheduler:
             # the clock strictly forward
             now = max(now + 1e-9, nxt) if nxt <= now else nxt
         self.sync()                     # end of stream: retire everything
+        if self._faults is not None and stop_at is None:
+            now = self._faults.finalize(self, now)
         return now
+
+    # -- checkpoint/restore (DESIGN.md §13) ---------------------------------
+
+    @staticmethod
+    def _raw_key(key: jax.Array) -> np.ndarray:
+        if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+            key = jax.random.key_data(key)
+        return np.asarray(key)
+
+    def state_dict(self) -> Dict:
+        """The scheduler ledger as a plain-python/numpy tree: accepted
+        queues (request ids, inputs, ORIGINAL arrivals and deadlines),
+        EWMA service state, per-model RNG, quarantine sets, dispatch and
+        deferral records, and completion METADATA (outputs are not
+        checkpointed — completed results were already delivered, and the
+        restored records keep p50/p99/fill telemetry exact).
+
+        In-flight tickets are retired first (``sync()``): a checkpoint
+        cut is a quiesce point, never a torn dispatch. Compiled plans,
+        packed weights, and the pipeline timeline are NOT state — a
+        reboot reloads the bitstream and re-registers the same models,
+        then :meth:`load_state_dict` overlays this ledger."""
+        self.sync()
+        with self._lock:
+            models = {}
+            for name, svc in self._svcs.items():
+                models[name] = {
+                    "deadline_s": svc.deadline_s,
+                    "backends": list(svc.backends),
+                    "ladder": list(svc.ladder),
+                    "n_submitted": svc.n_submitted,
+                    "n_deferred": svc.n_deferred,
+                    "last_deferred_rid": svc._last_deferred_rid,
+                    "queue": [
+                        {"rid": r.rid, "arrival": r.arrival,
+                         "deadline": r.deadline,
+                         "inputs": {k: np.asarray(v)
+                                    for k, v in r.inputs.items()}}
+                        for r in svc.queue],
+                    "est_service": [[b, r, t] for (b, r), t
+                                    in svc.est_service.items()],
+                    "seeded": [[b, r] for (b, r) in sorted(svc._seeded)],
+                    "rng": self._raw_key(svc._rng),
+                    "quarantined": sorted(svc.quarantined),
+                }
+            return {
+                "version": 1,
+                "flush_safety": self.flush_safety,
+                "clock": self.clock,
+                "pipeline": self.pipeline,
+                "next_rid": self._next_rid,
+                "rr": self._rr,
+                "order": list(self._order),
+                "models": models,
+                "dispatches": [dataclasses.asdict(d)
+                               for d in self.dispatches],
+                "deferrals": [dataclasses.asdict(d)
+                              for d in self.deferrals],
+                "completions": [
+                    {"rid": c.rid, "model": c.model, "kept": bool(c.kept),
+                     "arrival": c.arrival, "finished": c.finished,
+                     "rung": c.rung, "n_real": c.n_real,
+                     "deadline": c.deadline}
+                    for c in self.completions],
+            }
+
+    def load_state_dict(self, state: Dict) -> None:
+        """Overlay a :meth:`state_dict` ledger onto a freshly constructed
+        scheduler with the SAME models registered (same backends and
+        ladders — validated): the reboot protocol is re-register from
+        pristine plans, then restore. Restored completions carry their
+        metadata with empty ``outputs`` (already delivered pre-reboot)."""
+        if state.get("version") != 1:
+            raise ValueError(
+                f"unsupported scheduler checkpoint version "
+                f"{state.get('version')!r}")
+        with self._lock:
+            if sorted(self._svcs) != sorted(state["models"]):
+                raise ValueError(
+                    f"checkpoint models {sorted(state['models'])} do not "
+                    f"match registered models {sorted(self._svcs)}")
+            for name, ms in state["models"].items():
+                svc = self._svcs[name]
+                if (list(svc.backends) != list(ms["backends"])
+                        or list(svc.ladder) != list(ms["ladder"])):
+                    raise ValueError(
+                        f"checkpoint for {name!r} was taken with backends="
+                        f"{ms['backends']} ladder={ms['ladder']}; "
+                        f"re-register to match before restoring")
+                svc.deadline_s = float(ms["deadline_s"])
+                svc.n_submitted = int(ms["n_submitted"])
+                svc.n_deferred = int(ms["n_deferred"])
+                lr = ms["last_deferred_rid"]
+                svc._last_deferred_rid = None if lr is None else int(lr)
+                svc.queue.clear()
+                for q in ms["queue"]:
+                    svc.queue.append(Request(
+                        int(q["rid"]), name,
+                        {k: np.asarray(v) for k, v in q["inputs"].items()},
+                        float(q["arrival"]), float(q["deadline"])))
+                svc.est_service = {(str(b), int(r)): float(t)
+                                   for b, r, t in ms["est_service"]}
+                svc._seeded = {(str(b), int(r)) for b, r in ms["seeded"]}
+                raw = np.asarray(ms["rng"], dtype=np.uint32)
+                if jax.dtypes.issubdtype(svc._rng.dtype,
+                                         jax.dtypes.prng_key):
+                    svc._rng = jax.random.wrap_key_data(jax.numpy.asarray(raw))
+                else:
+                    svc._rng = jax.numpy.asarray(raw)
+                svc.quarantined = set(ms["quarantined"])
+            self._next_rid = int(state["next_rid"])
+            self._rr = int(state["rr"])
+            self._order = list(state["order"])
+            self.dispatches = [DispatchRecord(**d)
+                               for d in state["dispatches"]]
+            self.deferrals = [DeferralRecord(**d)
+                              for d in state["deferrals"]]
+            self.completions = [Completion(outputs={}, **c)
+                                for c in state["completions"]]
 
     # -- asynchronous (wall-clock) mode -------------------------------------
 
@@ -892,7 +1062,18 @@ class ContinuousBatchingScheduler:
                 tel = ModelTelemetry(name, svc.deadline_s,
                                      n_submitted=svc.n_submitted)
                 comps = [c for c in self.completions if c.model == name]
-                disps = [d for d in self.dispatches if d.model == name]
+                # failed dispatches were requeued and re-dispatched: only
+                # the records that actually produced completions count,
+                # or the retried batch double-counts fill/energy/p99
+                disps = [d for d in self.dispatches
+                         if d.model == name and not d.failed]
+                tel.n_failed_dispatches = sum(
+                    1 for d in self.dispatches
+                    if d.model == name and d.failed)
+                tel.n_staging_fallbacks = sum(
+                    p.arena.n_fallback
+                    for rungs in svc.pipelines.values()
+                    for p in rungs.values())
                 tel.n_completed = len(comps)
                 tel.n_kept = sum(c.kept for c in comps)
                 tel.deadline_misses = sum(c.missed_deadline for c in comps)

@@ -36,7 +36,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os
+
 from repro.configs import get_arch, reduced
+from repro.core import faults as faults_mod
 from repro.core.energy import PowerEnvelope
 from repro.core.engine import Engine
 from repro.core.scheduler import (BACKENDS, ContinuousBatchingScheduler,
@@ -99,7 +102,22 @@ def serve_space(args) -> int:
     if args.pipeline:
         print(f"[pipeline] async ticket dispatch on, "
               f"{args.staging_buffers} staging buffer(s) per (model, rung)")
+    fault_mode = args.fault_rate > 0.0 or args.self_test_period is not None
+    if fault_mode and "accel" not in backends:
+        raise SystemExit("--fault-rate/--self-test-period model SEUs in "
+                         "the accel weight arenas; include 'accel' in "
+                         "--backend")
+    if fault_mode and args.recovery == "demote" and len(backends) < 2:
+        raise SystemExit("--recovery demote quarantines the primary "
+                         "backend; register a fallback (e.g. accel,cpu)")
+    if (not fault_mode and (args.fault_seed != 0
+                            or args.recovery != "repack")):
+        raise SystemExit("--fault-seed/--recovery configure fault "
+                         "injection; pass --fault-rate and/or "
+                         "--self-test-period to enable it")
+
     trace = []
+    canaries = {}
     for mi, name in enumerate(names):
         m = SPACE_MODELS[name]
         graph = m.build_graph()
@@ -117,9 +135,35 @@ def serve_space(args) -> int:
         sched.register(name, engine, backend=backends, ladder=ladder,
                        keep_predicate=KEEP_PREDICATES.get(name),
                        warmup_sample=reqs[0] if reqs else None)
+        canaries[name] = reqs[:1]
         trace += [(t, name, r) for t, r in
                   zip(poisson_arrivals(args.rate, args.requests, seed=mi),
                       reqs)]
+
+    controller = None
+    if fault_mode:
+        horizon = max((t for t, _, _ in trace), default=0.0) + 1.0
+        controller = faults_mod.FaultController(faults_mod.FaultConfig(
+            seed=args.fault_seed, fault_rate=args.fault_rate,
+            horizon_s=horizon, self_test_period=args.self_test_period,
+            recovery=args.recovery))
+        sched.attach_faults(controller)
+        for name in names:
+            controller.arm(sched, name, canaries[name])
+        print(f"[faults] armed {len(names)} model(s): rate="
+              f"{args.fault_rate}/s  self-test period="
+              f"{args.self_test_period} s  recovery={args.recovery}")
+
+    if args.checkpoint and os.path.exists(args.checkpoint):
+        # the watchdog-reboot path: a fresh process re-registers the same
+        # models (reloading the pristine bitstream + weights), then
+        # resumes the accepted-request ledger from the checkpoint.
+        sched.load_state_dict(faults_mod.load_checkpoint(args.checkpoint))
+        pending = sched.pending()
+        done = {c.rid for c in sched.completions}
+        print(f"[checkpoint] restored {args.checkpoint}: "
+              f"{len(done)} completed, {pending} queued")
+        trace = []                 # the checkpoint owns the accepted queue
 
     t0 = time.perf_counter()
     end = sched.serve_trace(trace)
@@ -127,6 +171,16 @@ def serve_space(args) -> int:
     print(f"[serve] {len(trace)} requests over {len(names)} model(s)  "
           f"virtual={end:.3f} s  wall={wall:.3f} s")
     print(sched.summary())
+    if controller is not None:
+        rep = controller.report()
+        print(f"[faults] injected={rep['n_injected']}  detected="
+              f"{rep['n_detected']}  recovered={rep['n_recovered']}  "
+              f"self-tests={rep['n_self_tests']}  overhead="
+              f"{rep['overhead_energy_j']*1e3:.3f} mJ  max detection "
+              f"latency={rep['max_detection_latency_s']*1e3:.2f} ms")
+    if args.checkpoint:
+        faults_mod.save_checkpoint(args.checkpoint, sched.state_dict())
+        print(f"[checkpoint] saved {args.checkpoint}")
     return 0
 
 
@@ -237,6 +291,29 @@ def main(argv=None) -> int:
                     help="refine the autotuner's top-K picks by "
                          "wall-clock measurement (measures the Pallas "
                          "interpreter on non-TPU hosts)")
+    # degraded-mode fault injection + checkpointing (space mode; §13)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="SEU injection rate in faults per virtual "
+                         "second (Poisson, seeded); flips bits in the "
+                         "accel prepacked weight arenas")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault schedule and flip targets")
+    ap.add_argument("--self-test-period", type=float, default=None,
+                    metavar="S",
+                    help="run an in-band golden-canary self-test per "
+                         "model every S virtual seconds (low-priority "
+                         "scheduler work; detects silent corruption)")
+    ap.add_argument("--recovery", default="repack",
+                    choices=["repack", "demote"],
+                    help="on canary mismatch: re-pack arenas from "
+                         "pristine host weights, or quarantine the "
+                         "primary backend (dispatch falls back) until a "
+                         "delayed repair")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="scheduler-ledger checkpoint (.npz): restored "
+                         "at startup if present (the watchdog-reboot "
+                         "path — zero accepted requests lost), saved at "
+                         "exit")
     # lm mode
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")

@@ -327,3 +327,41 @@ def test_stale_cache_schema_discarded(tmp_path):
     path.write_text(json.dumps({"version": -1, "entries": {"x": {}}}))
     cache = TuningCache(str(path))
     assert len(cache) == 0
+
+
+def test_corrupt_cache_file_is_cold_not_fatal(tmp_path, capsys):
+    """A truncated/corrupt/foreign cache file (half-written at the last
+    power cut — the exact scenario a tuning cache exists for) must load
+    as a COLD cache with a one-line warning, never crash plan building.
+    The seed raised json.JSONDecodeError from the constructor."""
+    for blob in ('{"version": 1, "entries": {"trunc',      # cut mid-write
+                 "\x00\x7fELF garbage",                    # not JSON at all
+                 "[1, 2, 3]",                              # JSON, not a dict
+                 '"just a string"'):
+        path = tmp_path / "tuning.json"
+        path.write_text(blob)
+        cache = TuningCache(str(path))
+        assert len(cache) == 0
+        out = capsys.readouterr().out
+        assert "ignoring" in out and "cold cache" in out
+    # and an unreadable path (directory) degrades the same way
+    cache = TuningCache(str(tmp_path))
+    assert len(cache) == 0
+    assert "cold cache" in capsys.readouterr().out
+
+
+def test_corrupt_cache_recovers_end_to_end(tmp_path):
+    """An Engine pointed at a corrupt cache file still autotunes (cold),
+    then persists a fresh valid cache over the corpse."""
+    import json
+    path = tmp_path / "tuning.json"
+    path.write_text('{"version": 1, "entries"')            # torn write
+    m = SPACE_MODELS["multi_esperta"]
+    e = Engine(m.build_graph(), m.init_params(jax.random.PRNGKey(0)),
+               autotune=True, tuning_cache=str(path))
+    e.calibrate([m.synthetic_input(jax.random.PRNGKey(i))
+                 for i in range(2)])
+    e.compile("accel", 4)                                  # tunes + saves
+    payload = json.loads(path.read_text())                 # valid again
+    assert payload["version"] == autotune_mod.SCHEMA_VERSION
+    assert isinstance(payload["entries"], dict)

@@ -71,14 +71,11 @@ def test_golden_fixture_exists_or_regen(computed):
         f"missing {GOLDEN_PATH}; run with REGEN_GOLDEN=1 to create it")
 
 
-@pytest.mark.parametrize("name", sorted(SPACE_MODELS))
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_golden_outputs_match(name, backend, computed):
-    with open(GOLDEN_PATH) as f:
-        golden = json.load(f)
-    assert name in golden, f"no golden entry for {name}; REGEN_GOLDEN=1"
-    want = golden[name][backend]
-    got = computed[name][backend]
+def _compare(want, got, name, backend):
+    """The golden comparison: exact shape/dtype, exact integer outputs,
+    float-associativity tolerance on float outputs. Raises AssertionError
+    naming the (model, backend, output) on any drift — also reused by
+    the in-band serving canaries' test coverage below."""
     assert set(want) == set(got), (set(want), set(got))
     for k in want:
         w, g = want[k], got[k]
@@ -96,3 +93,50 @@ def test_golden_outputs_match(name, backend, computed):
             np.testing.assert_allclose(
                 g["sum"], w["sum"], rtol=1e-4, atol=1e-4,
                 err_msg=f"{name}/{backend}/{k} (sum drifted)")
+
+
+@pytest.mark.parametrize("name", sorted(SPACE_MODELS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_outputs_match(name, backend, computed):
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert name in golden, f"no golden entry for {name}; REGEN_GOLDEN=1"
+    _compare(golden[name][backend], computed[name][backend], name, backend)
+
+
+# -- the mismatch path itself (a comparison that cannot fail detects
+# nothing — ISSUE 7 exercises the detector, not just the happy path) ----
+
+
+def test_golden_mismatch_is_detected(computed):
+    name = sorted(SPACE_MODELS)[0]
+    want = computed[name]["accel"]
+    drifted = json.loads(json.dumps(want))       # deep copy via JSON
+    k = sorted(drifted)[0]
+    drifted[k]["values"][0] += 1.0
+    drifted[k]["sum"] += 1.0
+    with pytest.raises(AssertionError, match=f"{name}/accel/{k}"):
+        _compare(want, drifted, name, "accel")
+    wrong_shape = json.loads(json.dumps(want))
+    wrong_shape[k]["shape"] = [9999]
+    with pytest.raises(AssertionError):
+        _compare(want, wrong_shape, name, "accel")
+    missing = {f"not_{k}": v for k, v in want.items()}
+    with pytest.raises(AssertionError):
+        _compare(want, missing, name, "accel")
+
+
+def test_regen_roundtrip_reproduces_passing_fixture(computed, tmp_path):
+    """What REGEN_GOLDEN=1 writes must round-trip through JSON into a
+    fixture the comparison accepts verbatim — regeneration can never
+    produce a file that immediately fails its own suite."""
+    path = tmp_path / "space_models.json"
+    with open(path, "w") as f:
+        json.dump(computed, f, indent=1, sort_keys=True)
+    with open(path) as f:
+        reloaded = json.load(f)
+    assert sorted(reloaded) == sorted(SPACE_MODELS)
+    for name in reloaded:
+        for backend in BACKENDS:
+            _compare(reloaded[name][backend], computed[name][backend],
+                     name, backend)

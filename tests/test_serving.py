@@ -572,3 +572,85 @@ def test_first_flush_decision_uses_seeded_margin(engines):
     assert svc.flush_margin() > 0.0
     assert svc.pick(ft - 1e-6) is None          # not due yet
     assert svc.pick(ft + 1e-6) is not None      # due at the seeded time
+
+
+# ---------------------------------------------------------------------------
+# error-path bugfixes (ISSUE 7 satellites): staging-slot leak on failed
+# retirement, and failed-dispatch records poisoning telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_failed_retirement_releases_slot_and_poisons_ticket(engines):
+    """A keep-predicate crash during retire() must hand the staging slot
+    back to the pool (the seed leaked it: a few failures starved the
+    arena into permanent fallback allocation) and must poison the
+    ticket — a second retire() of the abandoned batch raises instead of
+    silently returning garbage."""
+    from repro.core.pipeline import ServingPipeline
+    m, e = engines["logistic_net"]
+    boom = {"armed": False}
+
+    def exploding_keep(out):
+        if boom["armed"]:
+            raise RuntimeError("keep predicate exploded")
+        return True
+
+    pipe = ServingPipeline(e, backend="flex", batch_size=4,
+                           keep_predicate=exploding_keep)
+    reqs = _requests(m, 4)
+    pipe.execute_batch(reqs)                     # warm path, keep fine
+    boom["armed"] = True
+    n_free = pipe.arena.n_free
+    ticket = pipe.execute_batch_async(reqs)
+    assert pipe.arena.n_free == n_free - 1       # slot owned in flight
+    with pytest.raises(RuntimeError, match="exploded"):
+        ticket.retire()
+    assert pipe.arena.n_free == n_free           # the leak: slot returned
+    assert not pipe._inflight                    # and the ticket unlinked
+    with pytest.raises(RuntimeError, match="failed retirement"):
+        ticket.retire()
+    boom["armed"] = False
+    repeat = pipe.execute_batch(reqs)            # pool intact afterwards
+    assert repeat.keep == [True] * 4
+    assert pipe.arena.n_fallback == 0
+
+
+def test_failed_dispatch_record_excluded_from_telemetry(engines):
+    """When an async retirement fails, the already-appended dispatch
+    record must be marked failed so the re-dispatch of the SAME batch
+    does not double-count it in fill/latency/energy telemetry — and the
+    requeued requests keep their ORIGINAL arrivals and deadlines."""
+    m, e = engines["logistic_net"]
+    reqs = _requests(m, 4)
+    boom = {"armed": False}
+
+    def exploding_keep(out):
+        if boom["armed"]:
+            boom["armed"] = False                # only the first batch
+            raise RuntimeError("keep predicate exploded")
+        return True
+
+    sched = ContinuousBatchingScheduler(clock="modeled", pipeline=True)
+    sched.register("logistic_net", e, backend="flex", ladder=(4,),
+                   keep_predicate=exploding_keep, warmup_sample=reqs[0])
+    boom["armed"] = True
+    trace = [(0.001 * i, "logistic_net", r) for i, r in enumerate(reqs)]
+    with pytest.raises(RuntimeError, match="exploded"):
+        sched.serve_trace(trace)
+
+    svc = sched._svcs["logistic_net"]
+    assert [r.arrival for r in svc.queue] == [t for t, _, _ in trace]
+    assert all(r.deadline == r.arrival + svc.deadline_s
+               for r in svc.queue)               # originals, not re-stamped
+    assert len(sched.dispatches) == 1 and sched.dispatches[0].failed
+
+    sched.serve_trace([])                        # drain the requeued batch
+    assert sorted(c.rid for c in sched.completions) == list(range(4))
+    ok = [d for d in sched.dispatches if not d.failed]
+    failed = [d for d in sched.dispatches if d.failed]
+    assert len(ok) == 1 and len(failed) == 1
+    tel = sched.telemetry()["logistic_net"]
+    assert tel.n_dispatches == 1                 # seed double-counted: 2
+    assert tel.n_failed_dispatches == 1
+    assert tel.n_completed == 4
+    assert tel.n_staging_fallbacks == 0          # and the slot came back
