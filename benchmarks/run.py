@@ -38,6 +38,9 @@ SECTIONS = {
     "pipeline": ("benchmarks.pipeline", False, True,
                  "pipelined-runtime gates: modeled stage overlap, "
                  "pipelined==sync identity, overlap-ledger invariants"),
+    "trace": ("benchmarks.trace_frontend", False, True,
+              "jaxpr front-end gates: traced==hand-built structure + "
+              "bit-exactness, never-hand-built demo serve"),
     "faults": ("benchmarks.faults", False, True,
                "degraded-mode gates: SEU storms detected+recovered, "
                "watchdog reboot zero-loss, inert-controller identity"),

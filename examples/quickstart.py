@@ -26,11 +26,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vae_encoder",
                     choices=sorted(SPACE_MODELS))
+    ap.add_argument("--trace", action="store_true",
+                    help="build the op graph by tracing the model's "
+                         "plain JAX function through the jaxpr front-end "
+                         "(DESIGN.md §14) instead of the hand-built "
+                         "builder — bit-exact same graph")
     args = ap.parse_args()
     m = SPACE_MODELS[args.model]
 
-    # 1. graph
+    # 1. graph (hand-built, or traced from the jaxpr — same result)
     graph = m.build_graph()
+    params = m.init_params(jax.random.PRNGKey(0))
+    if args.trace:
+        import functools
+        from repro.frontend import trace
+        tm = trace(functools.partial(m.jax_forward, params),
+                   dict(graph.graph_inputs), name=m.name)
+        graph, params = tm.graph, tm.params
+        print(f"[trace] rebuilt {m.name} from its jaxpr: "
+              f"{len(graph.order)} nodes")
     print(f"[graph] {graph.name}: {graph.n_params:,} params, "
           f"{graph.n_ops:,} ops (paper: {m.paper_params:,} / "
           f"{m.paper_ops:,})")
@@ -40,7 +54,6 @@ def main() -> None:
     print(f"[inspect]\n{report.summary()}")
 
     # 3. execute on the three backends
-    params = m.init_params(jax.random.PRNGKey(0))
     engine = Engine(graph, params)
     inputs = m.synthetic_input(jax.random.PRNGKey(1))
     engine.calibrate([m.synthetic_input(jax.random.PRNGKey(i))

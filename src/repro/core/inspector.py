@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.core.opgraph import Graph, base_op
+from repro.core.opgraph import Graph, Node, base_op
 
 # The DPU-analog op table. Deliberately restrictive, mirroring DPUCZDX8G:
 # CNN ops + ReLU only — no sigmoid/tanh/softplus, no comparators, no 3-D
@@ -26,6 +26,23 @@ ACCEL_SUPPORTED = {
 # Ops the accel path *executes quantized* (the rest of ACCEL_SUPPORTED are
 # structural / fused into epilogues).
 ACCEL_QUANTIZED = {"conv2d", "dense"}
+
+# kinds that move no data at run time: never compute, never counted in
+# operator-coverage reports, never split a backend segment
+STRUCTURAL_KINDS = ("input", "const")
+
+
+def accel_supports(node: Node) -> bool:
+    """Per-NODE accel support — the op table plus attr-level restrictions
+    the int8 kernels carry: grouped (e.g. depthwise) conv2d has no
+    shift-and-matmul kernel, so it runs on the flex path even though
+    plain conv2d is supported."""
+    bop = base_op(node)
+    if bop not in ACCEL_SUPPORTED:
+        return False
+    if bop == "conv2d" and node.attrs.get("groups", 1) != 1:
+        return False
+    return True
 
 
 @dataclasses.dataclass
@@ -54,13 +71,12 @@ def assign_backends(graph: Graph) -> Dict[str, str]:
     out = {}
     for name in graph.order:
         node = graph.nodes[name]
-        if node.op in ("input", "const"):       # structural, no compute
+        if node.op in STRUCTURAL_KINDS:         # structural, no compute
             out[name] = "accel"
             continue
         # a fused node goes where its base compute op goes (its epilogue
         # runs inside the kernel — DESIGN.md §10)
-        out[name] = ("accel" if base_op(node) in ACCEL_SUPPORTED
-                     else "flex")
+        out[name] = "accel" if accel_supports(node) else "flex"
     return out
 
 
@@ -69,7 +85,11 @@ def inspect(graph: Graph) -> InspectionReport:
     supported, unsupported = [], []
     for name in graph.order:
         node = graph.nodes[name]
-        if node.op == "input":
+        if node.op in STRUCTURAL_KINDS:
+            # const nodes (constant folding; tracer-captured literals)
+            # are structural like inputs — counting them into supported/
+            # fully_supported would report plan-time values as compute
+            # ops the accelerator "runs"
             continue
         (supported if assignment[name] == "accel" else unsupported
          ).append(node.op)

@@ -96,7 +96,16 @@ class Graph:
 
     def add(self, op: str, inputs: Sequence[str], name: Optional[str] = None,
             **attrs) -> str:
-        name = name or f"{op}_{len(self.order)}"
+        if name is None:
+            # collision-proof auto-naming: the obvious f"{op}_{len(order)}"
+            # collides with explicitly-named nodes (a tracer emitting
+            # hundreds of auto-named nodes next to user-named outputs hits
+            # this immediately) — bump the counter until the name is free
+            i = len(self.order)
+            name = f"{op}_{i}"
+            while name in self.nodes:
+                i += 1
+                name = f"{op}_{i}"
         if name in self.nodes:
             raise ValueError(f"duplicate node {name}")
         node = Node(name, op, list(inputs), attrs)
@@ -199,6 +208,26 @@ def _pool_out(size: int, k: int, stride: int) -> int:
 
 
 def _infer(node: Node, ins: List[Node]) -> None:
+    """Shape-inference entry point. Every failure names the node and its
+    input shapes — a trace of a 200-eqn jaxpr dies with a message that
+    points at the offending node, not just the op kind."""
+    try:
+        _infer_impl(node, ins)
+    except ValueError as e:
+        shapes = [i.out_shape for i in ins]
+        if node.name in str(e):         # already carries full context
+            raise
+        raise ValueError(
+            f"{node.op} node {node.name!r} (input shapes {shapes}): {e}"
+        ) from e
+    except (KeyError, TypeError, IndexError) as e:
+        shapes = [i.out_shape for i in ins]
+        raise ValueError(
+            f"{node.op} node {node.name!r} (input shapes {shapes}): "
+            f"{type(e).__name__}: {e}") from e
+
+
+def _infer_impl(node: Node, ins: List[Node]) -> None:
     op, a = node.op, node.attrs
     shapes = [i.out_shape for i in ins]
 
@@ -210,15 +239,20 @@ def _infer(node: Node, ins: List[Node]) -> None:
         (h, w, cin) = shapes[0]
         kh, kw = a["kernel"]
         cout, stride, pad = a["features"], a.get("stride", 1), a.get("padding", "SAME")
+        groups = a.get("groups", 1)
+        if cin % groups or cout % groups:
+            raise ValueError(
+                f"conv2d {node.name!r}: groups={groups} must divide both "
+                f"cin={cin} and features={cout}")
         ho, wo = _conv_out(h, kh, stride, pad), _conv_out(w, kw, stride, pad)
         if ho <= 0 or wo <= 0:
             raise ValueError(f"conv2d {node.name!r}: kernel ({kh},{kw}) "
                              f"with padding {pad} over {shapes[0]} leaves "
                              "no output")
         node.out_shape = (ho, wo, cout)
-        node.param_count = kh * kw * cin * cout + cout
+        node.param_count = kh * kw * (cin // groups) * cout + cout
         node.bias_params = cout
-        node.macs = ho * wo * cout * kh * kw * cin
+        node.macs = ho * wo * cout * kh * kw * (cin // groups)
         node.ops = 2 * node.macs + ho * wo * cout
     elif op == "conv3d":
         (d, h, w, cin) = shapes[0]

@@ -59,7 +59,8 @@ def _conv2d_b(x, p, a):
         x.astype(jnp.float32), p["w"].astype(jnp.float32),
         window_strides=(a.get("stride", 1),) * 2,
         padding=a.get("padding", "SAME"),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=a.get("groups", 1))
     return out + p["b"]
 
 

@@ -125,6 +125,11 @@ def _trace(engine, inputs) -> Dict[str, jax.Array]:
         node = g.nodes[name]
         if node.op == "input":
             continue
+        if node.op == "const":
+            # structural plan-time value (tracer-captured literal or a
+            # folding product) — no impl to run, no RNG to consume
+            vals[name] = jnp.asarray(node.attrs["value"])
+            continue
         rng, sub = jax.random.split(rng)
         vals[name] = OP_IMPLS[node.op]([vals[i] for i in node.inputs],
                                        engine.params.get(name, {}),

@@ -1,0 +1,19 @@
+"""Jaxpr front-end: trace jax.jit-able models into the op graph.
+
+Public surface:
+
+* ``trace(fn, example_inputs, name=...)`` -> ``TracedModel`` whose
+  ``.graph``/``.params`` flow through ``Engine.compile()`` unchanged.
+* ``sample_normal(mu, logvar)`` — the reparameterization primitive for
+  use inside traced functions (maps to the graph's RNG-threaded op).
+* ``register(primitive_name)`` — extend the translator registry.
+* ``UnsupportedPrimitiveError`` — raised, naming the eqn, for anything
+  the graph can't express.
+"""
+from repro.frontend.ir import UnsupportedPrimitiveError
+from repro.frontend.ops import sample_normal
+from repro.frontend.trace import TRACE_BATCH, TracedModel, trace
+from repro.frontend.translators import TRANSLATORS, register
+
+__all__ = ["trace", "TracedModel", "TRACE_BATCH", "sample_normal",
+           "register", "TRANSLATORS", "UnsupportedPrimitiveError"]

@@ -1,0 +1,52 @@
+"""Graph-level custom primitives usable inside traced JAX functions.
+
+The op graph has one op with no lax equivalent: ``sample_normal`` — the
+VAE reparameterization ``z = mu + exp(0.5*logvar) * eps`` whose *eps*
+comes from the execution plan's per-sample RNG stream (RANDOM_OPS in
+core/opgraph.py), not from anything the user function can close over.
+A plain JAX implementation would need a PRNG key argument, which has no
+place in the traced graph.
+
+So the front-end exposes ``sample_normal(mu, logvar)`` as its own JAX
+primitive: inside a trace it appears as a single ``sample_normal`` eqn
+the translator registry maps 1:1 onto the graph op; outside a trace it
+still *runs* (eager/jit) with a fixed PRNGKey(0) so users can sanity-
+check their function before tracing — documented as NOT matching the
+plan's RNG stream, which is owned by the scheduler/engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jex_core
+from jax.interpreters import mlir
+
+sample_normal_p = jex_core.Primitive("sample_normal")
+
+
+def sample_normal(mu: jax.Array, logvar: jax.Array) -> jax.Array:
+    """Reparameterized gaussian sample — traces to the graph's
+    ``sample_normal`` op (plan-threaded RNG); eager execution uses a
+    fixed PRNGKey(0) for smoke-testing only."""
+    return sample_normal_p.bind(mu, logvar)
+
+
+@sample_normal_p.def_abstract_eval
+def _sample_normal_abstract(mu, logvar):
+    if mu.shape != logvar.shape:
+        raise ValueError(
+            f"sample_normal: mu shape {mu.shape} != logvar shape "
+            f"{logvar.shape}")
+    return mu
+
+
+def _sample_normal_eager(mu, logvar):
+    # fixed key: deterministic smoke-test semantics outside the engine
+    eps = jax.random.normal(jax.random.PRNGKey(0), jnp.shape(mu))
+    return mu + jnp.exp(0.5 * logvar) * eps
+
+
+sample_normal_p.def_impl(_sample_normal_eager)
+mlir.register_lowering(
+    sample_normal_p,
+    mlir.lower_fun(_sample_normal_eager, multiple_results=False))

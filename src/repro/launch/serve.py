@@ -237,9 +237,31 @@ def serve_lm(args) -> int:
     return 0
 
 
+def trace_demo(args) -> int:
+    """Jaxpr front-end demo (DESIGN.md §14): trace the depthwise-
+    separable cloud-mask CNN — a model with no hand-built graph anywhere
+    in models/ — and drive it trace -> inspect -> PTQ -> autotune ->
+    scheduler serve."""
+    from repro.frontend.demo import run_demo
+    backends = tuple(b.strip() for b in args.backend.split(",") if b.strip())
+    facts = run_demo(n_requests=args.requests, rate_hz=args.rate,
+                     batch_top=args.batch, autotune=args.autotune,
+                     backends=backends, verbose=True)
+    print(f"[trace-demo] {facts['n_completed']}/{facts['n_requests']} "
+          f"served, {facts['n_kept']} kept for downlink "
+          f"({facts['mac_coverage']:.1%} of MACs on accel, "
+          f"{facts['n_segments']} segments)")
+    return 0 if facts["n_completed"] == facts["n_requests"] else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="space", choices=["space", "lm"])
+    ap.add_argument("--trace-demo", action="store_true",
+                    help="jaxpr front-end demo (DESIGN.md §14): trace "
+                         "the depthwise-separable cloud-mask CNN (never "
+                         "hand-built) and serve it end to end; honours "
+                         "--requests/--rate/--batch/--backend/--autotune")
     ap.add_argument("--model", default="baseline_net",
                     help="comma list of space models to co-serve "
                          f"({', '.join(sorted(SPACE_MODELS))})")
@@ -324,6 +346,8 @@ def main(argv=None) -> int:
     ap.add_argument("--w8", action="store_true",
                     help="int8 PTQ weights (lm mode; §Perf B1)")
     args = ap.parse_args(argv)
+    if args.trace_demo:
+        return trace_demo(args)
     if args.mode == "space":
         return serve_space(args)
     return serve_lm(args)

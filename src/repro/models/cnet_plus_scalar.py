@@ -45,6 +45,25 @@ def build_graph(dpu_compatible: bool = True) -> Graph:
     return g
 
 
+def jax_forward(params: Dict[str, Dict[str, jax.Array]],
+                batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """CNetPlusScalar (DPU-compatible ReLU variant) as a plain batched
+    JAX function — jaxpr front-end target (DESIGN.md §14)."""
+    x = batch["image"]
+    for i in range(len(CHANNELS)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.concatenate([x, batch["background_flux"]], axis=1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return {"head": x @ params["head"]["w"] + params["head"]["b"]}
+
+
 def init_params(key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
     return init_graph_params(build_graph(), key)
 

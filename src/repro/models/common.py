@@ -29,11 +29,13 @@ def init_graph_params(g: Graph, key: jax.Array
         if node.op == "conv2d":
             kh, kw = node.attrs["kernel"]
             cin = g.nodes[node.inputs[0]].out_shape[-1]
+            cin_g = cin // node.attrs.get("groups", 1)
             cout = node.attrs["features"]
             key, k1 = jax.random.split(key)
-            fan_in = kh * kw * cin
+            fan_in = kh * kw * cin_g
             params[name] = {
-                "w": jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32)
+                "w": jax.random.normal(k1, (kh, kw, cin_g, cout),
+                                       jnp.float32)
                 * (2.0 / fan_in) ** 0.5,
                 "b": jnp.zeros((cout,), jnp.float32)}
         elif node.op == "conv3d":

@@ -61,6 +61,20 @@ def build_single_graph(m: int = 0) -> Graph:
     return g
 
 
+def jax_forward(params: Dict[str, Dict[str, jax.Array]],
+                batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Multi-ESPERTA as a plain batched JAX function (jaxpr front-end
+    target, DESIGN.md §14) — sigmoid + thresholded warning per model."""
+    x = batch["features"]
+    out: Dict[str, jax.Array] = {}
+    for m in range(N_MODELS):
+        p = params[f"logit{m}"]
+        prob = jax.nn.sigmoid(x @ p["w"] + p["b"])
+        out[f"prob{m}"] = prob
+        out[f"warn{m}"] = (prob > float(THRESHOLDS[m])).astype(jnp.float32)
+    return out
+
+
 def init_params(key: jax.Array = None) -> Dict[str, Dict[str, jax.Array]]:
     del key  # fixed published weights, not trained
     return {

@@ -82,6 +82,54 @@ GRAPH_BUILDERS = {
 }
 
 
+# -- plain batched JAX forwards (jaxpr front-end targets, DESIGN.md §14) ----
+
+
+def _maxpool3(x: jax.Array, k: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, k, 1), (1, k, k, k, 1), "VALID")
+
+
+def _conv3(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (1, 1, 1), "SAME",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC")) + p["b"]
+
+
+def _head(x: jax.Array, params, name: str = "head"):
+    y = x.reshape(x.shape[0], -1) @ params[name]["w"] + params[name]["b"]
+    return {"head": y, "region": jnp.argmax(y, axis=1).astype(jnp.int32)}
+
+
+def jax_forward_logistic(params, batch):
+    return _head(_maxpool3(batch["dist"]), params)
+
+
+def jax_forward_reduced(params, batch):
+    x = _maxpool3(batch["dist"])
+    x = jax.nn.relu(_conv3(x, params["conv0"]))
+    x = _maxpool3(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return _head(x, params)
+
+
+def jax_forward_baseline(params, batch):
+    x = batch["dist"]
+    for i in range(2):
+        x = _maxpool3(jax.nn.relu(_conv3(x, params[f"conv{i}"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return _head(x, params)
+
+
+JAX_FORWARDS = {
+    "logistic_net": jax_forward_logistic,
+    "reduced_net": jax_forward_reduced,
+    "baseline_net": jax_forward_baseline,
+}
+
+
 def init_params(name: str, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
     return init_graph_params(GRAPH_BUILDERS[name](), key)
 

@@ -37,6 +37,26 @@ def build_graph() -> Graph:
     return g
 
 
+def jax_forward(params: Dict[str, Dict[str, jax.Array]],
+                batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """The encoder as a plain batched JAX function — same math as the
+    graph, traceable by the jaxpr front-end (DESIGN.md §14). Output keys
+    are the graph's output node names."""
+    from repro.frontend.ops import sample_normal
+    x = batch["image"]
+    for i in range(len(CHANNELS)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    mu = x @ params["mu"]["w"] + params["mu"]["b"]
+    logvar = x @ params["logvar"]["w"] + params["logvar"]["b"]
+    return {"mu": mu, "logvar": logvar,
+            "sample": sample_normal(mu, logvar)}
+
+
 def init_params(key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
     from repro.models.common import init_graph_params
     return init_graph_params(build_graph(), key)

@@ -1,0 +1,424 @@
+"""Jaxpr front-end tests (DESIGN.md §14): per-primitive translator
+units, the clear-error contract for unsupported primitives, the
+six-model traced-vs-hand-built bit-exactness sweep on both backends, the
+inspector's structural-kind exclusion, and the never-hand-built demo
+model serving end to end from a trace.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inspector
+from repro.core.engine import Engine
+from repro.frontend import (UnsupportedPrimitiveError, sample_normal,
+                            trace)
+from repro.frontend import demo
+from repro.models import SPACE_MODELS, synthetic_requests
+
+
+def _ops(tm):
+    return [tm.graph.nodes[n].op for n in tm.graph.order]
+
+
+# ---------------------------------------------------------------------------
+# per-primitive translator units
+# ---------------------------------------------------------------------------
+
+
+def test_conv_same_stride_translates_with_folded_bias():
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 2, 4)) * 0.1
+    b = jnp.arange(4, dtype=jnp.float32)
+
+    def fn(inp):
+        y = jax.lax.conv_general_dilated(
+            inp["x"], w, (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        return {"y": y}
+
+    tm = trace(fn, {"x": (9, 9, 2)})
+    assert _ops(tm) == ["input", "conv2d"]
+    node = tm.graph.nodes["y"]
+    assert node.attrs["kernel"] == (3, 3)
+    assert node.attrs["features"] == 4
+    assert node.attrs["stride"] == 2
+    assert node.attrs["padding"] == "SAME"
+    assert node.out_shape == (5, 5, 4)
+    np.testing.assert_array_equal(tm.params["y"]["b"], np.asarray(b))
+
+
+def test_conv_valid_padding_translates():
+    w = jnp.ones((2, 2, 1, 3), jnp.float32)
+
+    def fn(inp):
+        return {"y": jax.lax.conv_general_dilated(
+            inp["x"], w, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))}
+
+    tm = trace(fn, {"x": (6, 6, 1)})
+    assert tm.graph.nodes["y"].attrs["padding"] == "VALID"
+    # no bias in the function -> zero bias param (the impl always adds b)
+    np.testing.assert_array_equal(tm.params["y"]["b"], np.zeros(3))
+
+
+def test_depthwise_conv_translates_to_grouped_conv2d():
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 1, 6)) * 0.1
+
+    def fn(inp):
+        return {"y": jax.lax.conv_general_dilated(
+            inp["x"], w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=6)}
+
+    tm = trace(fn, {"x": (8, 8, 6)})
+    node = tm.graph.nodes["y"]
+    assert node.op == "conv2d" and node.attrs["groups"] == 6
+    # grouped conv has no int8 kernel -> flex, plain conv2d stays accel
+    assert not inspector.accel_supports(node)
+
+
+def test_conv3d_translates():
+    w = jnp.ones((2, 2, 2, 1, 3), jnp.float32)
+
+    def fn(inp):
+        return {"y": jax.lax.conv_general_dilated(
+            inp["x"], w, (1, 1, 1), "SAME",
+            dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))}
+
+    tm = trace(fn, {"x": (4, 4, 4, 1)})
+    assert tm.graph.nodes["y"].op == "conv3d"
+    assert tm.graph.nodes["y"].attrs["kernel"] == (2, 2, 2)
+
+
+def test_dot_general_with_bias_folds_to_dense():
+    w = jax.random.normal(jax.random.PRNGKey(2), (6, 3))
+    b = jnp.asarray([1.0, -1.0, 0.5])
+
+    def fn(inp):
+        return {"y": inp["x"] @ w + b}
+
+    tm = trace(fn, {"x": (6,)})
+    assert _ops(tm) == ["input", "dense"]
+    assert tm.graph.nodes["y"].attrs["features"] == 3
+    assert tm.graph.nodes["y"].attrs["bias"] is True
+    np.testing.assert_array_equal(tm.params["y"]["b"], np.asarray(b))
+
+
+def test_dense_without_bias_keeps_bias_false():
+    w = jnp.ones((4, 2), jnp.float32)
+    tm = trace(lambda inp: {"y": inp["x"] @ w}, {"x": (4,)})
+    assert tm.graph.nodes["y"].attrs["bias"] is False
+    assert "b" not in tm.params["y"]
+
+
+def test_bias_fold_refuses_shared_pre_bias_tensor():
+    """If the pre-bias matmul output is read elsewhere, folding the bias
+    into the dense node would corrupt that other reader — the fold must
+    refuse and emit const+add instead."""
+    w = jnp.ones((4, 2), jnp.float32)
+    b = jnp.asarray([1.0, 2.0])
+
+    def fn(inp):
+        z = inp["x"] @ w
+        return {"y": z + b, "raw": z * 1.0}
+
+    tm = trace(fn, {"x": (4,)})
+    raw = np.ones((2, 4), np.float32)
+    eng = Engine(tm.graph, tm.params)
+    out = eng.run_batch({"x": raw}, backend="flex")
+    ref = fn({"x": jnp.asarray(raw)})
+    np.testing.assert_array_equal(out["y"], np.asarray(ref["y"]))
+    np.testing.assert_array_equal(out["raw"], np.asarray(ref["raw"]))
+
+
+def test_relu_and_unary_activations_translate():
+    def fn(inp):
+        x = inp["x"]
+        return {"r": jax.nn.relu(x), "s": jax.nn.sigmoid(x),
+                "t": jnp.tanh(x), "e": jnp.exp(x)}
+
+    tm = trace(fn, {"x": (5,)})
+    got = {tm.graph.nodes[n].op for n in ("r", "s", "t", "e")}
+    assert got == {"relu", "sigmoid", "tanh", "exp"}
+
+
+def test_add_mul_of_two_traced_tensors():
+    def fn(inp):
+        a = jnp.exp(inp["x"])
+        b = jnp.tanh(inp["x"])
+        return {"s": a + b, "p": a * b}
+
+    tm = trace(fn, {"x": (3,)})
+    assert tm.graph.nodes["s"].op == "add"
+    assert tm.graph.nodes["p"].op == "mul"
+
+
+def test_scalar_mul_emits_const_node():
+    tm = trace(lambda inp: {"y": jnp.exp(inp["x"]) * 2.0}, {"x": (3,)})
+    ops = _ops(tm)
+    assert "const" in ops and "mul" in ops
+    x = np.linspace(-1, 1, 6).reshape(2, 3).astype(np.float32)
+    out = Engine(tm.graph, tm.params).run_batch({"x": x}, backend="flex")
+    np.testing.assert_array_equal(out["y"],
+                                  np.asarray(jnp.exp(x) * 2.0))
+
+
+def test_maxpool_translates():
+    def fn(inp):
+        return {"y": jax.lax.reduce_window(
+            inp["x"], -jnp.inf, jax.lax.max,
+            (1, 2, 2, 1), (1, 2, 2, 1), "VALID")}
+
+    tm = trace(fn, {"x": (6, 6, 2)})
+    assert tm.graph.nodes["y"].op == "maxpool2d"
+    assert tm.graph.nodes["y"].attrs["kernel"] == 2
+
+
+def test_avgpool_sum_div_peephole_is_bit_exact():
+    def fn(inp):
+        s = jax.lax.reduce_window(inp["x"], 0.0, jax.lax.add,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        return {"y": s / 4.0}
+
+    tm = trace(fn, {"x": (6, 6, 2)})
+    assert _ops(tm) == ["input", "avgpool2d"]
+    x = np.random.default_rng(3).normal(size=(2, 6, 6, 2)) \
+        .astype(np.float32)
+    out = Engine(tm.graph, tm.params).run_batch({"x": x}, backend="flex")
+    np.testing.assert_array_equal(out["y"],
+                                  np.asarray(fn({"x": jnp.asarray(x)})["y"]))
+
+
+def test_sum_pool_without_div_raises():
+    def fn(inp):
+        return {"y": jax.lax.reduce_window(
+            inp["x"], 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1),
+            "VALID")}
+
+    with pytest.raises(UnsupportedPrimitiveError, match="average pool"):
+        trace(fn, {"x": (6, 6, 2)})
+
+
+def test_global_reduce_max_becomes_pool_plus_flatten():
+    tm = trace(lambda inp: {"y": jnp.max(inp["x"], axis=(1, 2))},
+               {"x": (4, 4, 3)})
+    assert _ops(tm) == ["input", "maxpool2d", "flatten"]
+    x = np.random.default_rng(4).normal(size=(2, 4, 4, 3)) \
+        .astype(np.float32)
+    out = Engine(tm.graph, tm.params).run_batch({"x": x}, backend="flex")
+    np.testing.assert_array_equal(out["y"], x.max(axis=(1, 2)))
+
+
+def test_flatten_reshape_and_identity_reshape():
+    def fn(inp):
+        x = inp["x"].reshape(inp["x"].shape[0], -1)   # flatten
+        return {"y": x.reshape(x.shape)}               # identity: aliased
+
+    tm = trace(fn, {"x": (3, 4, 2)})
+    assert _ops(tm) == ["input", "flatten"]
+
+
+def test_concat_translates_with_per_sample_axis():
+    def fn(inp):
+        return {"y": jnp.concatenate([inp["a"], inp["b"]], axis=1)}
+
+    tm = trace(fn, {"a": (4,), "b": (2,)})
+    assert tm.graph.nodes["y"].op == "concat"
+    assert tm.graph.nodes["y"].attrs["axis"] == 0
+    assert tm.graph.nodes["y"].out_shape == (6,)
+
+
+def test_gt_threshold_translates_to_greater():
+    tm = trace(lambda inp: {"y": (inp["x"] > 0.25).astype(jnp.float32)},
+               {"x": (3,)})
+    assert tm.graph.nodes["y"].op == "greater"
+    assert tm.graph.nodes["y"].attrs["threshold"] == 0.25
+
+
+def test_argmax_translates():
+    tm = trace(lambda inp: {"y": jnp.argmax(inp["x"], axis=1)
+                            .astype(jnp.int32)}, {"x": (5,)})
+    assert tm.graph.nodes["y"].op == "argmax"
+    assert tm.graph.nodes["y"].out_shape == ()
+
+
+def test_sample_normal_primitive_translates():
+    def fn(inp):
+        mu = jnp.exp(inp["x"])
+        logvar = jnp.tanh(inp["x"])
+        return {"z": sample_normal(mu, logvar)}
+
+    tm = trace(fn, {"x": (4,)})
+    assert tm.graph.nodes["z"].op == "sample_normal"
+
+
+def test_pjit_and_custom_jvp_inline():
+    inner = jax.jit(lambda x: jax.nn.relu(x) * 2.0)
+    tm = trace(lambda inp: {"y": inner(inp["x"])}, {"x": (3,)})
+    ops = _ops(tm)
+    assert "relu" in ops and "mul" in ops
+
+
+def test_trace_time_constant_math_is_evaluated_eagerly():
+    w = jnp.ones((4, 2), jnp.float32)
+    tm = trace(lambda inp: {"y": inp["x"] @ (w * 3.0)}, {"x": (4,)})
+    assert _ops(tm) == ["input", "dense"]
+    np.testing.assert_array_equal(tm.params["y"]["w"], np.full((4, 2), 3.0))
+
+
+# ---------------------------------------------------------------------------
+# unsupported-primitive contract
+# ---------------------------------------------------------------------------
+
+
+def test_unsupported_primitive_names_the_eqn():
+    with pytest.raises(UnsupportedPrimitiveError) as exc:
+        trace(lambda inp: {"y": jnp.sin(inp["x"])}, {"x": (3,)})
+    msg = str(exc.value)
+    assert "sin" in msg and "register" in msg
+
+
+def test_unsupported_parameterization_names_the_eqn():
+    w = jnp.ones((3, 3, 2, 4), jnp.float32)
+
+    def fn(inp):
+        return {"y": jax.lax.conv_general_dilated(
+            inp["x"], w, (1, 1), "SAME", rhs_dilation=(2, 2),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))}
+
+    with pytest.raises(UnsupportedPrimitiveError, match="dilated"):
+        trace(fn, {"x": (8, 8, 2)})
+
+
+def test_unsupported_is_never_a_bare_keyerror():
+    try:
+        trace(lambda inp: {"y": jnp.cumsum(inp["x"], axis=1)}, {"x": (4,)})
+    except UnsupportedPrimitiveError:
+        pass
+    else:                                          # pragma: no cover
+        pytest.fail("expected UnsupportedPrimitiveError")
+
+
+def test_non_dict_output_rejected():
+    with pytest.raises(TypeError, match="flat dict"):
+        trace(lambda inp: jnp.exp(inp["x"]), {"x": (3,)})
+
+
+# ---------------------------------------------------------------------------
+# inspector: structural kinds stay out of coverage (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_inspector_excludes_const_nodes_from_coverage():
+    """Regression: const nodes (constant folding or tracer-captured
+    literals) were counted into supported/fully_supported, reporting
+    plan-time values as compute the accelerator 'runs'."""
+    from repro.core.opgraph import Graph
+    g = Graph("structural")
+    x = g.input("x", (4,))
+    g.add("const", [], name="k", value=np.ones((4,), np.float32))
+    g.add("add", [x, "k"], name="y")
+    g.mark_output("y")
+    rep = inspector.inspect(g)
+    assert "const" not in rep.supported + rep.unsupported
+    assert "input" not in rep.supported + rep.unsupported
+    assert rep.supported == ["add"]
+    assert rep.fully_supported
+
+
+def test_traced_const_graph_calibrates():
+    """quantize._trace used to KeyError on const nodes — traced graphs
+    carrying captured literals must calibrate."""
+    tm = trace(lambda inp: {"y": jnp.exp(inp["x"]) * 2.0}, {"x": (3,)})
+    eng = Engine(tm.graph, tm.params)
+    eng.calibrate([{"x": np.ones((3,), np.float32)}])
+    assert eng._calib["y"] > 0
+
+
+# ---------------------------------------------------------------------------
+# six-model traced-vs-hand-built bit-exactness sweep
+# ---------------------------------------------------------------------------
+
+
+_PAIRS = {}
+
+
+def _pair(name):
+    if name not in _PAIRS:
+        model = SPACE_MODELS[name]
+        g = model.build_graph()
+        params = model.init_params(jax.random.PRNGKey(0))
+        tm = trace(functools.partial(model.jax_forward, params),
+                   dict(g.graph_inputs), name=name + "_traced")
+        _PAIRS[name] = (model, g, params, tm)
+    return _PAIRS[name]
+
+
+@pytest.mark.parametrize("name", sorted(SPACE_MODELS))
+def test_traced_graph_structure_matches_hand_built(name):
+    model, g, params, tm = _pair(name)
+    hand = [g.nodes[n].op for n in g.order]
+    traced = [tm.graph.nodes[n].op for n in tm.graph.order]
+    assert hand == traced
+    assert sorted(tm.graph.outputs) == sorted(g.outputs)
+    assert tm.graph.n_params == g.n_params
+    assert tm.graph.n_macs == g.n_macs
+
+
+@pytest.mark.parametrize("name", sorted(SPACE_MODELS))
+def test_traced_model_bit_exact_on_flex_and_accel(name):
+    model, g, params, tm = _pair(name)
+    calib = synthetic_requests(model, 2, seed=0)
+    reqs = synthetic_requests(model, 2, seed=123)
+    batch = {k: np.stack([r[k] for r in reqs]) for k in reqs[0]}
+    rngs = jax.random.split(jax.random.PRNGKey(7), 2)
+    hand_eng, traced_eng = Engine(g, params), Engine(tm.graph, tm.params)
+    hand_eng.calibrate(calib)
+    traced_eng.calibrate(calib)
+    for backend in ("flex", "accel"):
+        h = hand_eng.run_batch(batch, backend=backend, rngs=rngs)
+        t = traced_eng.run_batch(batch, backend=backend, rngs=rngs)
+        assert set(h) == set(t)
+        for k in h:
+            np.testing.assert_array_equal(
+                np.asarray(h[k]), np.asarray(t[k]),
+                err_msg=f"{name}/{backend}/{k} diverged")
+
+
+# ---------------------------------------------------------------------------
+# demo: never-hand-built model, trace -> inspect -> PTQ -> autotune -> serve
+# ---------------------------------------------------------------------------
+
+
+def test_demo_trace_matches_jax_reference():
+    tm = demo.build_traced()
+    params = demo.init_params(jax.random.PRNGKey(42))
+    reqs = demo.synthetic_requests(2, seed=9)
+    batch = {k: np.stack([r[k] for r in reqs]) for k in reqs[0]}
+    out = Engine(tm.graph, tm.params).run_batch(batch, backend="flex")
+    ref = demo.jax_forward(params, {k: jnp.asarray(v)
+                                    for k, v in batch.items()})
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]))
+
+
+def test_demo_partial_offload_routing():
+    tm = demo.build_traced()
+    rep = inspector.inspect(tm.graph)
+    assert not rep.fully_supported          # depthwise + sigmoid/greater
+    assert rep.mac_coverage > 0.5           # pointwise + dense on accel
+    assignment = inspector.assign_backends(tm.graph)
+    grouped = [n for n in tm.graph.order
+               if tm.graph.nodes[n].attrs.get("groups", 1) != 1]
+    assert grouped and all(assignment[n] == "flex" for n in grouped)
+
+
+def test_demo_serves_end_to_end():
+    facts = demo.run_demo(n_requests=8, batch_top=4, verbose=False)
+    assert facts["n_completed"] == facts["n_requests"] == 8
+    assert 0 <= facts["n_kept"] <= 8
+    assert facts["outputs"] == ["cloud_flag", "cloud_prob"]
+    assert facts["n_segments"] >= 3         # accel/flex interleaving

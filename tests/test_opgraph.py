@@ -183,3 +183,121 @@ def test_consumers_helper():
     cons = consumers(g)
     assert cons["a"] == ["b", "c"]
     assert cons["c"] == []
+
+
+# ---------------------------------------------------------------------------
+# auto-naming + error context (bugs flushed out by the jaxpr front-end)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_name_skips_explicitly_named_collision():
+    """Regression: auto-naming used f"{op}_{len(order)}" verbatim, so an
+    explicitly-named node sitting at the next counter value made the
+    following auto-named add raise 'duplicate node'."""
+    g = Graph("names")
+    x = g.input("x", (4,))                      # order: [x]
+    g.add("relu", [x], name="relu_2")           # occupies the next auto slot
+    got = g.add("relu", [x])                    # pre-fix: duplicate node
+    assert got != "relu_2" and got in g.nodes
+    assert g.nodes[got].op == "relu"
+
+
+def test_auto_name_still_sequential_without_collisions():
+    g = Graph("names2")
+    x = g.input("x", (4,))
+    assert g.add("relu", [x]) == "relu_1"
+    assert g.add("exp", ["relu_1"]) == "exp_2"
+
+
+def test_explicit_duplicate_name_still_raises():
+    g = Graph("names3")
+    x = g.input("x", (4,))
+    g.add("relu", [x], name="a")
+    with pytest.raises(ValueError, match="duplicate node"):
+        g.add("exp", [x], name="a")
+
+
+def test_infer_error_names_node_and_input_shapes():
+    """Regression: shape-inference failures must carry the node name and
+    its input shapes — a traced 200-eqn jaxpr dying with just 'rank-3'
+    is undebuggable."""
+    g = Graph("err")
+    x = g.input("x", (16, 16))
+    with pytest.raises(ValueError) as exc:
+        g.add("conv2d", [x], name="my_conv", kernel=(3, 3), features=4)
+    msg = str(exc.value)
+    assert "my_conv" in msg
+    assert "(16, 16)" in msg
+
+
+def test_infer_wraps_missing_attr_as_named_valueerror():
+    """A KeyError from a missing attr surfaces as a ValueError naming the
+    node, not a bare KeyError: 'kernel'."""
+    g = Graph("err2")
+    x = g.input("x", (8, 8, 2))
+    with pytest.raises(ValueError) as exc:
+        g.add("conv2d", [x], name="noattr", features=4)   # no kernel
+    msg = str(exc.value)
+    assert "noattr" in msg and "KeyError" in msg and "kernel" in msg
+    assert "(8, 8, 2)" in msg
+
+
+def test_infer_error_context_preserved_across_ops():
+    g = Graph("err3")
+    a = g.input("a", (4, 3))
+    b = g.input("b", (5, 3))
+    with pytest.raises(ValueError) as exc:
+        g.add("concat", [a, b], name="bad_cat", axis=1)
+    assert "bad_cat" in str(exc.value)
+
+
+# ---------------------------------------------------------------------------
+# grouped (depthwise) conv2d
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_conv2d_shape_params_and_execution():
+    g = Graph("dw")
+    x = g.input("x", (8, 8, 6))
+    c = g.add("conv2d", [x], name="dw", kernel=(3, 3), features=6,
+              stride=1, padding="SAME", groups=6)
+    g.mark_output(c)
+    node = g.nodes["dw"]
+    assert node.out_shape == (8, 8, 6)
+    assert node.param_count == 3 * 3 * 1 * 6 + 6       # cin/groups == 1
+    assert node.macs == 8 * 8 * 6 * 3 * 3 * 1
+    feed = {"x": np.random.default_rng(0).normal(
+        size=(8, 8, 6)).astype(np.float32)}
+    assert _shape_of_exec(g, c, feed) == (8, 8, 6)
+
+
+def test_grouped_conv2d_matches_per_channel_reference():
+    """Depthwise conv == per-channel 2-D correlation; checks the groups
+    plumbing end to end (shape inference -> param init -> impl)."""
+    g = Graph("dwref")
+    x = g.input("x", (5, 5, 3))
+    c = g.add("conv2d", [x], name="dw", kernel=(3, 3), features=3,
+              stride=1, padding="VALID", groups=3)
+    g.mark_output(c)
+    params = _params(g)
+    assert params["dw"]["w"].shape == (3, 3, 1, 3)
+    from repro.core.engine import Engine
+    feed = {"x": np.random.default_rng(1).normal(
+        size=(5, 5, 3)).astype(np.float32)}
+    out = np.asarray(Engine(g, params).run(feed, "flex")["dw"])
+    w = np.asarray(params["dw"]["w"])
+    for ch in range(3):
+        ref = np.zeros((3, 3), np.float32)
+        for i in range(3):
+            for j in range(3):
+                ref[i, j] = np.sum(feed["x"][i:i + 3, j:j + 3, ch]
+                                   * w[:, :, 0, ch])
+        np.testing.assert_allclose(out[:, :, ch], ref, rtol=1e-5)
+
+
+def test_grouped_conv2d_invalid_groups_raises():
+    g = Graph("dwbad")
+    x = g.input("x", (8, 8, 6))
+    with pytest.raises(ValueError, match="groups=4"):
+        g.add("conv2d", [x], name="dw", kernel=(3, 3), features=6,
+              groups=4)
