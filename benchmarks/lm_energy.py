@@ -1,54 +1,217 @@
-"""Paper's E = P x t accounting, applied to the LM serving fleet.
+"""LM serving gates — the compiled decode fast path (DESIGN.md §15).
 
-The paper's bottom line is energy per inference on the accelerator; the
-LM-scale analog is energy per generated token (decode) and per prefilled
-request. Step times come from the roofline's dominant term (modeled TPU
-v5e, scan-corrected dry-run artifacts) for BOTH the paper-faithful
-baseline and the optimized (`opt`) configs, so the INT8/serving levers
-show up in joules exactly the way the paper's Table III shows DPU INT8
-residency.
+The paper's bottom line is energy/latency per inference; the LM analog
+is per generated token. This section drives the decoder-block op graph
+through the SAME staged chain as the CNNs (Planned -> Lowered ->
+Compiled), serves it through the prefill/decode rung ladder, and gates
+the properties that make decode a scheduler-native workload:
 
-    PYTHONPATH=src python -m benchmarks.lm_energy
+* ``decode_vs_recompute_speedup`` — steady-state decode at batch 8 over
+  the int8 KV slots must clear 3x the recompute-the-full-prefix
+  baseline's tokens/s (one compiled prefill per new token — what decode
+  costs WITHOUT a KV cache). Wall-clock, so measured as alternating
+  best-of blocks with the benchmarks/autotune.py discipline; the 0.85
+  timer-headroom tolerance folds into the 3x bar.
+* ``zero_retrace_steady_decode`` / ``zero_slot_allocs_steady_decode`` —
+  once a rung is warm, decode grows neither ``n_traces`` nor the KV
+  slot allocator's assign count (plan-cache stats; machine-independent).
+* ``kv_codes_bit_exact`` — the int8 K/V codes the prefill commit
+  scattered into the slots are bit-identical to a direct host
+  ``lm_quant.quantize_kv`` of the captured K/V outputs.
+* ``kv_charged_to_plan`` — the KV arena shows up in the plan's
+  ``CostSignature.kv_resident_bytes`` AND its ``summary()``, like
+  prepacked weights.
+
+    PYTHONPATH=src python -m benchmarks.lm_energy [--smoke]
+
+``--smoke`` runs the machine-independent gates only.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import time
+from typing import Dict
 
-from benchmarks.roofline import LEDGER, analyze_cell
+import jax
+import numpy as np
 
-CHIP_POWER_BUSY = 170.0       # W per TPU v5e chip (public board figures)
-CHIPS = 256
+from repro.core import energy as energy_mod
+from repro.core import lm_quant
+from repro.core.engine import Engine
+from repro.core.lm import LMEngine
+from repro.core.plan import CompiledPlan, ExecutionPlan, LoweredPlan
+from repro.core.scheduler import LMRequest, LMScheduler
+from repro.models import lm as lm_model
+
+OUT_PATH = "BENCH_lm.json"
+BATCH = 8                     # decode rung under test
+WALL_REPEATS = 3              # alternating best-of blocks
+DECODE_BLOCK = 16             # decode steps per timed block
+RECOMPUTE_BLOCK = 2           # full-prefix recomputes per timed block
+WALL_TOLERANCE = 0.85         # timer headroom (see autotune.py)
+SPEEDUP_MIN = 3.0             # required decode-vs-recompute tokens/s x
+STEADY_STEPS = 24             # decode steps in the zero-retrace window
 
 
-def main() -> None:
-    with open(LEDGER) as f:
-        ledger = json.load(f)
-    from repro.configs import SHAPES_BY_NAME, all_archs, get_arch, shapes_for
+def _build() -> LMEngine:
+    cfg = lm_model.DEFAULT_CONFIG
+    graph = lm_model.build_graph(cfg)
+    params = lm_model.init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(graph, params)
+    calib = [lm_model.synthetic_input(k, cfg) for k in
+             jax.random.split(jax.random.PRNGKey(1), 8)]
+    engine.calibrate(calib)
+    return LMEngine(engine, backend="accel", n_slots=BATCH,
+                    max_new_tokens=96)
 
-    print("== E = P x t for LM serving (modeled TPU v5e, 256 chips) ==")
-    print(f"{'arch':26s} {'shape':12s} {'unit':>14s} "
-          f"{'base mJ':>12s} {'opt mJ':>12s} {'x':>6s}")
-    for arch in all_archs():
-        for shape in shapes_for(get_arch(arch)):
-            if shape.kind == "train":
-                continue
-            b = analyze_cell(ledger, "baseline", arch, shape.name)
-            o = analyze_cell(ledger, "opt", arch, shape.name)
-            if not (b and o):
-                continue
-            spec = SHAPES_BY_NAME[shape.name]
-            if shape.kind == "decode":
-                unit, n = "mJ/token", spec.global_batch
-            else:
-                unit, n = "mJ/request", spec.global_batch
-            e_b = CHIP_POWER_BUSY * CHIPS * b["step_time_s"] / n * 1e3
-            e_o = CHIP_POWER_BUSY * CHIPS * o["step_time_s"] / n * 1e3
-            print(f"{arch:26s} {shape.name:12s} {unit:>14s} "
-                  f"{e_b:12.2f} {e_o:12.2f} {e_b/e_o:6.1f}")
-    print("\n(the same E=P*t the paper measures on the ZCU104 INT rail; "
-          "t = dominant roofline term per step; energy gains mirror the "
-          "paper's INT8-residency result at LM scale)")
+
+def _prompts(n: int, seed: int = 3) -> np.ndarray:
+    cfg = lm_model.DEFAULT_CONFIG
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, cfg.seq_len, cfg.d_model)
+                      ).astype(np.float32) * 0.5
+
+
+def staged_chain_gates(lm: LMEngine, gates: Dict) -> None:
+    """The decoder block compiles Planned -> Lowered -> Compiled."""
+    planned = lm.engine.planned("accel")
+    lowered = planned.lower(BATCH)
+    compiled = lowered.compile()
+    gates["compiled_staged_chain"] = (
+        isinstance(planned, ExecutionPlan)
+        and isinstance(lowered, LoweredPlan)
+        and isinstance(compiled, CompiledPlan))
+    sig = planned.cost_signature(BATCH)
+    in_summary = "kv[" in planned.summary()
+    gates["kv_charged_to_plan"] = (
+        sig.kv_resident_bytes == float(lm.kv_plan.total_bytes)
+        and lm.kv_plan.total_bytes > 0 and in_summary)
+    print(f"[plan] kv_resident_bytes={sig.kv_resident_bytes:,.0f} B "
+          f"({lm.kv_plan.summary().strip()})")
+
+
+def steady_state_gates(lm: LMEngine, gates: Dict) -> Dict:
+    """Prefill a full rung, then decode with warm programs: n_traces and
+    slot assigns must not move."""
+    x = _prompts(BATCH)
+    slots = np.array([lm.assign_slot(rid) for rid in range(BATCH)],
+                     np.int32)
+    res = lm.prefill(x, slots)
+
+    # bit-exactness: slot codes == direct host quantization of the
+    # captured K/V (same compiled prefill outputs, same quantizer)
+    outs = lm.engine.run_batch({"x": x}, "accel")
+    ok = True
+    graph = lm.plan.graph
+    for n in lm._attn_nodes:
+        node = graph.nodes[n]
+        for which, src in (("k", node.inputs[1]), ("v", node.inputs[2])):
+            codes, scale = lm_quant.quantize_kv(outs[src])
+            got_c = np.asarray(lm.caches[n][f"{which}_codes"]
+                               )[slots, :lm.seq_len]
+            got_s = np.asarray(lm.caches[n][f"{which}_scale"]
+                               )[slots, :lm.seq_len]
+            ok = ok and np.array_equal(got_c, np.asarray(codes))
+            ok = ok and np.array_equal(
+                got_s, np.asarray(scale).astype(np.float16))
+    gates["kv_codes_bit_exact"] = ok
+
+    # warm the decode rung, then watch the counters
+    res = lm.decode_step(res.hidden, slots)
+    traces0, assigns0 = lm.n_traces, lm.slots.n_assigns
+    for _ in range(STEADY_STEPS):
+        res = lm.decode_step(res.hidden, slots)
+    gates["zero_retrace_steady_decode"] = lm.n_traces == traces0
+    gates["zero_slot_allocs_steady_decode"] = (
+        lm.slots.n_assigns == assigns0)
+    print(f"[steady] {STEADY_STEPS} decode steps: traces "
+          f"{traces0}->{lm.n_traces}, slot assigns "
+          f"{assigns0}->{lm.slots.n_assigns}, kv codes bit-exact={ok}")
+    for rid in range(BATCH):
+        lm.release_slot(rid)
+    return {"traces": lm.n_traces, "slot_assigns": lm.slots.n_assigns}
+
+
+def wall_decode_vs_recompute(lm: LMEngine, gates: Dict) -> Dict:
+    """Alternating best-of blocks: N decode steps (8 tokens each) vs N
+    full-prefix recomputes (8 tokens each — the no-KV-cache way to get
+    the next token). Both arms are warm compiled programs."""
+    x = _prompts(BATCH, seed=4)
+    slots = np.array([lm.assign_slot(1000 + rid) for rid in range(BATCH)],
+                     np.int32)
+    res = lm.prefill(x, slots)          # warms the prefill rung
+    res = lm.decode_step(res.hidden, slots)     # warms the decode rung
+    hidden = res.hidden
+    best = [float("inf"), float("inf")]
+    for _ in range(WALL_REPEATS):
+        # re-prefill resets the position counters so decode blocks can
+        # never run past the KV capacity, whatever the repeat count
+        res = lm.prefill(x, slots)
+        hidden = res.hidden
+        t0 = time.perf_counter()
+        for _ in range(DECODE_BLOCK):
+            r = lm.decode_step(hidden, slots)
+            hidden = r.hidden
+        best[0] = min(best[0], time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(RECOMPUTE_BLOCK):
+            lm.prefill(x, slots)
+        best[1] = min(best[1], time.perf_counter() - t0)
+    decode_tps = BATCH * DECODE_BLOCK / best[0]
+    recompute_tps = BATCH * RECOMPUTE_BLOCK / best[1]
+    ratio = decode_tps / recompute_tps
+    gates["decode_vs_recompute_speedup"] = (
+        ratio >= SPEEDUP_MIN * WALL_TOLERANCE)
+    hw = energy_mod.BACKEND_HW["accel"]
+    mj_tok = hw.power_busy * (best[0] / (BATCH * DECODE_BLOCK)) * 1e3
+    print(f"[wall] decode b{BATCH}: {decode_tps:9.1f} tok/s vs "
+          f"recompute-prefix {recompute_tps:9.1f} tok/s "
+          f"(x{ratio:.1f}, gate >= {SPEEDUP_MIN}x)  "
+          f"~{mj_tok:.2f} mJ/token at {hw.power_busy:.1f} W busy")
+    for rid in range(BATCH):
+        lm.release_slot(1000 + rid)
+    return {"decode_tokens_per_s": decode_tps,
+            "recompute_tokens_per_s": recompute_tps,
+            "ratio": ratio, "mj_per_token_modeled": mj_tok}
+
+
+def ladder_serve(lm: LMEngine) -> Dict:
+    """Serve a small request stream through the LMScheduler rung ladder
+    (not gated on wall time — telemetry shape only)."""
+    sched = LMScheduler(lm)
+    prompts = _prompts(12, seed=5)
+    for rid, x in enumerate(prompts):
+        sched.submit(LMRequest(rid=2000 + rid, x=x, max_new_tokens=4))
+    sched.run()
+    print(sched.summary())
+    return sched.telemetry().to_dict()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="machine-independent gates only (skip "
+                         "wall-clock)")
+    args = ap.parse_args(argv)
+
+    print("== LM serving fast path: compiled decode over int8 KV slots "
+          "==")
+    lm = _build()
+    print(lm.plan.summary())
+    gates: Dict[str, bool] = {}
+    staged_chain_gates(lm, gates)
+    steady = steady_state_gates(lm, gates)
+    wall = {} if args.smoke else wall_decode_vs_recompute(lm, gates)
+    serve = ladder_serve(lm)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump({"steady": steady, "wall_clock": wall,
+                   "serve_telemetry": serve, "gates": gates}, f, indent=1)
+    print(f"\n[lm] wrote {OUT_PATH}")
+    print("[gates] " + "  ".join(f"{k}={v}" for k, v in gates.items()))
+    return 0 if all(gates.values()) else 1
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -50,8 +50,9 @@ SECTIONS = {
                   "Figs 9-13 power-over-time serving phases"),
     "roofline": ("benchmarks.roofline", True, False,
                  "LM roofline sweep (needs the dryrun ledger)"),
-    "lm_energy": ("benchmarks.lm_energy", True, False,
-                  "LM energy model (needs the dryrun ledger)"),
+    "lm": ("benchmarks.lm_energy", False, True,
+           "LM serving gates: compiled decode over int8 KV slots, "
+           "prefill/decode rung ladder, tokens/s vs recompute"),
 }
 
 

@@ -77,6 +77,12 @@ HLS_UNROLLS = (1, 2, 4, 8, 16, 32, 64)
 HLS_MAX_UNROLL = 64           # DSP-lane budget of the flex dataflow analog
 DEFAULT_CONV_ROWS = 8         # the pre-autotune kernel default
 INT8_KINDS = ("int8_dense", "int8_conv")
+# LM kernel pools: flash-attention q/k block shapes and the SSD scan's
+# chunk length (DESIGN.md §15). 256 is the shipped kernel default.
+ATTN_BLOCKS = (64, 128, 256, 512)
+DEFAULT_ATTN_BLOCK = 256
+SSD_CHUNKS = (32, 64, 128, 256, 512)
+DEFAULT_SSD_CHUNK = 256
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -95,10 +101,12 @@ class KernelConfig:
     an hls config only has unroll)."""
     bm: int = 0
     bn: int = 0
-    bk: int = 0
+    bk: int = 0                   # dense reduction block / attention K block
     rows_per_block: int = 0
     cout_per_block: int = 0       # 0 = whole Cout per grid step
     unroll: int = 1
+    bq: int = 0                   # attention query block
+    chunk: int = 0                # SSD scan chunk length
 
     def to_dict(self) -> Dict[str, int]:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -264,6 +272,48 @@ def price_int8_conv(hw, batch: int, h: int, w: int, cin: int, kh: int,
     return t, restream, feasible
 
 
+def price_attention(hw, batch: int, sq: int, sk: int, hq: int, hkv: int,
+                    hd: int, causal: bool, bq: int, bk: int
+                    ) -> Tuple[float, float, bool]:
+    """(seconds, kv_restream_bytes, feasible) for one whole-batch flash
+    attention at blocks (bq, bk). Padded blocks compute like real ones;
+    fully-masked causal blocks short-circuit (no MXU work) but still pay
+    their sequencer dispatch; every query block beyond the first
+    re-streams the K/V planes (the online-softmax scratch keeps only the
+    running stats resident) — larger bq trades VMEM for fewer K/V
+    passes, exactly the knob worth searching."""
+    bq, bk = min(bq, _ceil_to(sq, 8)), min(bk, _ceil_to(sk, 8))
+    sq_p, sk_p = _ceil_to(sq, bq), _ceil_to(sk, bk)
+    n_q, n_kb = sq_p // bq, sk_p // bk
+    blocks = sum(1 for i in range(n_q) for j in range(n_kb)
+                 if not causal or j * bk <= i * bq + bq - 1)
+    flops_per_block = 4 * bq * bk * hd + 5 * bq * bk
+    t = batch * hq * blocks * flops_per_block / (hw.peak_flops_f32 * hw.util)
+    t += batch * hq * n_q * n_kb * hw.grid_step_s
+    # f32 working set: q/acc blocks + k/v blocks + running stats
+    vmem = 4 * (2 * bq * hd + 2 * bk * hd + 2 * bq)
+    feasible = vmem <= hw.onchip_bytes
+    restream = (batch * hq * max(n_q - 1, 0)
+                * 2.0 * sk_p * hd * 4)
+    return t, restream, feasible
+
+
+def price_ssd(hw, batch: int, s: int, h: int, p: int, n: int, chunk: int
+              ) -> Tuple[float, float, bool]:
+    """(seconds, 0, feasible) for one whole-batch chunked SSD scan. Work
+    is chunk-independent (the recurrence is sequential over chunks); the
+    chunk length trades per-chunk sequencer dispatches against the VMEM
+    slice of inputs resident per grid step."""
+    chunk = max(min(chunk, s), 1)
+    flops = 7.0 * s * h * p * n            # 2 contractions + decay/blend
+    t = batch * flops / (hw.peak_flops_f32 * hw.util)
+    t += batch * -(-s // chunk) * hw.grid_step_s
+    # f32 working set: state [h,p,n] + one chunk of x/B/C/dt + y chunk
+    vmem = 4 * (h * p * n + chunk * (2 * h * p + 2 * n + h))
+    feasible = vmem <= hw.onchip_bytes
+    return t, 0.0, feasible
+
+
 def price_hls(hw, batch: int, ops_per_sample: int, reduction: int,
               unroll: int) -> Tuple[float, float, bool]:
     """(seconds, 0, feasible) for one flex-analog dataflow layer at
@@ -335,6 +385,42 @@ def conv_candidates(h_out: int, cout: int,
 def hls_candidates(reduction: int) -> List[KernelConfig]:
     return [KernelConfig(unroll=u) for u in HLS_UNROLLS
             if u <= min(HLS_MAX_UNROLL, max(int(reduction), 1))]
+
+
+def attention_candidates(sq: int, sk: int) -> List[KernelConfig]:
+    """Flash-attention (bq, bk) pool. The kernel pads ragged lengths up
+    to the block grid, so every pool entry is runnable; candidate #0 is
+    the shipped kernel default (clamped, like the kernel clamps)."""
+    default = KernelConfig(bq=min(DEFAULT_ATTN_BLOCK, sq),
+                           bk=min(DEFAULT_ATTN_BLOCK, sk))
+    out = [default] + [
+        KernelConfig(bq=bq, bk=bk)
+        for bq in sorted({min(t, sq) for t in ATTN_BLOCKS})
+        for bk in sorted({min(t, sk) for t in ATTN_BLOCKS})]
+    seen, uniq = set(), []
+    for c in out:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    return uniq
+
+
+def ssd_candidates(s: int) -> List[KernelConfig]:
+    """SSD chunk pool: the kernel rounds a requested chunk down to the
+    largest divisor of S, so only divisors are enumerated — the priced
+    chunk is exactly the executed chunk."""
+    divs = [d for d in range(1, s + 1) if s % d == 0]
+    default = KernelConfig(chunk=max(d for d in divs
+                                     if d <= min(DEFAULT_SSD_CHUNK, s)))
+    pool = sorted({max(d for d in divs if d <= min(c, s))
+                   for c in SSD_CHUNKS})
+    out = [default] + [KernelConfig(chunk=c) for c in pool]
+    seen, uniq = set(), []
+    for c in out:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    return uniq
 
 
 # ---------------------------------------------------------------------------
@@ -419,20 +505,40 @@ def node_spec(plan, name: str, batch: int) -> Optional[Tuple[str, Tuple]]:
     start with the batch rung — the whole (op, shape, dtype, backend,
     rung) cache identity lives here."""
     node = plan.graph.nodes[name]
+    bop = base_op(node)
+    # the LM kernels tune on either plan backend: unlike the hls knob,
+    # (bq, bk) / chunk change the EXECUTED Pallas grid (numerics-neutral)
+    if bop == "attention":
+        sq, hq, hd = node.out_shape
+        sk, hkv, _ = plan.graph.nodes[node.inputs[1]].out_shape
+        return "attention", (batch, int(sq), int(sk), int(hq), int(hkv),
+                             int(hd),
+                             1 if node.attrs.get("causal", True) else 0)
+    if bop == "ssd":
+        s, h, p = node.out_shape
+        n = plan.graph.nodes[node.inputs[1]].out_shape[-1]
+        return "ssd", (batch, int(s), int(h), int(p), int(n))
     if plan.backend == "accel" and name in plan.qplans:
         qp = plan.qplans[name]
         in_shape = plan.graph.nodes[node.inputs[0]].out_shape or ()
         if qp.op == "dense":
+            if qp.per_position:
+                # token-wise GEMM: M = batch x positions, K = last axis
+                m = batch * int(np.prod(in_shape[:-1], dtype=np.int64))
+                return "int8_dense", (m, int(in_shape[-1]),
+                                      int(qp.w_q.shape[1]))
             k = int(np.prod(in_shape, dtype=np.int64))
             return "int8_dense", (batch, k, int(qp.w_q.shape[1]))
         h, w, cin = in_shape
         kh, kw, _, cout = (int(d) for d in qp.w_q.shape)
         return "int8_conv", (batch, int(h), int(w), int(cin), kh, kw,
                              cout, int(qp.stride), qp.padding)
-    if plan.backend == "flex" and base_op(node) in ("conv2d", "dense"):
+    if plan.backend == "flex" and bop in ("conv2d", "dense"):
         in_shape = plan.graph.nodes[node.inputs[0]].out_shape or ()
-        if base_op(node) == "dense":
-            red = int(np.prod(in_shape, dtype=np.int64))
+        if bop == "dense":
+            red = (int(in_shape[-1])
+                   if node.attrs.get("per_position", False)
+                   else int(np.prod(in_shape, dtype=np.int64)))
         else:
             kh, kw = node.attrs["kernel"]
             red = int(kh) * int(kw) * int(in_shape[-1])
@@ -471,6 +577,16 @@ class Autotuner:
                                    stride, padding,
                                    cfg.rows_per_block or DEFAULT_CONV_ROWS,
                                    cfg.cout_per_block, resident)
+        if kind == "attention":
+            batch, sq, sk, hq, hkv, hd, causal = sig
+            return price_attention(hw, batch, sq, sk, hq, hkv, hd,
+                                   bool(causal),
+                                   cfg.bq or DEFAULT_ATTN_BLOCK,
+                                   cfg.bk or DEFAULT_ATTN_BLOCK)
+        if kind == "ssd":
+            batch, s, h, p, n = sig
+            return price_ssd(hw, batch, s, h, p, n,
+                             cfg.chunk or DEFAULT_SSD_CHUNK)
         batch, ops, red = sig
         return price_hls(hw, batch, ops, red, cfg.unroll)
 
@@ -483,6 +599,10 @@ class Autotuner:
             _, h, w, cin, kh, kw, cout, stride, padding = sig
             h_out = conv_geometry(h, w, kh, kw, stride, padding, 1).h_out
             return conv_candidates(h_out, cout, fixed)
+        if kind == "attention":
+            return attention_candidates(sig[1], sig[2])
+        if kind == "ssd":
+            return ssd_candidates(sig[1])
         _, _, red = sig
         return hls_candidates(red)
 

@@ -383,6 +383,9 @@ class CostSignature:
     power_w: float                  # busy power while the batch runs
     weights_resident: bool
     ddr_energy_j: float = 0.0       # the off-chip-access share of energy_j
+    kv_resident_bytes: float = 0.0  # packed KV-cache arena footprint (LM
+                                    # decode slots — charged like
+                                    # prepacked weights, DESIGN.md §15)
     pipelined_latency_s: float = 0.0
     # ^ steady-state per-batch interval of the PIPELINED runtime: the
     # longest stage of the plan's stage decomposition (`stage_costs`) —

@@ -18,9 +18,15 @@ from repro.core.opgraph import Graph, Node, base_op
 # The DPU-analog op table. Deliberately restrictive, mirroring DPUCZDX8G:
 # CNN ops + ReLU only — no sigmoid/tanh/softplus, no comparators, no 3-D
 # layers, no sampling, no exp. (INT8 MXU kernels exist for conv2d/dense.)
+# `reshape` is structural data movement the DPU's DMA handles. The LM
+# kernels (`attention`, `ssd`) are NOT in the table: like the paper's
+# sigmoid tail they run on the flexible path, so a decoder block
+# partitions into accel QKV/MLP projections around flex attention/SSM
+# segments — operator coverage is exactly the survey's binding
+# constraint for DPU-style accelerators.
 ACCEL_SUPPORTED = {
     "conv2d", "dense", "relu", "maxpool2d", "avgpool2d", "flatten",
-    "concat", "add",
+    "concat", "add", "reshape",
 }
 
 # Ops the accel path *executes quantized* (the rest of ACCEL_SUPPORTED are

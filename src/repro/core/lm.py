@@ -1,0 +1,355 @@
+"""LM serving engine — autoregressive decode over the compiled op graph.
+
+``LMEngine`` wraps an :class:`~repro.core.engine.Engine` holding a
+decoder-block graph (``models/lm.py``) and makes decode a first-class,
+statically-planned workload (DESIGN.md §15):
+
+* **Prefill** runs THE compiled plan — the same Planned -> Lowered ->
+  Compiled chain the CNNs use, one executable per batch rung. The graph
+  exposes its KV/state capture points as outputs (``k_heads`` /
+  ``v_heads`` / ``ssm_heads`` / ``b_proj`` / ``dt``); a per-rung jitted
+  *commit* program quantizes K/V (``lm_quant.quantize_kv`` — int8 codes
+  + f16 per-token-head scale planes) and scatters them into the
+  request's KV slot, and folds the SSD scan's final state into the
+  slot's state buffer.
+
+* **Decode** is a per-rung jitted single-token program over the SAME
+  rewritten plan (same ``QuantNodePlan`` constants, same fused nodes,
+  same live weight arena), with the ``attention`` node replaced by a
+  masked attend over the dequantized int8 cache and the ``ssd`` node by
+  the one-step SSD recurrence on the cached state. Decode attention is
+  deliberately plain ``jnp`` (not the Pallas flash kernel): a decode
+  step is a memory-bound GEMV over a dynamic prefix length — there is
+  no tiling to win, and the flash kernel's ``kv_len`` is static.
+
+* **KV slots** come from the static planner
+  (:func:`~repro.core.memory.plan_kv_cache`): fixed-capacity,
+  tile-aligned int8 K/V arenas charged to the plan's BRAM/DDR budget and
+  its :class:`~repro.core.energy.CostSignature` like prepacked weights.
+  Slot assign/release is the only per-request state transition — after
+  each rung's programs exist, steady-state decode performs **zero
+  re-traces and zero arena allocations** (``n_traces`` /
+  ``KVSlotAllocator.n_assigns`` are the observability surface).
+
+The K/V cache is int8 ALWAYS — on quantized plans the pass pipeline's
+``kv_int8`` annotation makes the prefill attention node round-trip its
+K/V through the same quantizer, so prefill math matches what decode
+reads back; unquantized (flex) plans stream fp32 K/V in prefill and pay
+a one-time int8 rounding at the cache boundary (the documented
+``fuse=False`` caveat in core/passes.py).
+
+Prompts are full fixed-length windows (``graph_inputs['x'][0]``
+positions): the SSD prefill state is the scan's final state, which is
+only the request's state when the prompt fills the window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_mod
+from repro.core import lm_quant
+from repro.core import memory as memory_mod
+from repro.core.engine import Engine
+from repro.core.opgraph import RANDOM_OPS, base_op
+from repro.core.plan import (BATCHED_OP_IMPLS, _run_fused_f32,
+                             _run_quantized)
+
+NEG_INF = -2.0e38                      # matches kernels/flash_attention.py
+
+
+@dataclasses.dataclass(frozen=True)
+class StepResult:
+    """One prefill/decode dispatch's outputs, already on host."""
+    tokens: np.ndarray                  # [B] int32 argmax tokens
+    hidden: np.ndarray                  # [B, D] next-step input features
+
+
+class LMEngine:
+    """Scheduler-facing serving facade over one decoder-block engine."""
+
+    def __init__(self, engine: Engine, backend: str = "accel",
+                 n_slots: int = 4, max_new_tokens: int = 32,
+                 logits_node: str = "head", hidden_node: str = "resid2"):
+        if not engine.fuse:
+            raise ValueError(
+                "LMEngine requires fuse=True (the kv_int8 annotation and "
+                "epilogue/requant fusion live in the pass pipeline)")
+        self.engine = engine
+        self.backend = backend
+        self.logits_node = logits_node
+        self.hidden_node = hidden_node
+        self.plan = engine.planned(backend)
+        graph = self.plan.graph
+        bad = [n for n in graph.order
+               if graph.nodes[n].op in RANDOM_OPS]
+        if bad:
+            raise ValueError(f"LM decode cannot replay RANDOM_OPS: {bad}")
+        for out in (logits_node, hidden_node):
+            if out not in graph.outputs:
+                raise ValueError(f"{out!r} must be a graph output")
+        self.seq_len = int(graph.graph_inputs["x"][0])
+        self.d_model = int(graph.graph_inputs["x"][1])
+        self.max_new_tokens = int(max_new_tokens)
+        self.n_slots = int(n_slots)
+
+        # capture-point bookkeeping: every attention k/v input and every
+        # ssd x/B/dt input must be a graph output (prefill visibility)
+        self._attn_nodes = [n for n in graph.order
+                            if base_op(graph.nodes[n]) == "attention"]
+        self._ssd_nodes = [n for n in graph.order
+                           if base_op(graph.nodes[n]) == "ssd"]
+        missing = []
+        for n in self._attn_nodes:
+            missing += [i for i in graph.nodes[n].inputs[1:3]
+                        if i not in graph.outputs]
+        for n in self._ssd_nodes:
+            node = graph.nodes[n]
+            missing += [i for i in (node.inputs[0], node.inputs[1],
+                                    node.inputs[3])
+                        if i not in graph.outputs]
+        if missing:
+            raise ValueError(
+                f"KV/state capture inputs must be graph outputs: {missing}")
+
+        # the static KV arena: charged to the plan's budget + signature
+        hw = energy_mod.BACKEND_HW[backend]
+        self.kv_plan = memory_mod.plan_kv_cache(
+            graph, n_slots, self.seq_len + self.max_new_tokens,
+            bram_available=hw.onchip_bytes)
+        self.plan.attach_kv_plan(self.kv_plan)
+        self.capacity = self.kv_plan.capacity
+        self.slots = memory_mod.KVSlotAllocator(n_slots)
+
+        # slot arenas: n_slots real rows + one scratch row (index
+        # n_slots) that padding lanes in a partially-filled rung target
+        self.caches: Dict[str, Any] = self._init_caches()
+        # per-rung jitted programs; building one is a counted trace
+        self._commit: Dict[int, Callable] = {}
+        self._decode: Dict[int, Callable] = {}
+        self.lm_traces = 0
+
+    # -- cache arenas --------------------------------------------------------
+
+    def _init_caches(self) -> Dict[str, Any]:
+        rows = self.n_slots + 1
+        cap = self.capacity
+        caches: Dict[str, Any] = {
+            "pos": jnp.zeros((rows,), jnp.int32)}
+        graph = self.plan.graph
+        for n in self._attn_nodes:
+            _, hkv, hd = graph.nodes[graph.nodes[n].inputs[1]].out_shape
+            caches[n] = {
+                "k_codes": jnp.zeros((rows, cap, hkv, hd), jnp.int8),
+                "k_scale": jnp.ones((rows, cap, hkv), jnp.float16),
+                "v_codes": jnp.zeros((rows, cap, hkv, hd), jnp.int8),
+                "v_scale": jnp.ones((rows, cap, hkv), jnp.float16)}
+        for n in self._ssd_nodes:
+            node = graph.nodes[n]
+            _, h, p = graph.nodes[node.inputs[0]].out_shape
+            nstate = graph.nodes[node.inputs[1]].out_shape[-1]
+            caches[n] = {
+                "state": jnp.zeros((rows, h, p, nstate), jnp.float32)}
+        return caches
+
+    @property
+    def scratch_slot(self) -> int:
+        """The slot id padding lanes write to (never read back)."""
+        return self.n_slots
+
+    @property
+    def n_traces(self) -> int:
+        """Total trace count: plan lowerings + LM commit/decode builds.
+        Steady-state serving must not grow it."""
+        return self.plan.n_traces + self.lm_traces
+
+    # -- slot lifecycle (driven by the scheduler) ----------------------------
+
+    def assign_slot(self, request_id) -> Optional[int]:
+        return self.slots.assign(request_id)
+
+    def release_slot(self, request_id) -> int:
+        return self.slots.release(request_id)
+
+    # -- prefill -------------------------------------------------------------
+
+    def prefill(self, x: np.ndarray, slot_ids: np.ndarray) -> StepResult:
+        """Run one prefill rung: ``x`` [B, S, D] prompt windows,
+        ``slot_ids`` [B] KV slots (``scratch_slot`` for padding lanes).
+        Commits quantized K/V + SSD state into the slots and returns each
+        lane's first generated token + feedback features."""
+        b = int(x.shape[0])
+        outs = self.engine.run_batch(
+            {"x": jnp.asarray(x, jnp.float32)}, self.backend)
+        if b not in self._commit:
+            self._commit[b] = jax.jit(self._commit_fn)
+            self.lm_traces += 1
+        self.caches = self._commit[b](
+            outs, jnp.asarray(slot_ids, jnp.int32), self.caches)
+        logits = np.asarray(outs[self.logits_node])
+        hidden = np.asarray(outs[self.hidden_node])
+        return StepResult(
+            tokens=np.argmax(logits[:, -1], axis=-1).astype(np.int32),
+            hidden=hidden[:, -1])
+
+    def _commit_fn(self, outs, slot_ids, caches):
+        graph, params = self.plan.graph, self.plan.params
+        s, cap = self.seq_len, self.capacity
+        new = dict(caches)
+        for n in self._attn_nodes:
+            node = graph.nodes[n]
+            d = dict(caches[n])
+            for which, src in (("k", node.inputs[1]), ("v", node.inputs[2])):
+                codes, scale = lm_quant.quantize_kv(outs[src])
+                d[f"{which}_codes"] = caches[n][f"{which}_codes"].at[
+                    slot_ids].set(jnp.pad(
+                        codes, ((0, 0), (0, cap - s), (0, 0), (0, 0))))
+                d[f"{which}_scale"] = caches[n][f"{which}_scale"].at[
+                    slot_ids].set(jnp.pad(
+                        scale.astype(jnp.float16),
+                        ((0, 0), (0, cap - s), (0, 0)),
+                        constant_values=1.0))
+            new[n] = d
+        for n in self._ssd_nodes:
+            node = graph.nodes[n]
+            xh = outs[node.inputs[0]]               # [B, S, H, P]
+            bp = outs[node.inputs[1]]               # [B, S, N]
+            dt = outs[node.inputs[3]]               # [B, S, H]
+            a = params[n]["A"]
+
+            def step(state, inp):
+                xt, bt, dtt = inp
+                decay = jnp.exp(dtt * a)
+                state = (state * decay[..., None, None]
+                         + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt))
+                return state, None
+
+            init = jnp.zeros(
+                (xh.shape[0],) + caches[n]["state"].shape[1:], jnp.float32)
+            state, _ = jax.lax.scan(
+                step, init, (xh.swapaxes(0, 1), bp.swapaxes(0, 1),
+                             dt.swapaxes(0, 1)))
+            new[n] = {"state": caches[n]["state"].at[slot_ids].set(state)}
+        new["pos"] = caches["pos"].at[slot_ids].set(s)
+        return new
+
+    # -- decode --------------------------------------------------------------
+
+    def decode_step(self, hidden: np.ndarray, slot_ids: np.ndarray
+                    ) -> StepResult:
+        """One decode rung: ``hidden`` [R, D] feedback features,
+        ``slot_ids`` [R] slots (``scratch_slot`` for padding lanes).
+        Appends each lane's new K/V at its position counter and returns
+        the next token + feedback features. Zero re-traces once the rung
+        is warm; zero slot allocations ever."""
+        r = int(hidden.shape[0])
+        if r not in self._decode:
+            self._decode[r] = jax.jit(self._make_decode())
+            self.lm_traces += 1
+        tok, hid, self.caches = self._decode[r](
+            jnp.asarray(hidden, jnp.float32),
+            jnp.asarray(slot_ids, jnp.int32),
+            self.caches, self.plan.weight_arena)
+        return StepResult(tokens=np.asarray(tok), hidden=np.asarray(hid))
+
+    def _make_decode(self) -> Callable:
+        plan = self.plan
+        graph, params = plan.graph, plan.params
+        qplans, packed = plan.qplans, plan.packed
+        fused_into = plan.fused_into
+        cap = self.capacity
+
+        def step(x, slot_ids, caches, weights):
+            vals: Dict[str, jax.Array] = {"x": x.astype(jnp.float32)}
+            pos = caches["pos"][slot_ids]           # [R] tokens cached
+            pos_w = jnp.minimum(pos, cap - 1)       # clamped write index
+            new = dict(caches)
+            for name in graph.order:
+                node = graph.nodes[name]
+                if node.op == "input":
+                    continue
+                if node.op == "const":
+                    v = jnp.asarray(node.attrs["value"])
+                    vals[name] = jnp.broadcast_to(
+                        v, (x.shape[0],) + v.shape)
+                    continue
+                if name in fused_into:
+                    vals[name] = vals[fused_into[name]]
+                    continue
+                xs = [vals[i] for i in node.inputs]
+                if name in qplans:
+                    vals[name] = _run_quantized(
+                        qplans[name], xs[0], packed=packed.get(name),
+                        w_q=weights[name])
+                    continue
+                if node.op == "fused" and base_op(node) != "attention":
+                    vals[name] = _run_fused_f32(node, xs, params)
+                    continue
+                if node.op == "reshape":
+                    # per-sample [S, ...] targets lose the position axis
+                    # at decode: one token, same trailing dims
+                    vals[name] = xs[0].reshape(
+                        (xs[0].shape[0],) + tuple(node.out_shape[1:]))
+                    continue
+                if base_op(node) == "attention":
+                    vals[name], upd = _decode_attend(
+                        xs, slot_ids, pos, pos_w, caches[name])
+                    new[name] = upd
+                    continue
+                if base_op(node) == "ssd":
+                    state = caches[name]["state"][slot_ids]
+                    y, state = _decode_ssd(xs, params[name]["A"], state)
+                    new[name] = {"state": caches[name]["state"].at[
+                        slot_ids].set(state)}
+                    vals[name] = y
+                    continue
+                vals[name] = BATCHED_OP_IMPLS[node.op](
+                    xs, params.get(name, {}), node.attrs, None)
+            new["pos"] = caches["pos"].at[slot_ids].add(1)
+            tok = jnp.argmax(vals[self.logits_node], axis=-1)
+            return tok.astype(jnp.int32), vals[self.hidden_node], new
+
+        return step
+
+
+def _decode_attend(xs, slot_ids, pos, pos_w, cache
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token attend over the int8 slot cache: append the new
+    K/V at ``pos_w``, then masked-softmax over positions ``<= pos``."""
+    q, k_new, v_new = (t.astype(jnp.float32) for t in xs)
+    kc, ks = lm_quant.quantize_kv(k_new)            # [R,Hkv,hd] / [R,Hkv]
+    vc, vs = lm_quant.quantize_kv(v_new)
+    upd = {
+        "k_codes": cache["k_codes"].at[slot_ids, pos_w].set(kc),
+        "k_scale": cache["k_scale"].at[slot_ids, pos_w].set(
+            ks.astype(jnp.float16)),
+        "v_codes": cache["v_codes"].at[slot_ids, pos_w].set(vc),
+        "v_scale": cache["v_scale"].at[slot_ids, pos_w].set(
+            vs.astype(jnp.float16))}
+    k_all = lm_quant.dequantize_kv(
+        upd["k_codes"][slot_ids], upd["k_scale"][slot_ids], jnp.float32)
+    v_all = lm_quant.dequantize_kv(
+        upd["v_codes"][slot_ids], upd["v_scale"][slot_ids], jnp.float32)
+    cap, hq, hd = k_all.shape[1], q.shape[1], q.shape[2]
+    group = hq // k_all.shape[2]                    # GQA repeat factor
+    k_r = jnp.repeat(k_all, group, axis=2)          # [R,cap,Hq,hd]
+    v_r = jnp.repeat(v_all, group, axis=2)
+    scores = jnp.einsum("rhd,rchd->rhc", q, k_r) * (hd ** -0.5)
+    live = jnp.arange(cap)[None, :] <= pos[:, None]
+    scores = jnp.where(live[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("rhc,rchd->rhd", probs, v_r), upd
+
+
+def _decode_ssd(xs, a, state) -> Tuple[jax.Array, jax.Array]:
+    """One SSD recurrence step on the cached state (kernels/ref.py
+    decode math): ``xs`` = (x [R,H,P], B [R,N], C [R,N], dt [R,H])."""
+    xh, b_, c_, dt = (t.astype(jnp.float32) for t in xs)
+    decay = jnp.exp(dt * a)                         # [R,H]
+    state = (state * decay[..., None, None]
+             + jnp.einsum("rh,rn,rhp->rhpn", dt, b_, xh))
+    return jnp.einsum("rn,rhpn->rhp", c_, state), state

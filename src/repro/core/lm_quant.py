@@ -88,9 +88,18 @@ def dequantize_params(qparams, dtype=jnp.bfloat16) -> Any:
 
 
 def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """x [B, S, H, hd] -> (int8 codes, f32 scales [B, S, H])."""
+    """x [B, S, H, hd] -> (int8 codes, f32 scales [B, S, H]).
+
+    All-zero tiles get scale 1.0, not an epsilon: a tiny epsilon scale
+    survives in f32 but underflows to exactly 0.0 when the scale plane is
+    stored at reduced precision (the KV arena keeps scales in f16), and a
+    zero scale turns every later inverse-scale/requant into inf/NaN. A
+    zero tile round-trips exactly under any positive scale, so 1.0 is
+    both safe and lossless.
+    """
     xf = x.astype(jnp.float32)
-    s = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    m = jnp.max(jnp.abs(xf), axis=-1)
+    s = jnp.where(m > 0, m / 127.0, 1.0)
     q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
     return q, s
 

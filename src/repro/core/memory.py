@@ -243,3 +243,138 @@ def plan_arena(graph: Graph,
         boundary_bytes=boundary_bytes,
         weight_bytes=weight_bytes,
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-request KV-cache slots (LM autoregressive decode — DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+# slot capacities are padded to a whole number of 128-position tiles: the
+# int8 K/V planes then tile cleanly on the MXU lane dim, and every slot
+# in the arena shares one static shape (no per-request re-trace)
+KV_TILE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Per-slot cache geometry for ONE stateful LM node."""
+    node: str                       # graph node the cache backs
+    kind: str                       # 'attention' | 'ssd'
+    shape: Tuple[int, ...]          # attention: [capacity, Hkv, hd]
+                                    # ssd:       [H, P, N]
+    slot_bytes: int                 # one request's bytes for this node
+
+    def describe(self) -> str:
+        return (f"{self.node}[{self.kind}] {self.shape} "
+                f"{self.slot_bytes:,} B/slot")
+
+
+@dataclasses.dataclass
+class KVCachePlan:
+    """The static KV-cache arena: ``n_slots`` fixed-capacity per-request
+    slots, sized at plan time and charged to the memory budget like
+    prepacked weights. Attention nodes store int8 K/V codes plus f16
+    per-(position, head) scale planes; SSD nodes store their fp32
+    recurrent state. Steady-state decode reuses these buffers in place —
+    zero allocations, zero re-traces."""
+    graph_name: str
+    n_slots: int
+    capacity: int                   # tile-aligned max sequence length
+    specs: Dict[str, KVSpec]
+    tier: str                       # 'bram' | 'ddr'
+
+    @property
+    def slot_bytes(self) -> int:
+        return sum(s.slot_bytes for s in self.specs.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return self.slot_bytes * self.n_slots
+
+    @property
+    def bram_bytes(self) -> int:
+        return self.total_bytes if self.tier == "bram" else 0
+
+    @property
+    def ddr_bytes(self) -> int:
+        return self.total_bytes if self.tier == "ddr" else 0
+
+    def summary(self) -> str:
+        return (f"kv[{self.graph_name}]: {self.n_slots} slot(s) x "
+                f"{self.slot_bytes:,} B (cap {self.capacity}) = "
+                f"{self.total_bytes:,} B {self.tier}")
+
+
+def plan_kv_cache(graph: Graph, n_slots: int, max_seq: int,
+                  bram_available: int = 0) -> KVCachePlan:
+    """Size the per-request KV-cache slots for every stateful node of an
+    LM graph. ``max_seq`` (prompt + generated tokens) is padded up to a
+    whole number of :data:`KV_TILE` positions; the arena lands in BRAM
+    when all slots fit in ``bram_available`` (on-chip bytes left after
+    resident weights), otherwise DDR — mirroring the weight-residency
+    policy."""
+    from repro.core.opgraph import base_op as _base_op
+
+    if n_slots < 1:
+        raise ValueError(f"KV cache needs >= 1 slot, got {n_slots}")
+    if max_seq < 1:
+        raise ValueError(f"max_seq must be >= 1, got {max_seq}")
+    capacity = -(-max_seq // KV_TILE) * KV_TILE
+    specs: Dict[str, KVSpec] = {}
+    for name in graph.order:
+        node = graph.nodes[name]
+        bop = _base_op(node)
+        if bop == "attention":
+            _, hkv, hd = graph.nodes[node.inputs[1]].out_shape
+            # int8 K + V codes, f16 K + V scale planes
+            nbytes = 2 * capacity * hkv * hd + 2 * capacity * hkv * 2
+            specs[name] = KVSpec(name, "attention",
+                                 (capacity, hkv, hd), nbytes)
+        elif bop == "ssd":
+            _, h, p = graph.nodes[node.inputs[0]].out_shape
+            n = graph.nodes[node.inputs[1]].out_shape[-1]
+            specs[name] = KVSpec(name, "ssd", (h, p, n), h * p * n * 4)
+    total = sum(s.slot_bytes for s in specs.values()) * n_slots
+    tier = "bram" if total and total <= bram_available else "ddr"
+    return KVCachePlan(graph_name=graph.name, n_slots=n_slots,
+                       capacity=capacity, specs=specs, tier=tier)
+
+
+class KVSlotAllocator:
+    """Free-list allocator over the KV arena's request slots, driven by
+    the scheduler at request admission/retirement. Counts every assign —
+    the steady-state-decode gate asserts the count does NOT move while
+    tokens stream (all allocation happened at admission)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+        self._owner: Dict[object, int] = {}
+        self.n_assigns = 0
+        self.high_water = 0
+
+    @property
+    def in_use(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def assign(self, request_id) -> Optional[int]:
+        """Claim a slot for ``request_id``; None when the arena is full
+        (the scheduler keeps the request queued)."""
+        if request_id in self._owner:
+            raise ValueError(f"request {request_id!r} already holds "
+                             f"slot {self._owner[request_id]}")
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        self._owner[request_id] = slot
+        self.n_assigns += 1
+        self.high_water = max(self.high_water, self.in_use)
+        return slot
+
+    def release(self, request_id) -> int:
+        slot = self._owner.pop(request_id)
+        self._free.append(slot)
+        return slot
+
+    def slot_of(self, request_id) -> int:
+        return self._owner[request_id]

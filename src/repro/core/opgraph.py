@@ -277,13 +277,94 @@ def _infer_impl(node: Node, ins: List[Node]) -> None:
                           _pool_out(w, k, stride), c)
         node.ops = int(np.prod(node.out_shape)) * k ** 3
     elif op == "dense":
-        fin = int(np.prod(shapes[0]))
         fout = a["features"]
-        node.out_shape = (fout,)
+        if a.get("per_position", False):
+            # token-wise projection: matmul over the LAST axis only, all
+            # leading (position) axes preserved — the LM QKV/MLP shape
+            if len(shapes[0]) < 1:
+                raise ValueError(
+                    f"dense {node.name!r}: per_position needs a rank>=1 "
+                    f"input, got {shapes[0]}")
+            fin = int(shapes[0][-1])
+            n_pos = int(np.prod(shapes[0][:-1])) if len(shapes[0]) > 1 else 1
+            node.out_shape = tuple(shapes[0][:-1]) + (fout,)
+            node.macs = n_pos * fin * fout
+        else:
+            fin = int(np.prod(shapes[0]))
+            node.out_shape = (fout,)
+            node.macs = fin * fout
         node.param_count = fin * fout + (fout if a.get("bias", True) else 0)
         node.bias_params = fout if a.get("bias", True) else 0
-        node.macs = fin * fout
-        node.ops = 2 * node.macs + fout
+        node.ops = 2 * node.macs + int(np.prod(node.out_shape))
+    elif op == "attention":
+        # scaled-dot-product attention over per-sample [S, H, hd] tensors:
+        # inputs (q, k, v); GQA when Hq is a multiple of Hkv. Output has
+        # the query's shape. MACs: QK^T + PV, each Sq*Sk*Hq*hd.
+        if len(shapes) != 3:
+            raise ValueError(
+                f"attention {node.name!r} needs (q, k, v) inputs, got "
+                f"{len(shapes)}")
+        if any(len(s) != 3 for s in shapes):
+            raise ValueError(
+                f"attention {node.name!r} needs rank-3 [S,H,hd] inputs, "
+                f"got {shapes}")
+        (sq, hq, hd), (sk, hkv, hdk) = shapes[0], shapes[1]
+        if shapes[2] != shapes[1]:
+            raise ValueError(
+                f"attention {node.name!r}: k {shapes[1]} and v {shapes[2]} "
+                "shapes must match")
+        if hdk != hd:
+            raise ValueError(
+                f"attention {node.name!r}: head dim mismatch q={hd} k={hdk}")
+        if hq % hkv:
+            raise ValueError(
+                f"attention {node.name!r}: query heads {hq} must be a "
+                f"multiple of KV heads {hkv}")
+        node.out_shape = (sq, hq, hd)
+        node.macs = 2 * sq * sk * hq * hd
+        # softmax: max/sub/exp/sum/div ≈ 5 ops per score entry
+        node.ops = 2 * node.macs + 5 * sq * sk * hq
+    elif op == "ssd":
+        # chunked state-space (Mamba-2 SSD) scan over per-sample inputs
+        # x [S,H,P], B [S,N], C [S,N], dt [S,H]; per-head decay A is the
+        # node's parameter vector [H]. Output matches x.
+        if len(shapes) != 4:
+            raise ValueError(
+                f"ssd {node.name!r} needs (x, B, C, dt) inputs, got "
+                f"{len(shapes)}")
+        (s, h, p) = shapes[0]
+        (sb, n) = shapes[1]
+        if shapes[2] != shapes[1] or sb != s or shapes[3] != (s, h):
+            raise ValueError(
+                f"ssd {node.name!r}: inconsistent input shapes {shapes}")
+        node.out_shape = (s, h, p)
+        node.param_count = h               # A (fp32-resident, like biases)
+        node.bias_params = h
+        # state update (H*P*N) + output contraction (H*P*N) per step
+        node.macs = 2 * s * h * p * n
+        # + decay/exp and state blend element-wise work
+        node.ops = 2 * node.macs + 3 * s * h * p * n
+    elif op == "reshape":
+        # static per-sample reshape (attrs["shape"], one -1 allowed) —
+        # structural glue between token-major [S,D] and head-major
+        # [S,H,hd] layouts; carries no arithmetic cost
+        tgt = list(a["shape"])
+        n_in = int(np.prod(shapes[0]))
+        if tgt.count(-1) > 1:
+            raise ValueError(
+                f"reshape {node.name!r}: at most one -1 in {tgt}")
+        if -1 in tgt:
+            rest = int(np.prod([d for d in tgt if d != -1]))
+            if rest == 0 or n_in % rest:
+                raise ValueError(
+                    f"reshape {node.name!r}: cannot infer -1 in {tgt} "
+                    f"from {shapes[0]}")
+            tgt[tgt.index(-1)] = n_in // rest
+        if int(np.prod(tgt)) != n_in:
+            raise ValueError(
+                f"reshape {node.name!r}: {shapes[0]} has {n_in} elements, "
+                f"target {tgt} has {int(np.prod(tgt))}")
+        node.out_shape = tuple(int(d) for d in tgt)
     elif op == "flatten":
         node.out_shape = (int(np.prod(shapes[0])),)
     elif op in ("relu", "leaky_relu", "sigmoid", "tanh", "softplus", "exp"):

@@ -79,11 +79,13 @@ class PassReport:
     fusion_groups: List[FusionGroup] = dataclasses.field(default_factory=list)
     requant_groups: List[RequantGroup] = dataclasses.field(
         default_factory=list)
+    kv_int8_nodes: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def n_rewrites(self) -> int:
         return (len(self.folded) + len(self.eliminated)
-                + len(self.fusion_groups) + len(self.requant_groups))
+                + len(self.fusion_groups) + len(self.requant_groups)
+                + len(self.kv_int8_nodes))
 
     def summary(self) -> str:
         lines = []
@@ -98,6 +100,8 @@ class PassReport:
             via = f" via {list(rq.chain)}" if rq.chain else ""
             lines.append(f"  int8-chain {rq.producer}{via} -> "
                          f"{list(rq.consumers)} (requant s={rq.scale:.3g})")
+        if self.kv_int8_nodes:
+            lines.append(f"  int8 KV stream: {self.kv_int8_nodes}")
         return "\n".join(lines) if lines else "  (no rewrites)"
 
 
@@ -276,6 +280,28 @@ def fuse_requant(graph: Graph, ctx: PassContext,
     return graph
 
 
+def annotate_kv_int8(graph: Graph, ctx: PassContext,
+                     report: PassReport) -> Graph:
+    """INT8 KV-stream annotation (LM serving — DESIGN.md §15): on a
+    quantized (accel) plan, every attention node's K/V values go through
+    the `lm_quant.quantize_kv`/`dequantize_kv` per-(position, head)
+    round-trip — the same codes the KV-cache arena stores at decode
+    time, applied already in the prefill graph so prefill attention
+    output is bit-identical to what cached decode reconstructs. A
+    builder may pin ``kv_int8=False`` on a node to opt it out. (The
+    ``fuse=False`` escape hatch skips this pass like any other, so an
+    unfused accel LM plan streams fp32 K/V — the LM engine requires the
+    pass pipeline.)"""
+    if ctx.quant is None:
+        return graph
+    for name in graph.order:
+        node = graph.nodes[name]
+        if base_op(node) == "attention" and "kv_int8" not in node.attrs:
+            node.attrs["kv_int8"] = True
+            report.kv_int8_nodes.append(name)
+    return graph
+
+
 # ---------------------------------------------------------------------------
 # Manager
 # ---------------------------------------------------------------------------
@@ -287,6 +313,7 @@ DEFAULT_PASSES: Tuple[Tuple[str, PassFn], ...] = (
     ("dead_node_elimination", eliminate_dead_nodes),
     ("epilogue_fusion", fuse_epilogues),
     ("requant_fusion", fuse_requant),
+    ("kv_int8_annotation", annotate_kv_int8),
 )
 
 

@@ -89,10 +89,47 @@ def _pool_b(x, a, ndim, op):
 
 
 def _dense_b(x, p, a):
-    out = x.reshape(x.shape[0], -1) @ p["w"]
+    if a.get("per_position", False):
+        # token-wise projection: contract the LAST axis only; leading
+        # (batch, position) axes broadcast through jnp.matmul
+        out = x @ p["w"]
+    else:
+        out = x.reshape(x.shape[0], -1) @ p["w"]
     if "b" in p:
         out = out + p["b"]
     return out
+
+
+def _reshape_b(x, a):
+    tgt = list(a["shape"])
+    if -1 in tgt:
+        rest = int(np.prod([d for d in tgt if d != -1]))
+        tgt[tgt.index(-1)] = int(np.prod(x.shape[1:])) // rest
+    return x.reshape((x.shape[0],) + tuple(tgt))
+
+
+def _attention_b(xs, a, config=None):
+    """Batched flash attention over [B, S, H, hd] q/k/v. ``kv_int8``
+    round-trips K/V through the per-(pos, head) int8 quantizer — the
+    same codes the KV-cache arena stores, so prefill output is
+    bit-identical to what cached decode reconstructs."""
+    q, k, v = (t.astype(jnp.float32) for t in xs)
+    if a.get("kv_int8", False):
+        from repro.core import lm_quant
+        k = lm_quant.dequantize_kv(*lm_quant.quantize_kv(k), jnp.float32)
+        v = lm_quant.dequantize_kv(*lm_quant.quantize_kv(v), jnp.float32)
+    bq = config.bq if config is not None and config.bq else a.get("bq", 256)
+    bk = config.bk if config is not None and config.bk else a.get("bk", 256)
+    return kops.flash_attention(q, k, v, causal=a.get("causal", True),
+                                bq=bq, bk=bk)
+
+
+def _ssd_b(xs, p, a, config=None):
+    x, B_, C_, dt = (t.astype(jnp.float32) for t in xs)
+    chunk = (config.chunk if config is not None and config.chunk
+             else a.get("chunk", 256))
+    y, _ = kops.ssd(x, B_, C_, dt, p["A"], chunk=chunk)
+    return y
 
 
 def _concat_axis(a) -> int:
@@ -114,6 +151,9 @@ BATCHED_OP_IMPLS: Dict[str, Callable] = {
     "maxpool3d": lambda x, p, a, rng: _pool_b(x[0], a, 3, "max"),
     "avgpool3d": lambda x, p, a, rng: _pool_b(x[0], a, 3, "avg"),
     "dense": lambda x, p, a, rng: _dense_b(x[0], p, a),
+    "attention": lambda x, p, a, rng: _attention_b(x, a),
+    "ssd": lambda x, p, a, rng: _ssd_b(x, p, a),
+    "reshape": lambda x, p, a, rng: _reshape_b(x[0], a),
     "flatten": lambda x, p, a, rng: x[0].reshape(x[0].shape[0], -1),
     "relu": lambda x, p, a, rng: jnp.maximum(x[0], 0.0),
     "leaky_relu": lambda x, p, a, rng: jnp.where(
@@ -172,6 +212,7 @@ class QuantNodePlan:
     int8_input: bool = False        # producer already delivered int8
     stride: int = 1
     padding: str = "SAME"
+    per_position: bool = False      # dense over the last axis only (LM)
 
 
 def partition_segments(graph: Graph, assignment: Dict[str, str]
@@ -250,6 +291,9 @@ class ExecutionPlan:
         self.fused_into: Dict[str, str] = {}    # legacy: relu node -> producer
         self.pass_report: Optional[PassReport] = None
         self.arena: Optional[memory_mod.ArenaPlan] = None
+        # static KV-cache arena (LM decode) — attached post-construction
+        # by the LM engine via attach_kv_plan()
+        self.kv_plan: Optional[memory_mod.KVCachePlan] = None
 
         if backend == "accel":
             if quant is None:
@@ -323,7 +367,8 @@ class ExecutionPlan:
                 w_scale=q.w_scale, bias=q.bias, act_scale=s,
                 act=epi[0] if epi else None,
                 requant_scale=node.attrs.get("requant_scale"),
-                int8_input=bool(node.attrs.get("int8_input")))
+                int8_input=bool(node.attrs.get("int8_input")),
+                per_position=bool(node.attrs.get("per_position")))
             if bop == "conv2d":
                 w4 = q.w_q.reshape(self.params[pkey]["w"].shape)
                 self.qplans[name] = QuantNodePlan(
@@ -361,7 +406,8 @@ class ExecutionPlan:
                     padding=node.attrs.get("padding", "SAME"))
             else:
                 self.qplans[name] = QuantNodePlan(
-                    "dense", q.w_q, q.w_scale, q.bias, s, act=act)
+                    "dense", q.w_q, q.w_scale, q.bias, s, act=act,
+                    per_position=bool(node.attrs.get("per_position")))
 
     # -- arena ---------------------------------------------------------------
 
@@ -373,8 +419,12 @@ class ExecutionPlan:
         w_bytes = energy_mod.weight_bytes(self.graph, self.backend,
                                           self._quantized_names(),
                                           self._packed_bytes or None)
-        budget = max(int(hw.onchip_bytes) - w_bytes, 0) \
-            if w_bytes <= hw.onchip_bytes else int(hw.onchip_bytes)
+        # BRAM-resident KV slots shrink the activation budget exactly
+        # like resident weights do
+        kv_bram = self.kv_plan.bram_bytes if self.kv_plan is not None else 0
+        resident = w_bytes + kv_bram
+        budget = max(int(hw.onchip_bytes) - resident, 0) \
+            if resident <= hw.onchip_bytes else int(hw.onchip_bytes)
         act_dtype = {}
         for name, node in self.graph.nodes.items():
             if (node.attrs.get("int8")
@@ -500,6 +550,17 @@ class ExecutionPlan:
                     if node.op == "fused":      # fp32 fused (flex path)
                         vals[name] = _run_fused_f32(node, xs, params)
                         continue
+                    if node.op in ("attention", "ssd"):
+                        # LM kernels take their tuned block shapes from
+                        # the rung's decision set (numerics-neutral)
+                        dec = tuning.get(name) if tuning else None
+                        cfg = dec.config if dec else None
+                        vals[name] = (
+                            _attention_b(xs, node.attrs, cfg)
+                            if node.op == "attention" else
+                            _ssd_b(xs, params.get(name, {}),
+                                   node.attrs, cfg))
+                        continue
                     sub = None
                     if node.op in RANDOM_OPS:
                         nxt = jax.vmap(jax.random.split)(rngs)  # [B, 2, 2]
@@ -548,16 +609,32 @@ class ExecutionPlan:
         # widths, not the assume-int8 graph-only approximation
         if backend is None and self.tuner is not None:
             self._ensure_autotuned(batch_size)
-            return self.tuned_cost_signature(
+            return self._charge_kv(self.tuned_cost_signature(
                 batch_size, self._tuning[batch_size],
-                packed_bytes=self._packed_bytes or None)
+                packed_bytes=self._packed_bytes or None))
         if self.arena is not None and backend is None:
-            return energy_mod.plan_cost_signature(
+            return self._charge_kv(energy_mod.plan_cost_signature(
                 self.graph, self.backend, batch_size, self.arena,
-                quantized=self._quantized_names())
-        return energy_mod.cost_signature(
+                quantized=self._quantized_names()))
+        return self._charge_kv(energy_mod.cost_signature(
             self.graph, backend or self.backend, batch_size,
-            quantized=self._quantized_names())
+            quantized=self._quantized_names()))
+
+    def attach_kv_plan(self, kv_plan: memory_mod.KVCachePlan) -> None:
+        """Charge a static KV-cache arena to this plan: BRAM-resident
+        slots shrink the activation-arena budget exactly like resident
+        weights, and every cost signature reports the packed KV
+        footprint (``kv_resident_bytes``)."""
+        self.kv_plan = kv_plan
+        if self.arena is not None:
+            self.arena = self._plan_arena()
+
+    def _charge_kv(self, sig: energy_mod.CostSignature
+                   ) -> energy_mod.CostSignature:
+        if self.kv_plan is None:
+            return sig
+        return dataclasses.replace(
+            sig, kv_resident_bytes=float(self.kv_plan.total_bytes))
 
     def stage_costs(self, batch_size: int,
                     backend: Optional[str] = None
@@ -652,6 +729,8 @@ class ExecutionPlan:
                 f"  arena: peak {a.bram_peak:,}/{a.bram_budget:,} B BRAM, "
                 f"{a.n_spilled} spill(s), "
                 f"{a.ddr_bytes_per_sample:,} DDR B/sample")
+        if self.kv_plan is not None:
+            lines.append("  " + self.kv_plan.summary())
         return "\n".join(lines)
 
     def as_text(self) -> str:
@@ -682,6 +761,10 @@ class ExecutionPlan:
                         desc = f"rows/blk {cfg.rows_per_block}"
                         if cfg.cout_per_block:
                             desc += f" cout/blk {cfg.cout_per_block}"
+                    elif d.kind == "attention":
+                        desc = f"blocks bq={cfg.bq} bk={cfg.bk}"
+                    elif d.kind == "ssd":
+                        desc = f"chunk {cfg.chunk}"
                     else:
                         desc = f"unroll x{cfg.unroll}"
                     pk = self.packed.get(name)
@@ -727,21 +810,29 @@ def _run_quantized(qp: QuantNodePlan, x: jax.Array,
     wq = w_q if w_q is not None else (
         packed.w_q if packed is not None else qp.w_q)
     if qp.op == "dense":
-        b = x.shape[0]
-        x2 = x.reshape(b, -1)
+        # per_position folds every leading (batch, position) axis into
+        # the matmul M dim — one int8 GEMM for the whole token batch —
+        # and restores the leading axes afterwards
+        lead = x.shape[:-1] if qp.per_position else (x.shape[0],)
+        x2 = (x.reshape(-1, x.shape[-1]) if qp.per_position
+              else x.reshape(x.shape[0], -1))
         x_q = x2 if qp.int8_input else jnp.clip(
             jnp.round(x2 / s), -127, 127).astype(jnp.int8)
-        scales = jnp.full((b,), s, jnp.float32)
+        scales = jnp.full((x2.shape[0],), s, jnp.float32)
         if packed is not None:
-            return kops.int8_matmul(
+            out = kops.int8_matmul(
                 x_q, wq, scales, packed.w_scale, packed.bias,
                 act=qp.act, requant_scale=qp.requant_scale,
                 bm=(config.bm if config and config.bm else 128),
                 bn=packed.bn, bk=packed.bk, prepacked=True,
                 n_out=packed.n)
-        return kops.int8_matmul(
-            x_q, wq, scales, qp.w_scale,
-            qp.bias, act=qp.act, requant_scale=qp.requant_scale)
+        else:
+            out = kops.int8_matmul(
+                x_q, wq, scales, qp.w_scale,
+                qp.bias, act=qp.act, requant_scale=qp.requant_scale)
+        if qp.per_position:
+            out = out.reshape(tuple(lead) + (out.shape[-1],))
+        return out
     x_q = x if qp.int8_input else jnp.clip(
         jnp.round(x / s), -127, 127).astype(jnp.int8)
     if packed is not None:

@@ -28,7 +28,8 @@ NEG_INF = -2.0e38
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-            scale: float, bq: int, bk: int, n_k: int, causal: bool):
+            scale: float, bq: int, bk: int, n_k: int, causal: bool,
+            kv_len: int):
     j = pl.program_id(3)
 
     @pl.when(j == 0)
@@ -40,9 +41,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     i = pl.program_id(2)
     q_start = i * bq
     k_start = j * bk
+    padded_kv = kv_len < n_k * bk           # static: ragged Sk was padded
 
-    # skip blocks strictly above the causal diagonal
+    # skip blocks strictly above the causal diagonal — and blocks that
+    # lie entirely in the ragged-length KV padding
     run = (not causal) or (k_start <= q_start + bq - 1)
+    if padded_kv:
+        run = jnp.logical_and(run, k_start < kv_len)
 
     @pl.when(run)
     def _compute():
@@ -51,10 +56,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         v = v_ref[0, 0].astype(jnp.float32)              # [bk, hd]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        if causal or padded_kv:
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         if causal:
             qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if padded_kv:
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -87,8 +95,17 @@ def flash_attention(
     _, sk, hkv, _ = k.shape
     g = hq // hkv
     bq, bk = min(bq, sq), min(bk, sk)
-    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
-    n_k = sk // bk
+    # ragged sequence lengths: pad up to the block grid. Padded KV columns
+    # are masked to NEG_INF inside the kernel (so they never contribute);
+    # padded query rows compute garbage that is sliced off below.
+    pad_q, pad_k = (-sq) % bq, (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    n_k = sk_p // bk
     scale = hd ** -0.5
 
     qt = q.transpose(0, 2, 1, 3)                         # [B, Hq, Sq, hd]
@@ -97,8 +114,8 @@ def flash_attention(
 
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, bq=bq, bk=bk, n_k=n_k,
-                          causal=causal),
-        grid=(b, hq, sq // bq, n_k),
+                          causal=causal, kv_len=sk),
+        grid=(b, hq, sq_p // bq, n_k),
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b_, h, i, j: (b_, h, i, 0)),
             pl.BlockSpec((1, 1, bk, hd),
@@ -107,7 +124,7 @@ def flash_attention(
                          lambda b_, h, i, j: (b_, h // g, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b_, h, i, j: (b_, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, hd), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -118,4 +135,5 @@ def flash_attention(
                                  "arbitrary")),
         interpret=interpret,
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :sq] if pad_q else out

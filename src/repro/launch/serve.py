@@ -14,8 +14,14 @@ Two modes:
   sliding ``--window-s`` window, ``--burst-j`` allowance, optional
   ``--peak-w`` instantaneous cap) and falls back to the cheaper-power
   backends when the budget refuses the primary.
-* ``lm``: prefill + decode loop for an assigned LM architecture (reduced
-  config on CPU; production configs go through the dry-run/pod path).
+* ``lm``: autoregressive serving. Default (``--lm-compiled``) is the
+  scheduler-native path (DESIGN.md §15): the decoder-block op graph
+  compiles through the same Planned -> Lowered -> Compiled chain as the
+  CNNs, prefill rides the compiled batch ladder, decode batches across
+  in-flight requests at their static int8 KV-cache slots, and tokens
+  stream with per-phase telemetry. ``--lm-legacy`` keeps the raw
+  jit-function loop for an assigned LM architecture (reduced config on
+  CPU; production configs go through the dry-run/pod path).
 
 Usage::
 
@@ -25,6 +31,8 @@ Usage::
         --model logistic_net --backend accel,cpu \
         --power-budget 3 --window-s 1 --clock modeled
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --backend accel --requests 8 --tokens 6 --slots 4
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --lm-legacy \
         --arch tinyllama-1.1b --smoke --tokens 32
 """
 from __future__ import annotations
@@ -184,6 +192,43 @@ def serve_space(args) -> int:
     return 0
 
 
+def serve_lm_compiled(args) -> int:
+    """The scheduler-native LM path (DESIGN.md §15): decoder-block op
+    graph -> PTQ -> compiled prefill ladder + jitted decode rungs over
+    static int8 KV slots -> LMScheduler token streaming."""
+    from repro.core.lm import LMEngine
+    from repro.core.scheduler import LMRequest, LMScheduler
+    from repro.models import lm as lm_model
+
+    backend = args.backend.split(",")[0].strip()
+    cfg = lm_model.DEFAULT_CONFIG
+    graph = lm_model.build_graph(cfg)
+    params = lm_model.init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(graph, params, autotune=args.autotune,
+                    tuning_cache=args.tuning_cache if args.autotune
+                    else None)
+    if backend == "accel":
+        calib = [lm_model.synthetic_input(k, cfg) for k in
+                 jax.random.split(jax.random.PRNGKey(1), 8)]
+        engine.calibrate(calib)
+    lm = LMEngine(engine, backend=backend, n_slots=args.slots,
+                  max_new_tokens=max(args.tokens, 1))
+    print(lm.plan.summary())
+    sched = LMScheduler(lm)
+    rng = np.random.default_rng(7)
+    for rid in range(args.requests):
+        sched.submit(LMRequest(
+            rid=rid,
+            x=rng.normal(size=(cfg.seq_len, cfg.d_model)
+                         ).astype(np.float32) * 0.5,
+            max_new_tokens=max(args.tokens, 1)))
+    comps = sched.run()
+    print(sched.summary())
+    sample = comps[0].tokens[:16] if comps else ()
+    print(f"[lm] sample continuation: {list(sample)}")
+    return 0 if len(comps) == args.requests else 1
+
+
 def serve_lm(args) -> int:
     import dataclasses
     cfg = get_arch(args.arch)
@@ -337,6 +382,19 @@ def main(argv=None) -> int:
                          "path — zero accepted requests lost), saved at "
                          "exit")
     # lm mode
+    ap.add_argument("--lm-compiled", dest="lm_compiled", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="lm mode: serve the decoder-block op graph "
+                         "through the compiled prefill/decode rung "
+                         "ladder with int8 KV-cache slots (DESIGN.md "
+                         "§15); --lm-legacy selects the raw jit loop")
+    ap.add_argument("--lm-legacy", dest="lm_compiled",
+                    action="store_false",
+                    help="lm mode: the pre-§15 raw jit prefill/decode "
+                         "loop over an --arch config")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="lm mode: KV-cache slots (max in-flight "
+                         "decode requests)")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -350,6 +408,8 @@ def main(argv=None) -> int:
         return trace_demo(args)
     if args.mode == "space":
         return serve_space(args)
+    if args.lm_compiled:
+        return serve_lm_compiled(args)
     return serve_lm(args)
 
 

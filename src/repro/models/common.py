@@ -49,7 +49,12 @@ def init_graph_params(g: Graph, key: jax.Array
                                        jnp.float32) * (2.0 / fan_in) ** 0.5,
                 "b": jnp.zeros((cout,), jnp.float32)}
         elif node.op == "dense":
-            fin = int(np.prod(g.nodes[node.inputs[0]].out_shape))
+            in_shape = g.nodes[node.inputs[0]].out_shape
+            # per_position dense projects the LAST axis only (the LM
+            # token-wise QKV/MLP shape) — fan-in is the feature dim, not
+            # the flattened sample
+            fin = (int(in_shape[-1]) if node.attrs.get("per_position")
+                   else int(np.prod(in_shape)))
             fout = node.attrs["features"]
             key, k1 = jax.random.split(key)
             p = {"w": jax.random.normal(k1, (fin, fout), jnp.float32)
@@ -57,4 +62,11 @@ def init_graph_params(g: Graph, key: jax.Array
             if node.attrs.get("bias", True):
                 p["b"] = jnp.zeros((fout,), jnp.float32)
             params[name] = p
+        elif node.op == "ssd":
+            # per-head decay rate A [H], negative so exp(dt*A) < 1 for
+            # dt > 0 (bounded state) — the Mamba-2 initialization range
+            h = int(g.nodes[node.inputs[0]].out_shape[-2])
+            key, k1 = jax.random.split(key)
+            params[name] = {"A": -jax.random.uniform(
+                k1, (h,), jnp.float32, minval=0.5, maxval=1.5)}
     return params

@@ -1,0 +1,120 @@
+"""LM decoder block — the on-board telemetry-summarisation language model.
+
+One hybrid transformer/SSM decoder block over a fixed telemetry window:
+token-wise (``per_position``) dense projections feed a causal GQA
+attention head group and a Mamba-2 SSD scan, with residual adds and a
+vocab head. The block is built from first-class op-graph nodes so it
+compiles through the same Planned -> Lowered -> Compiled chain as the
+CNNs: the inspector partitions it into accel QKV/MLP projections around
+flex ``attention``/``ssd`` segments (DESIGN.md §15).
+
+Shapes are deliberately small (interpret-mode Pallas on the dev host);
+the structure — not the scale — is what the serving path exercises.
+
+Graph contract the LM engine (``core/lm.py``) relies on:
+
+* ``emb``'s only consumers are the q/k/v projections, so the requant
+  pass can chain int8 straight through the QKV block;
+* ``k_heads`` / ``v_heads`` / ``ssm_heads`` / ``b_proj`` / ``dt`` are
+  marked as graph outputs — the prefill KV/state capture points;
+* ``resid2`` (the pre-head hidden state) is an output: decode feeds it
+  back as the next token's input features (continuous feedback — the
+  telemetry LM has no discrete token embedding table);
+* prompts are full fixed-length windows (``seq_len``): the SSD prefill
+  state is the scan's final state, valid only when the prompt fills the
+  window.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opgraph import Graph
+from repro.models.common import batch_synthetic, init_graph_params
+
+
+class LMConfig(NamedTuple):
+    seq_len: int = 32           # fixed prefill window (telemetry frame)
+    d_model: int = 32
+    n_q_heads: int = 4          # GQA: 2 query heads per KV head
+    n_kv_heads: int = 2
+    n_ssm_heads: int = 4
+    head_p: int = 8             # SSD per-head state rows (H*P = d_model)
+    d_state: int = 8            # SSD state cols N
+    vocab: int = 16
+
+
+DEFAULT_CONFIG = LMConfig()
+
+# prefill capture points + serving outputs, in graph-output order
+CAPTURE_OUTPUTS = ("k_heads", "v_heads", "ssm_heads", "b_proj", "dt")
+SERVE_OUTPUTS = ("head", "resid2")
+
+
+def build_graph(cfg: LMConfig = DEFAULT_CONFIG) -> Graph:
+    s, d = cfg.seq_len, cfg.d_model
+    hd = d // cfg.n_q_heads
+    dkv = cfg.n_kv_heads * hd
+    dssm = cfg.n_ssm_heads * cfg.head_p
+    g = Graph("lm_decoder")
+    x = g.input("x", (s, d))
+    # token embedding stand-in: consumers are q/k/v ONLY (requant chain)
+    emb = g.add("dense", [x], name="emb", features=d, per_position=True)
+    q = g.add("dense", [emb], name="q_proj", features=d, per_position=True)
+    k = g.add("dense", [emb], name="k_proj", features=dkv,
+              per_position=True)
+    v = g.add("dense", [emb], name="v_proj", features=dkv,
+              per_position=True)
+    qh = g.add("reshape", [q], name="q_heads",
+               shape=(s, cfg.n_q_heads, hd))
+    kh = g.add("reshape", [k], name="k_heads",
+               shape=(s, cfg.n_kv_heads, hd))
+    vh = g.add("reshape", [v], name="v_heads",
+               shape=(s, cfg.n_kv_heads, hd))
+    att = g.add("attention", [qh, kh, vh], name="attn", causal=True)
+    af = g.add("reshape", [att], name="attn_flat", shape=(s, d))
+    op = g.add("dense", [af], name="out_proj", features=d,
+               per_position=True)
+    ao = g.add("relu", [op], name="attn_out")     # fuses into out_proj
+    r1 = g.add("add", [ao, x], name="resid1")
+    # SSM branch (Mamba-2 SSD): x/B/C/dt projections off the residual
+    xb = g.add("dense", [r1], name="ssm_in", features=dssm,
+               per_position=True)
+    xh = g.add("reshape", [xb], name="ssm_heads",
+               shape=(s, cfg.n_ssm_heads, cfg.head_p))
+    bp = g.add("dense", [r1], name="b_proj", features=cfg.d_state,
+               per_position=True)
+    cp = g.add("dense", [r1], name="c_proj", features=cfg.d_state,
+               per_position=True)
+    dtd = g.add("dense", [r1], name="dt_proj", features=cfg.n_ssm_heads,
+                per_position=True)
+    dts = g.add("sigmoid", [dtd], name="dt")      # fuses into dt_proj
+    ssm = g.add("ssd", [xh, bp, cp, dts], name="ssm")
+    sf = g.add("reshape", [ssm], name="ssm_flat", shape=(s, dssm))
+    dn = g.add("dense", [sf], name="down_proj", features=d,
+               per_position=True)
+    r2 = g.add("add", [dn, r1], name="resid2")
+    g.add("dense", [r2], name="head", features=cfg.vocab,
+          per_position=True)
+    g.mark_output(*SERVE_OUTPUTS, *CAPTURE_OUTPUTS)
+    return g
+
+
+def init_params(key: jax.Array, cfg: LMConfig = DEFAULT_CONFIG
+                ) -> Dict[str, Dict[str, jax.Array]]:
+    return init_graph_params(build_graph(cfg), key)
+
+
+def synthetic_input(key: jax.Array, cfg: LMConfig = DEFAULT_CONFIG
+                    ) -> Dict[str, jax.Array]:
+    """One telemetry window: [S, D] continuous features."""
+    return {"x": 0.5 * jax.random.normal(
+        key, (cfg.seq_len, cfg.d_model), jnp.float32)}
+
+
+def synthetic_batch(key: jax.Array, n: int,
+                    cfg: LMConfig = DEFAULT_CONFIG
+                    ) -> Dict[str, jax.Array]:
+    return batch_synthetic(lambda k: synthetic_input(k, cfg), key, n)

@@ -1,0 +1,278 @@
+"""LM serving fast path (DESIGN.md §15): flash-attention decode
+equivalences, the int8 KV quantizer's f16-underflow regression, and the
+decoder block through the compiled prefill/decode ladder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lm_quant
+from repro.core.engine import Engine
+from repro.core.lm import LMEngine
+from repro.core.plan import CompiledPlan, ExecutionPlan, LoweredPlan
+from repro.core.scheduler import LMRequest, LMScheduler
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.models import lm as lm_model
+
+
+# ---------------------------------------------------------------------------
+# flash attention: ragged lengths + incremental decode equivalence
+# ---------------------------------------------------------------------------
+
+
+def _qkv(rng, s, hq, hkv, hd, b=1):
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,bq,bk", [
+    (100, 64, 64),          # pad both grid axes
+    (72, 32, 64),           # pad K only
+    (65, 64, 64),           # one position past a block boundary
+    (31, 64, 64),           # shorter than one block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_ragged_lengths(s, bq, bk, causal):
+    """Non-multiple-of-block sequence lengths: the kernel pads to the
+    grid and masks the padded K positions; output matches the ref."""
+    rng = np.random.default_rng(s)
+    q, k, v = _qkv(rng, s, 2, 1, 16)
+    got = kops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert got.shape == want.shape == (1, s, 2, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def _single_token_attend(q_t, k_pref, v_pref):
+    """Decode-style attend of one query over its full prefix (no mask:
+    the prefix IS the causal set). q_t [H,hd], k/v [L,Hkv,hd]."""
+    g = q_t.shape[0] // k_pref.shape[1]
+    k_r = jnp.repeat(k_pref, g, axis=1)
+    v_r = jnp.repeat(v_pref, g, axis=1)
+    s = jnp.einsum("hd,lhd->hl", q_t, k_r) * (q_t.shape[-1] ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hl,lhd->hd", p, v_r)
+
+
+@pytest.mark.parametrize("kv_int8", [False, True])
+def test_incremental_decode_matches_full_recompute(kv_int8):
+    """Token-at-a-time decode over a growing prefix equals the last row
+    of a full causal recompute — with and without the int8 KV cache
+    round-trip (both sides must see the SAME dequantized K/V)."""
+    rng = np.random.default_rng(7)
+    s, hq, hkv, hd = 40, 4, 2, 8
+    q, k, v = _qkv(rng, s, hq, hkv, hd)
+    if kv_int8:
+        k = lm_quant.dequantize_kv(*lm_quant.quantize_kv(k), jnp.float32)
+        v = lm_quant.dequantize_kv(*lm_quant.quantize_kv(v), jnp.float32)
+    full = ref.flash_attention_ref(q, k, v, causal=True)
+    for t in (0, 1, 17, s - 1):
+        inc = _single_token_attend(q[0, t], k[0, :t + 1], v[0, :t + 1])
+        np.testing.assert_allclose(np.asarray(inc), np.asarray(full[0, t]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_hypothesis_ragged_flash_matches_ref():
+    hyp = pytest.importorskip("hypothesis",
+                              reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 96), st.sampled_from([1, 2, 4]),
+           st.sampled_from([8, 16]), st.sampled_from([16, 32, 64]),
+           st.booleans(), st.integers(0, 2 ** 31 - 1))
+    def prop(s, hq, hd, blk, causal, seed):
+        rng = np.random.default_rng(seed)
+        hkv = 1 if hq == 1 else hq // 2
+        q, k, v = _qkv(rng, s, hq, hkv, hd)
+        got = kops.flash_attention(q, k, v, causal=causal, bq=blk, bk=blk)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# quantize_kv: the all-zero-tile / f16-underflow regression
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_kv_zero_tile_survives_f16_scale_plane():
+    """Pre-fix, an all-zero tile got scale ~1e-12, which underflows to
+    exactly 0.0 in the f16 scale planes the KV arena stores — and a zero
+    scale turns the inverse into inf/NaN. The fix pins zero tiles to
+    scale 1.0 (lossless for zeros). This test fails on the pre-fix code
+    at the f16 assertions."""
+    x = jnp.zeros((2, 5, 3, 8), jnp.float32)
+    q, s = lm_quant.quantize_kv(x)
+    assert np.array_equal(np.asarray(q), np.zeros_like(q))
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    s16 = np.asarray(s).astype(np.float16)
+    assert (s16 > 0).all()                       # underflow check
+    assert np.isfinite(1.0 / s16).all()          # inverse stays finite
+    back = lm_quant.dequantize_kv(q, jnp.asarray(s16), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), 0.0)
+
+
+def test_quantize_kv_mixed_zero_rows_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 4, 2, 8)), jnp.float32)
+    x = x.at[0, 1].set(0.0).at[0, 3, 0].set(0.0)
+    q, s = lm_quant.quantize_kv(x)
+    assert np.isfinite(np.asarray(s)).all() and (np.asarray(s) > 0).all()
+    back = lm_quant.dequantize_kv(q, s, jnp.float32)
+    # zero rows exact, non-zero rows within one quantization step
+    np.testing.assert_array_equal(np.asarray(back[0, 1]), 0.0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(jnp.max(jnp.abs(x))) / 127 + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the decoder block through the staged chain + serving ladder
+# ---------------------------------------------------------------------------
+
+
+CFG = lm_model.DEFAULT_CONFIG
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    graph = lm_model.build_graph(CFG)
+    params = lm_model.init_params(jax.random.PRNGKey(0), CFG)
+    engine = Engine(graph, params)
+    calib = [lm_model.synthetic_input(k, CFG) for k in
+             jax.random.split(jax.random.PRNGKey(1), 4)]
+    engine.calibrate(calib)
+    return LMEngine(engine, backend="accel", n_slots=3, max_new_tokens=8)
+
+
+def _prompts(n, seed=11):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, CFG.seq_len, CFG.d_model)
+                      ).astype(np.float32) * 0.5
+
+
+def test_decoder_block_compiles_staged_chain(lm_setup):
+    lm = lm_setup
+    planned = lm.engine.planned("accel")
+    assert isinstance(planned, ExecutionPlan)
+    lowered = planned.lower(2)
+    assert isinstance(lowered, LoweredPlan)
+    compiled = lowered.compile()
+    assert isinstance(compiled, CompiledPlan)
+    # partial offload: accel projections around flex attention/ssm
+    backends = [seg.backend for seg in planned.segments]
+    assert "flex" in backends and "accel" in backends
+    assert planned.assignment["attn"] == "flex"
+    assert planned.assignment["ssm"] == "flex"
+    # the pass pipeline annotated the attention node for int8 KV
+    assert "attn" in planned.pass_report.kv_int8_nodes
+    assert planned.graph.nodes["attn"].attrs["kv_int8"] is True
+    # the requant chain runs straight through the QKV projections
+    chained = set()
+    for rq in planned.pass_report.requant_groups:
+        chained.update(rq.consumers)
+    assert {"q_proj", "k_proj", "v_proj"} <= chained
+
+
+def test_kv_plan_charged_to_budget_and_signature(lm_setup):
+    lm = lm_setup
+    sig = lm.plan.cost_signature(2)
+    assert sig.kv_resident_bytes == float(lm.kv_plan.total_bytes) > 0
+    assert "kv[" in lm.plan.summary()
+    # 3 slots + tile-aligned capacity
+    assert lm.kv_plan.n_slots == 3
+    assert lm.kv_plan.capacity % 128 == 0
+    assert lm.kv_plan.capacity >= CFG.seq_len + lm.max_new_tokens
+
+
+def test_prefill_decode_steady_state_counters(lm_setup):
+    lm = lm_setup
+    x = _prompts(2)
+    slots = np.array([lm.assign_slot("a"), lm.assign_slot("b")], np.int32)
+    res = lm.prefill(x, slots)
+    assert res.tokens.shape == (2,) and res.hidden.shape == (2, CFG.d_model)
+    res = lm.decode_step(res.hidden, slots)      # warm the rung
+    traces0, assigns0 = lm.n_traces, lm.slots.n_assigns
+    for _ in range(4):
+        res = lm.decode_step(res.hidden, slots)
+        assert np.isfinite(res.hidden).all()
+        assert (0 <= res.tokens).all() and (res.tokens < CFG.vocab).all()
+    assert lm.n_traces == traces0                # zero re-traces
+    assert lm.slots.n_assigns == assigns0        # zero slot allocations
+    assert lm.release_slot("a") == slots[0]
+    assert lm.release_slot("b") == slots[1]
+
+
+def test_prefill_cache_codes_match_direct_quantize(lm_setup):
+    lm = lm_setup
+    x = _prompts(2, seed=12)
+    slots = np.array([lm.assign_slot("c"), lm.assign_slot("d")], np.int32)
+    lm.prefill(x, slots)
+    outs = lm.engine.run_batch({"x": x}, "accel")
+    codes, scale = lm_quant.quantize_kv(outs["k_heads"])
+    got = np.asarray(lm.caches["attn"]["k_codes"])[slots, :CFG.seq_len]
+    assert np.array_equal(got, np.asarray(codes))
+    got_s = np.asarray(lm.caches["attn"]["k_scale"])[slots, :CFG.seq_len]
+    assert np.array_equal(got_s, np.asarray(scale).astype(np.float16))
+    lm.release_slot("c"), lm.release_slot("d")
+
+
+def test_scheduler_serves_stream_and_releases_slots(lm_setup):
+    lm = lm_setup
+    sched = LMScheduler(lm)
+    for rid in range(5):
+        sched.submit(LMRequest(rid=rid, x=_prompts(1, seed=rid)[0],
+                               max_new_tokens=3))
+    comps = sched.run()
+    assert len(comps) == 5
+    assert sorted(c.rid for c in comps) == list(range(5))
+    assert all(len(c.tokens) == 3 for c in comps)
+    assert lm.slots.in_use == 0                  # all slots released
+    tel = sched.telemetry()
+    assert tel.n_completed == 5 and tel.n_tokens == 15
+    assert tel.n_prefill_dispatches >= 1
+    assert tel.n_decode_dispatches >= 2
+    assert tel.tokens_per_s > 0
+    # token stream: each request streams max_new_tokens events in order
+    per_rid = {}
+    for ev in sched.events:
+        per_rid.setdefault(ev.rid, []).append(ev.index)
+    assert all(idx == list(range(3)) for idx in per_rid.values())
+
+
+def test_scheduler_validates_requests(lm_setup):
+    sched = LMScheduler(lm_setup)
+    with pytest.raises(ValueError, match="prompt window"):
+        sched.submit(LMRequest(rid=0, x=np.zeros((3, 3), np.float32)))
+    with pytest.raises(ValueError, match="decode budget"):
+        sched.submit(LMRequest(rid=1, x=_prompts(1)[0],
+                               max_new_tokens=10 ** 6))
+
+
+def test_lm_engine_requires_fuse():
+    graph = lm_model.build_graph(CFG)
+    params = lm_model.init_params(jax.random.PRNGKey(0), CFG)
+    with pytest.raises(ValueError, match="fuse=True"):
+        LMEngine(Engine(graph, params, fuse=False))
+
+
+def test_lm_autotuner_tunes_attention_and_ssd_blocks():
+    graph = lm_model.build_graph(CFG)
+    params = lm_model.init_params(jax.random.PRNGKey(0), CFG)
+    engine = Engine(graph, params, autotune=True)
+    plan = engine.planned("flex")
+    plan.lower(2)
+    decisions = plan._tuning[2]
+    kinds = {decisions[n].kind for n in ("attn", "ssm")}
+    assert kinds == {"attention", "ssd"}
+    att = decisions["attn"].config
+    assert att.bq > 0 and att.bk > 0
+    assert decisions["ssm"].config.chunk > 0
+    # tuning is numerics-neutral metadata: the tuned text mentions it
+    assert "blocks bq=" in plan.as_text() and "chunk" in plan.as_text()
