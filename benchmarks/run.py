@@ -44,6 +44,10 @@ SECTIONS = {
     "faults": ("benchmarks.faults", False, True,
                "degraded-mode gates: SEU storms detected+recovered, "
                "watchdog reboot zero-loss, inert-controller identity"),
+    "radiation": ("benchmarks.radiation", False, True,
+                  "orbit-aware radiation gates: sampled SAA-pass storm "
+                  "recovered bit-exact, ECC/TMR regime switch, "
+                  "checkpoint-cadence optimum, inert-radiation identity"),
     "table45": ("benchmarks.table45_context", False, False,
                 "Tables IV/V context: device/toolchain comparison"),
     "fig_power": ("benchmarks.fig_power_phases", False, False,

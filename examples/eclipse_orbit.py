@@ -31,6 +31,7 @@ import jax
 
 from repro.core.energy import PowerEnvelope
 from repro.core.engine import Engine
+from repro.core.radiation import ORBIT_PHASES, RadiationEnvironment
 from repro.core.scheduler import (ContinuousBatchingScheduler,
                                   poisson_arrivals)
 from repro.models import SPACE_MODELS, synthetic_requests
@@ -38,13 +39,19 @@ from repro.models import SPACE_MODELS, synthetic_requests
 USE_CASES = ("logistic_net", "multi_esperta")
 BACKENDS = ("accel", "flex", "cpu")     # primary first; envelope fallbacks
 
+# Per-phase power budget (sustained W, peak W). The phase NAMES and
+# DURATIONS come from `core/radiation.py`'s canonical ORBIT_PHASES —
+# one source of truth, so the radiation model's upset-rate modulation
+# and this power envelope stay synced to the same orbit by construction.
+_POWER: dict = {
+    "sunlight": (6.0, float("inf")),
+    "penumbra": (3.0, 7.0),
+    "eclipse": (2.0, 3.0),              # peak 3 W: the 6.75 W DPU is out
+}
+
 # (phase, duration s, sustained W, peak W) — one orbit, virtual seconds.
 PHASES: List[Tuple[str, float, float, float]] = [
-    ("sunlight", 0.15, 6.0, float("inf")),
-    ("penumbra", 0.05, 3.0, 7.0),
-    ("eclipse", 0.15, 2.0, 3.0),        # peak 3 W: the 6.75 W DPU is out
-    ("penumbra", 0.05, 3.0, 7.0),
-    ("sunlight", 0.10, 6.0, float("inf")),
+    (phase, dur, *_POWER[phase]) for phase, dur in ORBIT_PHASES
 ]
 WINDOW_S = 0.01
 
@@ -83,6 +90,12 @@ def main() -> None:
         cap = "-" if peak == float("inf") else f"{peak:.0f} W"
         print(f"  {start:5.2f}-{end:5.2f} s  {phase:9s} "
               f"sustained={sus:.0f} W  peak={cap}")
+    renv = RadiationEnvironment()       # same ORBIT_PHASES by construction
+    saa = renv.saa_window
+    print(f"  radiation: GCR base {renv.base_rate:g} upsets/s "
+          f"(eclipse x{dict(renv.phase_factors)['eclipse']:g}), SAA pass "
+          f"{saa[0]:.2f}-{saa[1]:.2f} s x{renv.saa_factor:g} -> peak "
+          f"{renv.rate_bound():g}/s")
 
     sched = ContinuousBatchingScheduler(envelope=env, clock="modeled")
     trace = []

@@ -362,6 +362,107 @@ def repack_cost(hw: HardwareModel, packed_bytes: int) -> RecoveryCost:
     return RecoveryCost(seconds=t, energy_j=e)
 
 
+# ---------------------------------------------------------------------------
+# Protection pricing: ECC scrub / TMR vote (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+PROTECTION_MODES: Tuple[str, ...] = ("none", "ecc", "tmr")
+
+# SEC-DED ECC on 64-bit words: 8 check bits per 64 data bits.
+ECC_FOOTPRINT_OVERHEAD = 0.125
+# On-the-fly syndrome decode in the weight-fetch path: a pipeline stage
+# on every access, a small constant drag on the whole dispatch.
+ECC_LATENCY_OVERHEAD = 0.02
+# Spatial TMR: three live copies of the packed arena feeding a majority
+# voter. Footprint and busy power triple; the voter adds latency.
+TMR_COPIES = 3
+TMR_VOTE_OVERHEAD = 0.06
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectionCost:
+    """Modeled standing cost of one protection mode on one packed weight
+    arena: the footprint inflation, the per-dispatch latency factor, and
+    (for ECC/TMR) the periodic scrub pass that sweeps the protected
+    bytes over the staging channel to catch error accumulation."""
+    mode: str
+    weight_bytes: int               # unprotected packed footprint
+    protected_bytes: int            # footprint with check bits / copies
+    latency_factor: float           # per-dispatch compute drag (>= 1)
+    power_copies: int               # live compute instances (TMR = 3)
+    scrub_period_s: float
+    scrub_s: float                  # one scrub pass, modeled seconds
+    scrub_energy_j: float           # one scrub pass, modeled joules
+
+    @property
+    def scrub_power_w(self) -> float:
+        """Standing power of the periodic scrubber."""
+        if self.scrub_period_s <= 0.0 or self.scrub_s <= 0.0:
+            return 0.0
+        return self.scrub_energy_j / self.scrub_period_s
+
+
+def protection_cost(hw: HardwareModel, packed_bytes: int, mode: str,
+                    scrub_period_s: float = 0.05) -> ProtectionCost:
+    """Price ``mode`` protection for ``packed_bytes`` of packed weights.
+
+    The scrub pass reads every protected byte back over the staging
+    channel (the memory controller's scrubber shares the PS DMA path),
+    at busy power plus per-byte DDR access energy — the same pricing
+    basis as :func:`repack_cost`, minus the dispatch setup (scrubbing is
+    a background burst, not a fresh dispatch)."""
+    from repro.core.memory import protected_weight_bytes
+    if mode not in PROTECTION_MODES:
+        raise ValueError(f"unknown protection mode {mode!r}; expected one "
+                         f"of {PROTECTION_MODES}")
+    pb = protected_weight_bytes(packed_bytes, mode)
+    if mode == "none" or packed_bytes == 0:
+        return ProtectionCost(mode, packed_bytes, pb, 1.0, 1,
+                              scrub_period_s, 0.0, 0.0)
+    bw = hw.stage_bw or hw.hbm_bw
+    scrub_s = pb / bw
+    scrub_j = hw.power_busy * scrub_s + pb * hw.ddr_pj_per_byte
+    if mode == "ecc":
+        return ProtectionCost(mode, packed_bytes, pb,
+                              1.0 + ECC_LATENCY_OVERHEAD, 1,
+                              scrub_period_s, scrub_s, scrub_j)
+    return ProtectionCost(mode, packed_bytes, pb,
+                          1.0 + TMR_VOTE_OVERHEAD, TMR_COPIES,
+                          scrub_period_s, scrub_s, scrub_j)
+
+
+def protected_signature(sig: "CostSignature", hw: HardwareModel,
+                        prot: ProtectionCost) -> "CostSignature":
+    """Re-price a plan's cost signature under a protection mode: the
+    dispatcher ranks THESE when protection is on, so the ECC decode
+    drag, the TMR power tripling, and any residency flip from the
+    inflated footprint all flow into (backend, rung) selection and the
+    power envelope.
+
+    Residency recheck: check bits / TMR copies count against the same
+    BRAM budget as the data bits. A previously-resident arena whose
+    protected footprint spills streams its protected bytes per sample —
+    the §9 spill rule applied to the inflated footprint."""
+    if prot.mode == "none":
+        return sig
+    latency = sig.latency_s * prot.latency_factor
+    bytes_moved = sig.bytes_moved
+    ddr_j = sig.ddr_energy_j
+    resident = sig.weights_resident and prot.protected_bytes <= hw.onchip_bytes
+    if sig.weights_resident and not resident:
+        extra = float(prot.protected_bytes) * sig.batch
+        bytes_moved += extra
+        latency += extra / hw.hbm_bw
+        ddr_j += extra * hw.ddr_pj_per_byte
+    power = hw.power_busy * prot.power_copies
+    energy = power * latency + ddr_j
+    return dataclasses.replace(
+        sig, latency_s=latency, bytes_moved=bytes_moved,
+        ddr_energy_j=ddr_j, energy_j=energy,
+        j_per_inference=energy / sig.batch, power_w=power,
+        weights_resident=resident, protection=prot.mode)
+
+
 @dataclasses.dataclass(frozen=True)
 class CostSignature:
     """Plan-time cost of ONE dispatched batch of a compiled plan: what the
@@ -393,6 +494,10 @@ class CostSignature:
     # batches, a saturated stream completes one batch per longest stage.
     # 0.0 when the plan was priced without a stage decomposition;
     # latency_s (the serial whole-batch latency) is unchanged either way.
+    protection: str = "none"        # arena protection mode priced into this
+                                    # signature ('none' | 'ecc' | 'tmr' —
+                                    # DESIGN.md §16); 'none' everywhere the
+                                    # radiation layer is off
 
     def row(self) -> str:
         return (f"{self.backend:6s} b={self.batch:<3d} "

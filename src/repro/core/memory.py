@@ -378,3 +378,94 @@ class KVSlotAllocator:
 
     def slot_of(self, request_id) -> int:
         return self._owner[request_id]
+
+
+# ---------------------------------------------------------------------------
+# Protection domains: ECC/TMR footprint + MBU interleaving (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def protected_weight_bytes(packed_bytes: int, mode: str) -> int:
+    """Packed-weight arena footprint under a protection mode: SEC-DED
+    ECC adds 8 check bits per 64 data bits (+12.5%); spatial TMR keeps
+    three live copies (x3). This is the footprint the protected cost
+    signature charges against the BRAM budget."""
+    if packed_bytes < 0:
+        raise ValueError(f"packed_bytes must be >= 0, got {packed_bytes}")
+    if mode == "none":
+        return packed_bytes
+    if mode == "ecc":
+        return (packed_bytes * 9 + 7) // 8      # ceil(x * 9/8)
+    if mode == "tmr":
+        return packed_bytes * 3
+    raise ValueError(f"unknown protection mode {mode!r}; expected "
+                     f"'none' | 'ecc' | 'tmr'")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectionDomainPlan:
+    """How the arena's bytes map onto independent ECC domains.
+
+    An adjacent multi-bit burst (MBU) flips one bit in each of ``span``
+    consecutive bytes. SEC-per-domain ECC corrects at most ONE corrupted
+    byte per domain word, so the layout decides correctability:
+
+    * **interleaved** (the planner's choice): byte i belongs to domain
+      i mod n_domains, so a burst of span <= n_domains lands at most one
+      byte in any domain — correctable by construction.
+    * **contiguous** (the naive layout): domains are consecutive
+      stripes; a burst lands entirely inside one stripe and puts all
+      ``span`` bytes into one domain word — detect-only for span > 1.
+    """
+    total_bytes: int
+    n_domains: int
+    interleaved: bool = True
+
+    def __post_init__(self):
+        if self.total_bytes < 0:
+            raise ValueError("total_bytes must be >= 0")
+        if self.n_domains < 1:
+            raise ValueError("n_domains must be >= 1")
+
+    def domain_of(self, byte: int) -> int:
+        if not (0 <= byte < max(self.total_bytes, 1)):
+            raise ValueError(f"byte {byte} outside arena "
+                             f"[0, {self.total_bytes})")
+        if self.interleaved:
+            return byte % self.n_domains
+        stripe = max(1, -(-self.total_bytes // self.n_domains))
+        return min(byte // stripe, self.n_domains - 1)
+
+    def domains_hit(self, offset: int, span: int) -> Dict[int, int]:
+        """domain -> corrupted-byte count for a burst at ``offset``."""
+        hits: Dict[int, int] = {}
+        for b in range(offset, min(offset + span, self.total_bytes)):
+            d = self.domain_of(b)
+            hits[d] = hits.get(d, 0) + 1
+        return hits
+
+    def worst_hit(self, span: int) -> int:
+        """Max bytes any single domain absorbs from ANY span-byte burst."""
+        span = max(0, min(span, self.total_bytes))
+        if span == 0:
+            return 0
+        if self.interleaved:
+            return -(-span // self.n_domains)        # ceil
+        stripe = max(1, -(-self.total_bytes // self.n_domains))
+        return min(span, stripe)
+
+    def correctable(self, span: int) -> bool:
+        """Can SEC-per-domain ECC correct EVERY possible placement of a
+        span-byte adjacent burst? (<= 1 corrupted byte per domain.)"""
+        return 0 < span and self.worst_hit(span) <= 1
+
+
+def plan_protection_domains(total_bytes: int, n_domains: int = 4,
+                            interleaved: bool = True) -> ProtectionDomainPlan:
+    """Plan the arena's ECC-domain layout. The default is interleaved —
+    the whole point of the layout pass: one MBU burst of span up to
+    ``n_domains`` can only put a single byte in any one domain, keeping
+    it SEC-correctable where the contiguous layout would only detect."""
+    return ProtectionDomainPlan(total_bytes=total_bytes,
+                                n_domains=max(1, n_domains),
+                                interleaved=interleaved)

@@ -302,6 +302,10 @@ class _ModelService:
         # recovery, DESIGN.md §13): dispatch skips them until repaired.
         # Empty set -> dispatch is identical to the unfaulted scheduler.
         self.quarantined: set = set()
+        # arena protection mode applied by the fault controller
+        # (DESIGN.md §16): 'none' until `apply_protection` swaps the
+        # cost signatures for ECC/TMR-priced ones.
+        self.protection: str = "none"
         self._rng = jax.random.PRNGKey(
             int(np.frombuffer(name.encode()[:4].ljust(4, b"\0"),
                               np.uint32)[0]))
@@ -524,6 +528,28 @@ class ContinuousBatchingScheduler:
         due self-tests) and let its pending event times drive the idle
         virtual-clock jumps."""
         self._faults = controller
+
+    def apply_protection(self, model: str, mode: str,
+                         costs: Dict[Tuple[str, int], CostSignature]
+                         ) -> None:
+        """Swap a model's cost signatures for protection-priced ones
+        (DESIGN.md §16): the fault controller re-prices the protected
+        (backend, rung) cells through `energy.protected_signature` and
+        installs them here, so backend ranking, envelope admission, and
+        the modeled clock all see the ECC decode drag / TMR power
+        tripling. Unlisted cells keep their unprotected signatures.
+        Under the modeled clock the affected service estimates are
+        re-seeded — the simulation serves on the protected timeline."""
+        with self._lock:
+            svc = self._svcs[model]
+            for key, sig in costs.items():
+                if key not in svc.costs:
+                    raise KeyError(f"{model!r} has no (backend, rung) "
+                                   f"cell {key}")
+                svc.costs[key] = sig
+                if self.clock == "modeled":
+                    svc.seed_service(key[0], key[1], sig.latency_s)
+            svc.protection = mode
 
     # -- submission ---------------------------------------------------------
 

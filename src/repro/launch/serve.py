@@ -48,6 +48,7 @@ import os
 
 from repro.configs import get_arch, reduced
 from repro.core import faults as faults_mod
+from repro.core import radiation as radiation_mod
 from repro.core.energy import PowerEnvelope
 from repro.core.engine import Engine
 from repro.core.scheduler import (BACKENDS, ContinuousBatchingScheduler,
@@ -110,7 +111,18 @@ def serve_space(args) -> int:
     if args.pipeline:
         print(f"[pipeline] async ticket dispatch on, "
               f"{args.staging_buffers} staging buffer(s) per (model, rung)")
-    fault_mode = args.fault_rate > 0.0 or args.self_test_period is not None
+    rad_mode = args.radiation != "off"
+    rad_flags = (args.base_upset_rate is not None
+                 or args.saa_factor is not None
+                 or args.protection != "none"
+                 or args.checkpoint_cadence is not None)
+    if rad_flags and not rad_mode:
+        raise SystemExit("--base-upset-rate/--saa-factor/--protection/"
+                         "--checkpoint-cadence configure the orbital "
+                         "radiation model; pass --radiation orbit to "
+                         "enable it")
+    fault_mode = (args.fault_rate > 0.0 or args.self_test_period is not None
+                  or rad_mode)
     if fault_mode and "accel" not in backends:
         raise SystemExit("--fault-rate/--self-test-period model SEUs in "
                          "the accel weight arenas; include 'accel' in "
@@ -151,16 +163,44 @@ def serve_space(args) -> int:
     controller = None
     if fault_mode:
         horizon = max((t for t, _, _ in trace), default=0.0) + 1.0
+        upsets: tuple = ()
+        self_test = args.self_test_period
+        if rad_mode:
+            renv = radiation_mod.RadiationEnvironment(
+                base_rate=(2.0 if args.base_upset_rate is None
+                           else args.base_upset_rate),
+                saa_factor=(40.0 if args.saa_factor is None
+                            else args.saa_factor))
+            upsets = renv.sample_upsets(args.fault_seed, horizon)
+            if self_test is None:
+                self_test = 0.05        # canary detection for 'none' mode
+            print(f"[radiation] orbit model: base={renv.base_rate:g}/s  "
+                  f"SAA x{renv.saa_factor:g} over "
+                  f"{renv.saa_window[0]:.2f}-{renv.saa_window[1]:.2f} s  "
+                  f"-> {len(upsets)} upset(s) sampled over {horizon:.2f} s"
+                  f"  protection={args.protection}")
+            if args.checkpoint_cadence is not None:
+                # price one ledger checkpoint at the modeled save cost (a
+                # state_dict .npz is small; dominated by the host write)
+                plan = radiation_mod.optimize_cadence(
+                    renv, horizon_s=horizon, checkpoint_cost_s=1e-3)
+                print(f"[radiation] checkpoint cadence: T*="
+                      f"{plan.cadence_s*1e3:.2f} ms "
+                      f"({plan.n_checkpoints} checkpoints, expected "
+                      f"replay+overhead {plan.expected_cost_s*1e3:.2f} ms "
+                      f"over the horizon)")
         controller = faults_mod.FaultController(faults_mod.FaultConfig(
             seed=args.fault_seed, fault_rate=args.fault_rate,
-            horizon_s=horizon, self_test_period=args.self_test_period,
-            recovery=args.recovery))
+            horizon_s=horizon if args.fault_rate > 0 else 0.0,
+            self_test_period=self_test,
+            recovery=args.recovery, upsets=upsets,
+            protection=args.protection))
         sched.attach_faults(controller)
         for name in names:
             controller.arm(sched, name, canaries[name])
         print(f"[faults] armed {len(names)} model(s): rate="
               f"{args.fault_rate}/s  self-test period="
-              f"{args.self_test_period} s  recovery={args.recovery}")
+              f"{self_test} s  recovery={args.recovery}")
 
     if args.checkpoint and os.path.exists(args.checkpoint):
         # the watchdog-reboot path: a fresh process re-registers the same
@@ -376,6 +416,30 @@ def main(argv=None) -> int:
                          "pristine host weights, or quarantine the "
                          "primary backend (dispatch falls back) until a "
                          "delayed repair")
+    # orbit-aware radiation environment (space mode; §16)
+    ap.add_argument("--radiation", default="off", choices=["off", "orbit"],
+                    help="orbit-aware upset model (DESIGN.md §16): sample "
+                         "a typed single/MBU/control upset schedule from "
+                         "the eclipse-phase + SAA rate trace (seeded by "
+                         "--fault-seed) instead of / on top of the flat "
+                         "--fault-rate Poisson storm")
+    ap.add_argument("--base-upset-rate", type=float, default=None,
+                    metavar="R",
+                    help="GCR background upset rate in upsets per virtual "
+                         "second (default 2.0)")
+    ap.add_argument("--saa-factor", type=float, default=None, metavar="X",
+                    help="South Atlantic Anomaly rate multiplier over the "
+                         "orbit-relative SAA window (default 40)")
+    ap.add_argument("--protection", default="none",
+                    choices=["none", "ecc", "tmr"],
+                    help="arena protection mode: canary-only detection, "
+                         "SEC ECC per byte-interleaved domain (+12.5%% "
+                         "footprint + scrub), or TMR (3x footprint, "
+                         "upsets voted away)")
+    ap.add_argument("--checkpoint-cadence", default=None, metavar="auto",
+                    help="print the expected-replay-loss-optimal ledger "
+                         "checkpoint cadence for the radiation "
+                         "environment (pass 'auto')")
     ap.add_argument("--checkpoint", default=None, metavar="PATH",
                     help="scheduler-ledger checkpoint (.npz): restored "
                          "at startup if present (the watchdog-reboot "

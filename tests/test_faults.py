@@ -280,6 +280,23 @@ def test_fault_config_validation_and_schedule():
         [0.1, 0.3]
 
 
+def test_half_specified_poisson_storm_names_missing_field():
+    """A rate without a horizon (or vice versa) used to yield a silently
+    empty schedule; now the error names the field that is missing."""
+    with pytest.raises(ValueError, match="horizon_s"):
+        faults.FaultConfig(fault_rate=5.0)
+    with pytest.raises(ValueError, match="fault_rate"):
+        faults.FaultConfig(horizon_s=1.0)
+    # the inert default and every fully-specified shape stay valid
+    assert faults.FaultConfig().upset_schedule() == []
+    assert faults.FaultConfig(fault_rate=5.0, horizon_s=1.0).schedule()
+    # an explicit schedule (times or typed upsets) needs no rate/horizon
+    assert faults.FaultConfig(fault_times=(0.1,), horizon_s=1.0)
+    from repro.core.radiation import UpsetEvent
+    cfg = faults.FaultConfig(upsets=(UpsetEvent(0.2), UpsetEvent(0.1)))
+    assert [ev.t for ev in cfg.upset_schedule()] == [0.1, 0.2]
+
+
 def test_repack_cost_pricing():
     hw = energy.BACKEND_HW["accel"]
     small = energy.repack_cost(hw, 1024)
@@ -357,6 +374,91 @@ def test_stop_at_absorbs_exactly_the_elapsed_arrivals(engines):
     assert n_absorbed == len(due), (
         "arrivals at or before the returned stop time must be queued, "
         "dispatched, or completed — never dropped")
+
+
+def test_drift_report_window_semantics(engines):
+    """Windowed drift cells with zero retired dispatches are None —
+    never nan/inf (the 0/0 that used to leak out of an empty window)."""
+    sched, trace = _sched(engines)
+    ctl = _controller(sched, engines, seed=0)
+    end = sched.serve_trace(trace)
+
+    # a window ending long after the last dispatch retired: every cell
+    # is empty, every ratio is None, nothing is nan/inf
+    empty = ctl.drift_report(sched, window_s=1e-6, now=end + 100.0)
+    assert empty[MODEL]
+    assert all(r is None for r in empty[MODEL].values())
+
+    # a window covering the whole run: dispatched cells carry finite
+    # ratios (exactly 1.0 under the modeled clock), the rest are None
+    full = ctl.drift_report(sched, window_s=end + 1.0, now=end)
+    used = {(d.backend, d.rung) for d in sched.dispatches
+            if d.model == MODEL and not d.failed}
+    for cell, r in full[MODEL].items():
+        b, rung = cell.split("/b")
+        if (b, int(rung)) in used:
+            assert r == pytest.approx(1.0)
+        else:
+            assert r is None
+        assert r is None or np.isfinite(r)
+
+    # the un-windowed EWMA path never emits nan/inf either
+    for ratios in ctl.drift_report(sched).values():
+        assert all(r is None or np.isfinite(r) for r in ratios.values())
+
+
+def test_midstorm_checkpoint_roundtrip_is_dispatch_identical(engines,
+                                                             tmp_path):
+    """Watchdog reboot in the MIDDLE of a fault storm: checkpointing
+    {scheduler, controller} state and restoring both into a fresh
+    process resumes the timeline dispatch-for-dispatch identically to
+    the uninterrupted run — zero requests lost or duplicated, and the
+    post-cut upsets replay bit-exact from the restored injector RNG."""
+    from repro.core.radiation import UpsetEvent
+    storm = dict(seed=0, self_test_period=0.01,
+                 upsets=(UpsetEvent(0.005), UpsetEvent(0.008, "mbu", 3),
+                         UpsetEvent(0.038), UpsetEvent(0.045, "mbu", 2)))
+
+    full, trace = _sched(engines)
+    ctl_full = _controller(full, engines, **storm)
+    full.serve_trace(trace)
+
+    first, _ = _sched(engines)
+    ctl_first = _controller(first, engines, **storm)
+    cut = first.serve_trace(trace, stop_at=0.03)   # pre-cut storm done,
+    assert all(e.recovered_at is not None          # post-cut still pending
+               for e in ctl_first.events)
+    assert ctl_first._pending
+    path = str(tmp_path / "midstorm.npz")
+    faults.save_checkpoint(path, {"sched": first.state_dict(),
+                                  "faults": ctl_first.state_dict()})
+
+    second, _ = _sched(engines)                    # fresh arm = reboot
+    ctl_second = _controller(second, engines, **storm)
+    ck = faults.load_checkpoint(path)
+    second.load_state_dict(ck["sched"])
+    ctl_second.load_state_dict(ck["faults"])
+    second.serve_trace([e for e in trace if e[0] > cut + 1e-12],
+                       start=cut)
+
+    rep = ctl_second.report()
+    assert rep["n_injected"] == 4
+    assert rep["n_detected"] == 4 and rep["n_recovered"] == 4
+    assert sorted(c.rid for c in second.completions) == \
+        list(range(len(trace)))                    # zero loss, zero dup
+    assert second.dispatches == full.dispatches
+    meta = [(c.rid, c.model, c.kept, c.arrival, c.finished, c.rung,
+             c.n_real) for c in second.completions]
+    assert meta == [(c.rid, c.model, c.kept, c.arrival, c.finished,
+                     c.rung, c.n_real) for c in full.completions]
+    # the two storms' ledgers agree event-for-event
+    assert [dataclasses_asdict_stable(e) for e in ctl_second.events] == \
+        [dataclasses_asdict_stable(e) for e in ctl_full.events]
+
+
+def dataclasses_asdict_stable(ev):
+    import dataclasses as _dc
+    return _dc.asdict(ev)
 
 
 def test_watchdog_reboot_loses_nothing(engines, tmp_path):
